@@ -1,0 +1,175 @@
+"""Benchmark harness — one benchmark per paper table/claim.
+
+The paper (Träff 2024) is an algorithms paper: its quantitative content is
+Theorem 1/2 (round/volume optimality), Corollaries 1-3 (α-β-γ cost model)
+and the Corollary-2 schedule family.  Benchmarks:
+
+  rounds       exact round/block/⊕ counts vs theory (Theorem 1/2)
+  cost_model   predicted T(m,p) per algorithm/schedule (Corollary 1/3),
+               including the beyond-paper torus hop refinement
+  collectives  wall-clock of the shard_map collectives on 8 simulated
+               devices (subprocess; structure demo, not TPU perf)
+  kernels      Pallas interpret-mode vs jnp-ref timing + allclose
+  roofline     re-emit the dry-run roofline table (reads reports/dryrun)
+
+Output: ``name,us_per_call,derived`` CSV rows.
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only rounds,kernels]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.3f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+def bench_rounds():
+    from repro.core import simulator as sim
+    from repro.core.schedule import ceil_log2
+
+    for p in [2, 3, 7, 8, 22, 31, 64, 100, 255, 256, 257, 1000]:
+        inputs = [[np.ones(1, np.float64) for _ in range(p)]
+                  for _ in range(p)]
+        t0 = time.perf_counter()
+        _, st = sim.simulate_reduce_scatter(inputs)
+        us = (time.perf_counter() - t0) * 1e6
+        st.assert_theorem1(p)
+        emit(f"rounds/reduce_scatter_p{p}", us,
+             f"rounds={st.rounds};blocks={st.blocks_sent[0]};"
+             f"theory_rounds={ceil_log2(p)};theory_blocks={p - 1}")
+    for p in [8, 22, 64, 257]:
+        inputs = [[np.ones(1, np.float64) for _ in range(p)]
+                  for _ in range(p)]
+        t0 = time.perf_counter()
+        _, st = sim.simulate_allreduce(inputs)
+        us = (time.perf_counter() - t0) * 1e6
+        st.assert_theorem2(p)
+        emit(f"rounds/allreduce_p{p}", us,
+             f"rounds={st.rounds};blocks={st.blocks_sent[0]};"
+             f"theory_rounds={2 * ceil_log2(p)};theory_blocks={2 * (p - 1)}")
+
+
+# ---------------------------------------------------------------------------
+def bench_cost_model():
+    from repro.core import cost_model as cm
+
+    model = cm.CommModel.tpu_v5e()
+    for p in [16, 64, 256, 1024]:
+        for m in [4096, 1 << 20, 1 << 28]:
+            rows = {
+                "circulant": cm.t_allreduce(m, p, model),
+                "circulant_torus": cm.t_allreduce(m, p, model, torus=True),
+                "ring": cm.t_ring_allreduce(m, p, model),
+                "reduce_bcast": cm.t_bcast_reduce_allreduce(m, p, model),
+            }
+            best = min(rows, key=rows.get)
+            for name, t in rows.items():
+                emit(f"cost_model/allreduce_p{p}_m{m}/{name}", t * 1e6,
+                     f"best={best}")
+        x = cm.crossover_m(p, model)
+        emit(f"cost_model/torus_crossover_p{p}", 0.0,
+             f"ring_beats_circulant_above_m={x:.3g}")
+
+
+# ---------------------------------------------------------------------------
+def bench_collectives():
+    here = os.path.dirname(os.path.abspath(__file__))
+    worker = os.path.join(here, "_collective_worker.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, worker], capture_output=True,
+                          text=True, timeout=900, env=env)
+    if proc.returncode != 0:
+        emit("collectives/ERROR", 0.0, proc.stderr[-200:].replace("\n", " "))
+        return
+    print(proc.stdout, end="")
+
+
+# ---------------------------------------------------------------------------
+def bench_kernels():
+    import jax.numpy as jnp
+    from repro.kernels import fused_block_reduce, quantize_blocks
+    from repro.kernels import ref as R
+
+    rng = np.random.default_rng(0)
+    for shape in [(256, 512), (1024, 2048)]:
+        a = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        b = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        fused_block_reduce(a, b).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = fused_block_reduce(a, b)
+        out.block_until_ready()
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        ref = R.block_reduce_ref(a, b)
+        ok = bool(jnp.allclose(out, ref))
+        emit(f"kernels/block_reduce_{shape[0]}x{shape[1]}", us,
+             f"allclose={ok};interpret=True")
+    x = jnp.asarray(rng.standard_normal((16, 4096)), jnp.float32)
+    t0 = time.perf_counter()
+    payload = quantize_blocks(x, group=512)
+    comp = payload["codes"].size + payload["scales"].size * 4
+    us = (time.perf_counter() - t0) * 1e6
+    emit("kernels/quantize_16x4096", us,
+         f"compression={x.size * 4 / comp:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+def bench_roofline():
+    d = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "reports", "dryrun")
+    if not os.path.isdir(d):
+        emit("roofline/NO_REPORTS", 0.0, "run repro.launch.dryrun first")
+        return
+    for fn in sorted(os.listdir(d)):
+        if not fn.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(d, fn)))
+        if r.get("status") != "OK":
+            emit(f"roofline/{fn[:-5]}", 0.0, r.get("status", "?")[:60])
+            continue
+        rl = r["roofline"]
+        t_star = max(rl["t_compute_s"], rl["t_memory_s"],
+                     rl["t_collective_s"])
+        # 2pod records are compiled with --no-correction (mesh-pass only):
+        # their collective term misses loop-resident collectives.
+        note = (";collective_uncorrected"
+                if not r.get("corr_multiplier") and "_2pod" in fn else "")
+        emit(f"roofline/{fn[:-5]}", t_star * 1e6,
+             f"bottleneck={rl['bottleneck']};"
+             f"frac={rl['roofline_fraction']:.4f};"
+             f"c={rl['t_compute_s']:.4f};m={rl['t_memory_s']:.4f};"
+             f"x={rl['t_collective_s']:.4f}{note}")
+
+
+BENCHES = {
+    "rounds": bench_rounds,
+    "cost_model": bench_cost_model,
+    "collectives": bench_collectives,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Serve a (reduced) MoE model with batched requests — exercises the MoE
+dispatch path, KV caches, and temperature sampling.
+
+    PYTHONPATH=src python examples/serve_moe.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    serve_mod.main(["--arch", "phi3.5-moe-42b-a6.6b", "--scale-down",
+                    "--batch", "4", "--prompt-len", "16", "--max-new", "12",
+                    "--temperature", "0.8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .manager import CheckpointManager, config_fingerprint, reshard_flat  # noqa: F401

@@ -1,0 +1,32 @@
+"""Architecture configs (assigned pool).  get_config(name) -> ModelConfig."""
+import importlib
+
+ARCHS = [
+    "grok_1_314b", "phi35_moe_42b", "xlstm_125m", "internlm2_1_8b",
+    "qwen3_4b", "qwen15_110b", "qwen3_1_7b", "whisper_small",
+    "llama32_vision_90b", "hymba_1_5b",
+]
+
+# CLI ids (match the assignment table) -> module names
+ALIASES = {
+    "grok-1-314b": "grok_1_314b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "xlstm-125m": "xlstm_125m",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "qwen3-4b": "qwen3_4b",
+    "qwen1.5-110b": "qwen15_110b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "whisper-small": "whisper_small",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+
+def get_config(name: str):
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ALIASES}

@@ -1,0 +1,10 @@
+"""phi-3.5-MoE 42B (6.6B active)  [hf:microsoft/Phi-3.5-MoE-instruct; hf]
+32L d_model=4096 32H (GQA kv=8) d_ff=6400 vocab=32064, MoE 16 experts top-2."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=6400, vocab_size=32064,
+    n_experts=16, experts_per_token=2,
+)

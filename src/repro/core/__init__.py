@@ -1,0 +1,30 @@
+"""Core implementation of Träff 2024: optimal, non-pipelined reduce-scatter
+and allreduce on circulant graphs, plus schedules, simulator, cost model and
+the JAX shard_map collectives."""
+from .schedule import (  # noqa: F401
+    allgather_plan,
+    ceil_log2,
+    decompose,
+    fully_connected_skips,
+    get_skips,
+    halving_skips,
+    is_valid_schedule,
+    max_block_run,
+    power2_skips,
+    reduce_scatter_plan,
+    reduction_tree,
+    sqrt_skips,
+    total_blocks,
+    two_level_skips,
+    RoundPlan,
+)
+from .cost_model import (  # noqa: F401
+    CommModel,
+    t_allgather,
+    t_allreduce,
+    t_corollary1,
+    t_corollary3_bound,
+    t_reduce_scatter,
+    t_ring_allreduce,
+    t_ring_reduce_scatter,
+)

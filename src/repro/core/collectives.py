@@ -1,0 +1,373 @@
+"""Träff's circulant-graph collectives as JAX shard_map primitives.
+
+Every communication round of Algorithm 1/2 lowers to exactly one
+``lax.ppermute`` (XLA ``collective-permute``) over a *static* slice of the
+rotated block buffer — the TPU ICI executes a collective-permute as a
+full-duplex send∥recv, which is precisely the paper's one-ported
+bidirectional communication model.  The skip schedule is computed at trace
+time (``p`` is static under SPMD), so the lowered HLO contains
+``ceil(log2 p)`` collective-permutes for reduce-scatter and
+``2*ceil(log2 p)`` for allreduce — Theorem 1/2 made visible in the IR
+(asserted by tests and consumed by the roofline analysis).
+
+All functions MUST be called inside a ``shard_map`` (or ``shard_map``-like)
+context that binds ``axis_name``.  Baselines implemented alongside:
+
+* ``ring_reduce_scatter`` / ``ring_allreduce`` — p-1 rounds, 1 ICI hop per
+  round (bandwidth-optimal on a torus; the paper's [10,11,15] family).
+* ``recursive_halving_reduce_scatter`` — power-of-two butterfly.
+* ``xla_*`` — XLA's built-in psum / psum_scatter / all_gather for A/B tests.
+
+Payload hooks (``compress``/``decompress``) implement per-round gradient
+compression (beyond-paper, §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .schedule import (allgather_plan, ceil_log2, reduce_scatter_plan)
+
+Array = jax.Array
+ReduceFn = Callable[[Array, Array], Array]
+
+_REDUCERS: dict[str, ReduceFn] = {
+    "add": lambda a, b: a + b,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+def _resolve_op(op) -> ReduceFn:
+    if callable(op):
+        return op
+    try:
+        return _REDUCERS[op]
+    except KeyError:
+        raise ValueError(f"unknown reduce op {op!r}") from None
+
+
+def _as_blocks(x: Array, p: int) -> Array:
+    """Reshape leading axis into (p, n/p, *rest). Requires divisibility."""
+    n = x.shape[0]
+    if n % p != 0:
+        raise ValueError(
+            f"leading dim {n} not divisible by axis size {p}; pad first "
+            f"(see pad_to_multiple)")
+    return x.reshape(p, n // p, *x.shape[1:])
+
+
+def pad_to_multiple(x: Array, p: int) -> tuple[Array, int]:
+    """Zero-pad the leading axis of ``x`` to a multiple of ``p``."""
+    n = x.shape[0]
+    pad = (-n) % p
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], axis=0)
+    return x, pad
+
+
+def _fwd_perm(p: int, s: int) -> list[tuple[int, int]]:
+    """Data on rank i goes to rank (i + s) mod p  (paper's to-processor)."""
+    return [(i, (i + s) % p) for i in range(p)]
+
+
+def _bwd_perm(p: int, s: int) -> list[tuple[int, int]]:
+    """Data on rank i goes to rank (i - s) mod p  (allgather phase)."""
+    return [(i, (i - s) % p) for i in range(p)]
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — reduce-scatter (partitioned all-reduce)
+# ---------------------------------------------------------------------------
+
+def circulant_reduce_scatter(
+    x: Array,
+    axis_name: str,
+    *,
+    schedule: str = "halving",
+    op: str | ReduceFn = "add",
+    compress: Callable[[Array], Any] | None = None,
+    decompress: Callable[[Any], Array] | None = None,
+) -> Array:
+    """Paper Algorithm 1.  ``x``: per-rank input vector, leading dim n
+    divisible by p.  Returns rank r's reduced block  (n/p, *rest):
+    out_r = op-reduce_i  x_i[r-th block].
+
+    Structure per round k (skips s_1 > ... > s_q from the schedule):
+      send R[s_k : s_{k-1}] to (r + s_k) — one ppermute —
+      fold the received blocks into R[0 : s_{k-1} - s_k].
+    The live buffer shrinks from p blocks to 1; exactly p-1 blocks are
+    sent/received/reduced per rank (Theorem 1).
+    """
+    reduce_fn = _resolve_op(op)
+    p = lax.axis_size(axis_name)
+    if p == 1:
+        return x
+    r = lax.axis_index(axis_name)
+    R = _as_blocks(x, p)
+    # Rotated initial copy: R[i] = V[(r + i) mod p]   (paper: the gamma*m copy)
+    R = jnp.roll(R, -r, axis=0)
+    for pl in reduce_scatter_plan(p, schedule):
+        payload = R[pl.lo:pl.hi]
+        if compress is not None:
+            payload = compress(payload)
+        T = jax.tree.map(
+            lambda leaf: lax.ppermute(leaf, axis_name, _fwd_perm(p, pl.skip)),
+            payload)
+        if decompress is not None:
+            T = decompress(T)
+        nb = pl.nblocks
+        head = reduce_fn(R[:nb], T)
+        R = head if nb == pl.lo else jnp.concatenate([head, R[nb:pl.lo]], axis=0)
+    return R[0]
+
+
+# ---------------------------------------------------------------------------
+# Allgather — Algorithm 2's second phase (reversed skip stack), standalone
+# ---------------------------------------------------------------------------
+
+def circulant_allgather(
+    x: Array,
+    axis_name: str,
+    *,
+    schedule: str = "halving",
+) -> Array:
+    """Gather rank blocks in rank order.  ``x``: rank r's block
+    (blk, *rest); returns (p*blk, *rest) identical on all ranks.
+
+    Replays the reduce-scatter skips in reverse (the paper's stack): with
+    previous bound s' and skip s, send R[0 : s'-s] toward (r - s) and
+    receive into R[s : s'] from (r + s).  The buffer grows from 1 block to
+    p; p-1 blocks communicated per rank.
+    """
+    p = lax.axis_size(axis_name)
+    if p == 1:
+        return x
+    r = lax.axis_index(axis_name)
+    R = x[None]  # (1, blk, *rest) — rotated coords: R[i] = block of (r+i)
+    for pl in allgather_plan(p, schedule):
+        payload = R[:pl.nblocks]
+        T = lax.ppermute(payload, axis_name, _bwd_perm(p, pl.skip))
+        R = jnp.concatenate([R, T], axis=0)
+    out = jnp.roll(R, r, axis=0)  # un-rotate: out[j] = block of rank j
+    return out.reshape(p * x.shape[0], *x.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — allreduce
+# ---------------------------------------------------------------------------
+
+def circulant_allreduce(
+    x: Array,
+    axis_name: str,
+    *,
+    schedule: str = "halving",
+    op: str | ReduceFn = "add",
+    compress: Callable[[Array], Any] | None = None,
+    decompress: Callable[[Any], Array] | None = None,
+) -> Array:
+    """Paper Algorithm 2: reduce-scatter + reversed allgather.
+    2*ceil(log2 p) ppermutes, 2(p-1) blocks moved, p-1 reductions/rank."""
+    w = circulant_reduce_scatter(
+        x, axis_name, schedule=schedule, op=op,
+        compress=compress, decompress=decompress)
+    return circulant_allgather(w, axis_name, schedule=schedule)
+
+
+# ---------------------------------------------------------------------------
+# All-to-all by concatenation (paper §4)
+# ---------------------------------------------------------------------------
+
+def circulant_alltoall(
+    x: Array,
+    axis_name: str,
+    *,
+    schedule: str = "halving",
+) -> Array:
+    """All-to-all in ceil(log2 p) rounds: Algorithm 1 with ⊕ =
+    concatenation.  ``x``: (p, blk, *rest); row j is rank r's payload for
+    rank j.  Returns (p, blk, *rest); row j is rank j's payload for rank r.
+
+    Trace-time bookkeeping keeps, per live slot, the list of (source-offset,
+    array) pairs — the concatenation operator materialized as Python lists
+    of same-shaped arrays, so every round is still a single fused ppermute
+    over a stacked payload.  Volume is (p/2)*ceil(log2 p) blocks per rank
+    (the classic Bruck trade-off: round-optimal, not volume-optimal).
+    """
+    p = lax.axis_size(axis_name)
+    if p == 1:
+        return x
+    r = lax.axis_index(axis_name)
+    rot = jnp.roll(x, -r, axis=0)  # rot[i] = payload for dest (r+i)
+    # slots[i]: list of (offset o, payload) — payload originated at (r+o).
+    slots: list[list[tuple[int, Array]]] = [[(0, rot[i])] for i in range(p)]
+    for pl in reduce_scatter_plan(p, schedule):
+        s = pl.skip
+        # Stack every array sent this round into ONE ppermute payload.
+        send_entries = [e for i in range(pl.lo, pl.hi) for e in slots[i]]
+        stacked = jnp.stack([a for (_, a) in send_entries], axis=0)
+        T = lax.ppermute(stacked, axis_name, _fwd_perm(p, s))
+        # Unstack with shifted source offsets; ⊕ = list concatenation.
+        idx = 0
+        for j in range(pl.nblocks):
+            src_slot = pl.lo + j
+            for (o, _) in slots[src_slot]:
+                slots[j].append((((o - s) % p), T[idx]))
+                idx += 1
+        assert idx == len(send_entries)
+        del slots[pl.lo:]  # slots [lo, hi) were sent; live = [0, s)
+    entries = slots[0]
+    assert len(entries) == p, f"expected {p} payloads, got {len(entries)}"
+    ordered = [a for (_, a) in sorted(entries, key=lambda e: e[0])]
+    stacked = jnp.stack(ordered, axis=0)  # stacked[o] = payload from (r+o)
+    return jnp.roll(stacked, r, axis=0)   # row j = payload from rank j
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def ring_reduce_scatter(x: Array, axis_name: str, *,
+                        op: str | ReduceFn = "add", **_ignored) -> Array:
+    """Classic p-1-round ring reduce-scatter [Patarasuk-Yuan; paper §1].
+    Volume-optimal, 1 ICI hop per round, latency linear in p.
+
+    In rotated coordinates the schedule is static: at step t, send
+    R[p-1-t] to rank r+1, receive the peer's partial for our R[p-2-t]."""
+    reduce_fn = _resolve_op(op)
+    p = lax.axis_size(axis_name)
+    if p == 1:
+        return x
+    r = lax.axis_index(axis_name)
+    R = jnp.roll(_as_blocks(x, p), -r, axis=0)
+    perm = _fwd_perm(p, 1)
+    buf = R[p - 1]
+    for t in range(p - 1):
+        got = lax.ppermute(buf, axis_name, perm)
+        idx = p - 2 - t
+        buf = reduce_fn(R[idx], got)
+    return buf
+
+
+def ring_allreduce(x: Array, axis_name: str, *,
+                   op: str | ReduceFn = "add", **_ignored) -> Array:
+    """Ring RS + ring allgather: 2(p-1) rounds, bandwidth-optimal."""
+    p = lax.axis_size(axis_name)
+    if p == 1:
+        return x
+    r = lax.axis_index(axis_name)
+    w = ring_reduce_scatter(x, axis_name, op=op)
+    # Ring allgather: pass blocks around; rank r starts with block r.
+    blocks = [w]
+    perm = _fwd_perm(p, 1)
+    for t in range(p - 1):
+        blocks.append(lax.ppermute(blocks[-1], axis_name, perm))
+    # blocks[t] on rank r is block (r - t) mod p; assemble in rank order.
+    stacked = jnp.stack(blocks[::-1], axis=0)  # [p-1-t] -> block r - t
+    # stacked[i] = block (r + i - (p-1)) = (r + i + 1) mod p
+    out = jnp.roll(stacked, r + 1, axis=0)
+    return out.reshape(p * w.shape[0], *w.shape[1:])
+
+
+def recursive_halving_reduce_scatter(x: Array, axis_name: str, *,
+                                     op: str | ReduceFn = "add", **_ignored) -> Array:
+    """Hypercube/butterfly reduce-scatter — power-of-two p ONLY (the
+    classic algorithm whose non-pow2 awkwardness motivates the paper)."""
+    reduce_fn = _resolve_op(op)
+    p = lax.axis_size(axis_name)
+    if p == 1:
+        return x
+    if p & (p - 1):
+        raise ValueError(f"recursive halving needs power-of-two p, got {p}")
+    r = lax.axis_index(axis_name)
+    buf = _as_blocks(x, p)  # absolute block coords
+    d = p // 2
+    while d >= 1:
+        lowhalf, highhalf = buf[: buf.shape[0] // 2], buf[buf.shape[0] // 2:]
+        bit = (r // d) % 2  # traced scalar: which half this rank keeps
+        send = jnp.where(bit == 1, lowhalf, highhalf)
+        got = lax.ppermute(send, axis_name,
+                           [(i, i ^ d) for i in range(p)])
+        keep = jnp.where(bit == 1, highhalf, lowhalf)
+        buf = reduce_fn(keep, got)
+        d //= 2
+    return buf[0]
+
+
+def xla_reduce_scatter(x: Array, axis_name: str, **_) -> Array:
+    p = lax.axis_size(axis_name)
+    return lax.psum_scatter(_as_blocks(x, p), axis_name,
+                            scatter_dimension=0, tiled=False)
+
+
+def xla_allreduce(x: Array, axis_name: str, **_) -> Array:
+    return lax.psum(x, axis_name)
+
+
+def xla_allgather(x: Array, axis_name: str, **_) -> Array:
+    return lax.all_gather(x, axis_name, axis=0, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# Dispatchers + multi-axis (hierarchical) wrappers
+# ---------------------------------------------------------------------------
+
+RS_IMPLS = {
+    "circulant": circulant_reduce_scatter,
+    "ring": ring_reduce_scatter,
+    "recursive_halving": recursive_halving_reduce_scatter,
+    "xla": xla_reduce_scatter,
+}
+AR_IMPLS = {
+    "circulant": circulant_allreduce,
+    "ring": ring_allreduce,
+    "xla": xla_allreduce,
+}
+AG_IMPLS = {
+    "circulant": circulant_allgather,
+    "xla": xla_allgather,
+}
+
+
+def reduce_scatter(x, axis_name, impl="circulant", **kw):
+    return RS_IMPLS[impl](x, axis_name, **kw)
+
+
+def allreduce(x, axis_name, impl="circulant", **kw):
+    return AR_IMPLS[impl](x, axis_name, **kw)
+
+
+def allgather(x, axis_name, impl="circulant", **kw):
+    return AG_IMPLS[impl](x, axis_name, **kw)
+
+
+def hierarchical_reduce_scatter(x, axis_names: Sequence[str],
+                                impl="circulant", **kw):
+    """Nested RS over multiple mesh axes (e.g. ('data', 'pod')): RS over the
+    fastest axis first, then the slower axis on the surviving 1/p_0 shard —
+    large skips never cross the slow interconnect with more than m/p_0
+    payload (multilane decomposition; DESIGN §2 assumption 2)."""
+    out = x
+    for ax in axis_names:
+        out = reduce_scatter(out, ax, impl=impl, **kw)
+    return out
+
+
+def hierarchical_allgather(x, axis_names: Sequence[str],
+                           impl="circulant", **kw):
+    """Inverse of hierarchical_reduce_scatter (reverse axis order)."""
+    out = x
+    for ax in reversed(list(axis_names)):
+        out = allgather(out, ax, impl=impl, **kw)
+    return out
+
+
+def hierarchical_allreduce(x, axis_names: Sequence[str],
+                           impl="circulant", **kw):
+    out = hierarchical_reduce_scatter(x, axis_names, impl=impl, **kw)
+    return hierarchical_allgather(out, axis_names, impl=impl, **kw)

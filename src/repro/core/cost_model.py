@@ -1,0 +1,134 @@
+"""Analytic cost models: the paper's α-β-γ model + a TPU ICI torus refinement.
+
+Corollary 1 (uniform blocks, m elements total, p processors):
+    T_rs(m, p) = α·ceil(log2 p) + β·(p-1)/p·m + γ·(p-1)/p·m
+    T_ar(m, p) = 2α·ceil(log2 p) + 2β·(p-1)/p·m + γ·(p-1)/p·m
+
+Corollary 3 (irregular blocks): T <= ceil(log2 p) · (α + β·m + γ·m).
+
+Torus refinement (beyond paper, §Perf): a collective-permute with skip s on
+a p-ring with wraparound traverses hops(s) = min(s, p-s) links; every hop
+occupies a link, so the *bandwidth* term of a round is amplified by
+hops(s).  The paper's model charges β once per element (topology-oblivious
+MPI view); on ICI the per-round charge becomes β·hops(s_k)·m_k.  This is
+the quantitative basis for schedule selection on TPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .schedule import (RoundPlan, allgather_plan, ceil_log2,
+                       reduce_scatter_plan)
+
+
+@dataclass(frozen=True)
+class CommModel:
+    """Homogeneous, linear-affine transmission cost model (paper §2.1).
+
+    alpha: per-round latency [s]
+    beta:  per-element transmission time [s/elem]  (elem = one vector elem)
+    gamma: per-element reduction time [s/elem]
+    """
+    alpha: float
+    beta: float
+    gamma: float
+
+    @staticmethod
+    def tpu_v5e(elem_bytes: int = 2) -> "CommModel":
+        """v5e-flavored constants: ~1us collective-permute launch latency,
+        ~50 GB/s/link ICI, VPU reduce >> link bw so gamma ~ HBM-bound add
+        (2 reads + 1 write per elem @ 819 GB/s)."""
+        return CommModel(alpha=1e-6,
+                         beta=elem_bytes / 50e9,
+                         gamma=3 * elem_bytes / 819e9)
+
+
+def _round_cost(plans: tuple[RoundPlan, ...], block_elems: float,
+                model: CommModel, p: int, *, torus: bool,
+                reduce_on_recv: bool) -> float:
+    t = 0.0
+    for pl in plans:
+        m_k = pl.nblocks * block_elems
+        hops = min(pl.skip, p - pl.skip) if torus else 1
+        t += model.alpha + model.beta * hops * m_k
+        if reduce_on_recv:
+            t += model.gamma * m_k
+    return t
+
+
+def t_reduce_scatter(m: float, p: int, model: CommModel,
+                     schedule: str = "halving", *, torus: bool = False) -> float:
+    """Predicted time of Algorithm 1 on m total elements (uniform blocks)."""
+    if p == 1:
+        return 0.0
+    plans = reduce_scatter_plan(p, schedule)
+    return _round_cost(plans, m / p, model, p, torus=torus, reduce_on_recv=True)
+
+
+def t_allgather(m: float, p: int, model: CommModel,
+                schedule: str = "halving", *, torus: bool = False) -> float:
+    if p == 1:
+        return 0.0
+    plans = allgather_plan(p, schedule)
+    return _round_cost(plans, m / p, model, p, torus=torus, reduce_on_recv=False)
+
+
+def t_allreduce(m: float, p: int, model: CommModel,
+                schedule: str = "halving", *, torus: bool = False) -> float:
+    """Algorithm 2 = Algorithm 1 + reversed allgather (Theorem 2)."""
+    return (t_reduce_scatter(m, p, model, schedule, torus=torus)
+            + t_allgather(m, p, model, schedule, torus=torus))
+
+
+def t_corollary1(m: float, p: int, model: CommModel) -> float:
+    """Closed form of Corollary 1 — must equal t_reduce_scatter(halving)."""
+    if p == 1:
+        return 0.0
+    return (model.alpha * ceil_log2(p)
+            + (model.beta + model.gamma) * (p - 1) / p * m)
+
+
+def t_corollary3_bound(m: float, p: int, model: CommModel) -> float:
+    """Upper bound for arbitrary block-size partitions (Corollary 3)."""
+    if p == 1:
+        return 0.0
+    return ceil_log2(p) * (model.alpha + (model.beta + model.gamma) * m)
+
+
+def t_ring_reduce_scatter(m: float, p: int, model: CommModel) -> float:
+    """Classic p-1-round ring algorithm [Patarasuk-Yuan]: volume optimal,
+    latency linear.  One block of m/p per round, 1 hop."""
+    if p == 1:
+        return 0.0
+    return (p - 1) * (model.alpha + (model.beta + model.gamma) * m / p)
+
+
+def t_ring_allreduce(m: float, p: int, model: CommModel) -> float:
+    if p == 1:
+        return 0.0
+    return (t_ring_reduce_scatter(m, p, model)
+            + (p - 1) * (model.alpha + model.beta * m / p))
+
+
+def t_bcast_reduce_allreduce(m: float, p: int, model: CommModel) -> float:
+    """Naive binomial-tree reduce + broadcast (the detour the paper warns
+    against): 2·ceil(log2 p) rounds but FULL vector each round."""
+    if p == 1:
+        return 0.0
+    return 2 * ceil_log2(p) * (model.alpha + model.beta * m) \
+        + ceil_log2(p) * model.gamma * m
+
+
+def crossover_m(p: int, model: CommModel, lo: float = 1.0,
+                hi: float = 1e12) -> float:
+    """Smallest m where ring allreduce beats circulant allreduce on the
+    TORUS model (hop-amplified).  Bisection; returns hi if never."""
+    if t_allreduce(hi, p, model, torus=True) <= t_ring_allreduce(hi, p, model):
+        return hi
+    for _ in range(200):
+        mid = (lo + hi) / 2
+        if t_allreduce(mid, p, model, torus=True) > t_ring_allreduce(mid, p, model):
+            hi = mid
+        else:
+            lo = mid
+    return hi

@@ -1,0 +1,308 @@
+"""Circulant-graph skip schedules for Träff's reduce-scatter / allreduce.
+
+The paper's Algorithm 1 computes skips by repeated halving with round-up:
+``s_0 = p, s_{k+1} = ceil(s_k / 2)`` until 1 — giving exactly
+``ceil(log2 p)`` communication rounds for ANY p.  Corollary 2 generalises:
+any strictly decreasing sequence ``s_0 > s_1 > ... > s_{q-1} = 1`` works
+provided every ``0 < i < p`` is a sum of DISTINCT skips.
+
+This module is pure Python (trace-time only): schedules are static with
+respect to jit, so every round of the collective lowers to a static-slice
++ collective-permute pair.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Callable, Sequence
+
+
+def ceil_log2(p: int) -> int:
+    """ceil(log2 p) for p >= 1 (0 rounds for p == 1)."""
+    if p < 1:
+        raise ValueError(f"p must be >= 1, got {p}")
+    return (p - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# Skip-sequence constructors (Corollary 2 family)
+# ---------------------------------------------------------------------------
+
+def halving_skips(p: int) -> tuple[int, ...]:
+    """The paper's schedule: repeated halving of p with round-up.
+
+    Returns the per-round skips ``(s_1, s_2, ..., s_q)`` — i.e. the value
+    ``s`` AFTER the halving in each while-iteration of Algorithm 1; the
+    send in round k uses skip ``s_k`` and block range [s_k, s_{k-1}).
+    len == ceil_log2(p).
+    """
+    if p < 1:
+        raise ValueError(f"p must be >= 1, got {p}")
+    skips = []
+    s = p
+    while s > 1:
+        s = (s + 1) // 2
+        skips.append(s)
+    return tuple(skips)
+
+
+def power2_skips(p: int) -> tuple[int, ...]:
+    """Straight power-of-two schedule (Bruck-style, paper §2.1 Examples).
+
+    s_0 = p and s_k = largest power of two < s_{k-1}.  Also ceil(log2 p)
+    rounds, but block runs can be longer than ceil(p/2) (paper §3 remark).
+    """
+    if p < 1:
+        raise ValueError(f"p must be >= 1, got {p}")
+    skips = []
+    s = p
+    while s > 1:
+        nxt = 1 << (s - 1).bit_length() - 1  # largest power of two < s
+        skips.append(nxt)
+        s = nxt
+    return tuple(skips)
+
+
+def fully_connected_skips(p: int) -> tuple[int, ...]:
+    """The folklore p-1-round schedule (paper §2.1 Examples): p-1, ..., 1."""
+    if p < 1:
+        raise ValueError(f"p must be >= 1, got {p}")
+    return tuple(range(p - 1, 0, -1))
+
+
+def sqrt_skips(p: int) -> tuple[int, ...]:
+    """O(sqrt p)-round schedule (paper §2.1 Examples).
+
+    s_k = p - k*ceil(sqrt p) while > ceil(sqrt p), then halving below.
+    """
+    if p < 1:
+        raise ValueError(f"p must be >= 1, got {p}")
+    if p == 1:
+        return ()
+    c = math.isqrt(p - 1) + 1  # ceil(sqrt(p)) for non-squares; >= 1
+    skips: list[int] = []
+    s = p - c
+    while s > c:
+        skips.append(s)
+        s -= c
+    # Finish with the halving scheme starting from the previous value.
+    prev = skips[-1] if skips else p
+    s = prev
+    while s > 1:
+        s = (s + 1) // 2
+        if not skips or s < skips[-1]:
+            skips.append(s)
+    if not skips:
+        skips = [1]
+    if skips[-1] != 1:
+        skips.append(1)
+    return tuple(skips)
+
+
+def two_level_skips(p: int, group: int) -> tuple[int, ...]:
+    """Topology-decomposed schedule for hierarchical networks.
+
+    For a folded super-axis of p = n_groups * group ranks where
+    consecutive `group` ranks are co-located (e.g. one pod), emit the
+    small (intra-group) skips FIRST so that early rounds (which move the
+    most blocks under halving ordering reversal) stay on fast links, then
+    the large inter-group skips.  Sequence: halving skips of `group`
+    (intra), then group * halving skips of n_groups (inter).  Every
+    i < p is representable: i = a + group*b with a < group, b < n_groups,
+    both greedily representable in their own halving systems.
+
+    Returned in DECREASING order as Corollary 2 requires; the decomposition
+    property is what matters, and it holds because the two systems are
+    disjoint scales.
+    """
+    if p % group != 0:
+        raise ValueError(f"group {group} must divide p {p}")
+    ngroups = p // group
+    intra = halving_skips(group)
+    inter = tuple(s * group for s in halving_skips(ngroups))
+    skips = tuple(sorted(set(intra) | set(inter), reverse=True))
+    if p > 1 and (not skips or skips[-1] != 1):
+        raise AssertionError("two_level schedule must end at 1")
+    return skips
+
+
+SCHEDULES: dict[str, Callable[[int], tuple[int, ...]]] = {
+    "halving": halving_skips,
+    "power2": power2_skips,
+    "fully_connected": fully_connected_skips,
+    "sqrt": sqrt_skips,
+}
+
+
+def get_skips(p: int, schedule: str = "halving", *, group: int | None = None
+              ) -> tuple[int, ...]:
+    if schedule == "two_level":
+        if group is None:
+            raise ValueError("two_level schedule needs group=")
+        return two_level_skips(p, group)
+    try:
+        fn = SCHEDULES[schedule]
+    except KeyError:
+        raise ValueError(
+            f"unknown schedule {schedule!r}; have {sorted(SCHEDULES)} + two_level"
+        ) from None
+    return fn(p)
+
+
+# ---------------------------------------------------------------------------
+# Corollary-2 validity and structural properties
+# ---------------------------------------------------------------------------
+
+def decompose(i: int, skips: Sequence[int]) -> tuple[int, ...]:
+    """Greedy decomposition of i as a sum of distinct skips (largest first).
+
+    Raises ValueError if the greedy strategy fails; `is_valid_schedule`
+    falls back to exact subset-sum in that case.
+    """
+    rem = i
+    used = []
+    for s in sorted(skips, reverse=True):
+        if s <= rem:
+            rem -= s
+            used.append(s)
+    if rem != 0:
+        raise ValueError(f"greedy decomposition of {i} failed for skips {skips}")
+    return tuple(used)
+
+
+def _subset_sum_reachable(p: int, skips: Sequence[int]) -> bool:
+    """Exact check: every 0 < i < p is a sum of distinct skips."""
+    reach = 1  # bitmask; bit i set <=> i reachable
+    for s in skips:
+        reach |= reach << s
+    mask = (1 << p) - 1
+    return (reach & mask) == mask
+
+
+def is_valid_schedule(p: int, skips: Sequence[int]) -> bool:
+    """Corollary 2 precondition check.
+
+    Beyond the paper's stated condition (every 0 < i < p is a sum of
+    distinct skips) we also require the *fold-liveness* condition
+    ``s_{k-1} <= 2 * s_k`` (with s_0 = p): in round k the received blocks
+    are partial sums for destination offsets [0, s_{k-1} - s_k) and MUST
+    fold into still-live blocks R[j], j < s_k.  The paper leaves this
+    implicit (all its example schedules satisfy it); without it the
+    algorithm would fold into already-sent blocks and lose contributions.
+    """
+    if p == 1:
+        return len(skips) == 0
+    sk = list(skips)
+    if sorted(sk, reverse=True) != sk or len(set(sk)) != len(sk):
+        return False
+    if sk[-1] != 1:
+        return False
+    prev = p
+    for s in sk:
+        if prev > 2 * s:  # fold-liveness (see docstring)
+            return False
+        prev = s
+    return _subset_sum_reachable(p, sk)
+
+
+@dataclass(frozen=True)
+class RoundPlan:
+    """One communication round of Algorithm 1 (forward direction).
+
+    send block range [lo, hi) to rank (r + skip) mod p;
+    receive same count from (r - skip) mod p; reduce into [0, hi-lo).
+    """
+    skip: int
+    lo: int
+    hi: int
+
+    @property
+    def nblocks(self) -> int:
+        return self.hi - self.lo
+
+
+@lru_cache(maxsize=4096)
+def reduce_scatter_plan(p: int, schedule: str = "halving",
+                        group: int | None = None) -> tuple[RoundPlan, ...]:
+    """Round plans for Algorithm 1 under any Corollary-2 schedule.
+
+    For the halving schedule this reproduces the paper exactly:
+    round k sends R[s_{k+1} .. s_k - 1].  For a general valid schedule
+    with skips s_1 > s_2 > ... > s_q = 1 (we prepend s_0 = p), round k
+    sends R[s_k .. s_{k-1} - 1] to (r + s_k) mod p.
+
+    Total blocks sent = sum (s_{k-1} - s_k) = p - 1.   (Theorem 1)
+    """
+    skips = get_skips(p, schedule, group=group)
+    if p > 1 and not is_valid_schedule(p, skips):
+        raise ValueError(f"schedule {schedule} invalid for p={p}: {skips}")
+    plans = []
+    prev = p
+    for s in skips:
+        plans.append(RoundPlan(skip=s, lo=s, hi=prev))
+        prev = s
+    return tuple(plans)
+
+
+def allgather_plan(p: int, schedule: str = "halving",
+                   group: int | None = None) -> tuple[RoundPlan, ...]:
+    """Reversed skip stack (Algorithm 2's second phase).
+
+    Round with skip s sends R[0 .. s'-s-1] toward (r - s) mod p and
+    receives into R[s .. s'-1] from (r + s) mod p, replaying the RS
+    rounds backwards.
+    """
+    return tuple(reversed(reduce_scatter_plan(p, schedule, group)))
+
+
+def total_blocks(plans: Sequence[RoundPlan]) -> int:
+    return sum(pl.nblocks for pl in plans)
+
+
+def max_block_run(plans: Sequence[RoundPlan]) -> int:
+    """Longest contiguous block sequence sent in any round.
+
+    Paper §3: for the halving scheme this is <= ceil(p/2)."""
+    return max((pl.nblocks for pl in plans), default=0)
+
+
+# ---------------------------------------------------------------------------
+# Spanning-forest tracer (proof-of-invariant instrumentation, §2.1)
+# ---------------------------------------------------------------------------
+
+def reduction_tree(p: int, schedule: str = "halving") -> dict[int, tuple[int, ...]]:
+    """For destination rank r = 0 (wlog), trace which source ranks' partial
+    sums arrive INTO W = R[0] in each round — the paper's worked example
+    (p = 22, rank 21; shift by the rank to compare).
+
+    By SPMD symmetry every rank's buffer covers rank-invariant *offset*
+    sets: shape[i] = set of offsets o such that on rank r, R[i] currently
+    sums V_{(r+o) mod p}.  Initially shape[i] = {0} (each block is the
+    rank's own input).  On receive with skip s, shape[j] |= shape[s+j] - s.
+
+    Returns {round_index: sorted tuple of source ranks (rank-0 view) whose
+    inputs are folded into W in that round}.  Union over rounds + {0} ==
+    all p ranks, each exactly once (Theorem 1's spanning tree).
+
+    NOTE: the paper's displayed p=22 grouping has a small typo — the pair
+    (x_20 + x_9) is shown on the skip-2 line but arrives with the final
+    skip-1 round (sender 19's R[2] holds only 6 sources when sent; there is
+    no skip-path from rank 20 to rank 19).  Our test pins the corrected
+    grouping; totals (1+2+4+6+8 = 21 = p-1) match the paper either way.
+    """
+    plans = reduce_scatter_plan(p, schedule)
+    shape: list[set[int]] = [{0} for _ in range(p)]
+    arrivals: dict[int, tuple[int, ...]] = {}
+    for k, pl in enumerate(plans):
+        s = pl.skip
+        incoming = [{(o - s) % p for o in shape[pl.lo + j]}
+                    for j in range(pl.nblocks)]
+        arrivals[k] = tuple(sorted(incoming[0]))  # T[0] folds into W
+        for j, inc in enumerate(incoming):
+            assert not (shape[j] & inc), "forest subtrees must be disjoint"
+            shape[j] |= inc
+    all_sources = set().union(*[set(v) for v in arrivals.values()]) | {0}
+    assert all_sources == set(range(p)), "spanning tree must cover all ranks"
+    assert sum(len(v) for v in arrivals.values()) == p - 1
+    return arrivals

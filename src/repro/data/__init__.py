@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticPipeline, for_model  # noqa: F401

@@ -1,0 +1,2 @@
+from .watchdog import Watchdog, WatchdogConfig  # noqa: F401
+from .failures import FailureInjector, SimulatedFailure  # noqa: F401

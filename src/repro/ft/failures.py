@@ -1,0 +1,24 @@
+"""Failure injection for restart drills.
+
+``FailureInjector`` raises ``SimulatedFailure`` at a configured step —
+the training loop does NOT catch it (a real SIGKILL wouldn't be catchable
+either); the restart drill re-invokes the trainer, which resumes from the
+last completed checkpoint and must reproduce the uninterrupted loss
+trajectory exactly (tested in tests/test_ft.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FailureInjector:
+    fail_at_step: int | None = None
+
+    def check(self, step: int):
+        if self.fail_at_step is not None and step == self.fail_at_step:
+            raise SimulatedFailure(f"injected failure at step {step}")

@@ -1,0 +1,69 @@
+"""Straggler detection + mitigation policy.
+
+At 1000+ nodes, slow hosts (thermal throttling, failing HBM, network
+degradation) stretch every synchronous collective.  The watchdog keeps an
+EWMA/EWVAR of step wall-times, flags steps beyond ``k`` sigma, and drives a
+policy:
+
+  observe -> {OK, SLOW, STRAGGLER}
+  STRAGGLER streaks >= patience  ->  action callback (checkpoint-and-
+  rebalance on real deployments; here: recorded + tested against synthetic
+  traces).
+
+A complementary knob it can pull on a live system: switch the grad-sync
+schedule (Corollary 2) — e.g. from 'halving' to 'sqrt' — trading more,
+smaller rounds for less per-round payload so a slow link hurts each round
+less; the launcher re-jits with the new schedule at the next checkpoint
+boundary (schedules are trace-time static).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+@dataclass
+class WatchdogConfig:
+    alpha: float = 0.1          # EWMA smoothing
+    sigma_slow: float = 2.0     # flag threshold
+    sigma_straggler: float = 4.0
+    patience: int = 3           # straggler streak before action
+    warmup: int = 5             # steps ignored (compile etc.)
+
+
+@dataclass
+class Watchdog:
+    cfg: WatchdogConfig = field(default_factory=WatchdogConfig)
+    mean: float = 0.0
+    var: float = 0.0
+    count: int = 0
+    streak: int = 0
+    events: list = field(default_factory=list)
+    on_straggler: Callable[[int, float], None] | None = None
+
+    def observe(self, step: int, dt: float) -> str:
+        self.count += 1
+        if self.count <= self.cfg.warmup:
+            self.mean = dt if self.count == 1 else self.mean
+            self.mean += self.cfg.alpha * (dt - self.mean)
+            self.var += self.cfg.alpha * ((dt - self.mean) ** 2 - self.var)
+            return "WARMUP"
+        sd = max(self.var, 1e-12) ** 0.5
+        z = (dt - self.mean) / sd if sd > 0 else 0.0
+        if z > self.cfg.sigma_straggler:
+            status = "STRAGGLER"
+            self.streak += 1
+            self.events.append((step, dt, z))
+            if self.streak >= self.cfg.patience and self.on_straggler:
+                self.on_straggler(step, dt)
+                self.streak = 0
+        elif z > self.cfg.sigma_slow:
+            status = "SLOW"
+            self.streak = 0
+        else:
+            status = "OK"
+            self.streak = 0
+            # only update baseline with healthy steps
+            self.mean += self.cfg.alpha * (dt - self.mean)
+            self.var += self.cfg.alpha * ((dt - self.mean) ** 2 - self.var)
+        return status

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+block_reduce — the per-round ⊕ fold of Algorithm 1 (γ term).
+quantize     — int8 group quantization + fused dequant-add for compressed
+               communication rounds (β term).
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py holds the jitted,
+shape-flexible public wrappers.
+"""
+from .ops import (  # noqa: F401
+    dequant_accumulate,
+    dequantize_blocks,
+    fused_block_reduce,
+    make_compressors,
+    quantize_blocks,
+)

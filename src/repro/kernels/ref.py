@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-30
+
+
+def block_reduce_ref(a: jax.Array, b: jax.Array, *, op: str = "add") -> jax.Array:
+    return {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}[op](a, b)
+
+
+def quantize_ref(x: jax.Array, *, group: int = 512
+                 ) -> tuple[jax.Array, jax.Array]:
+    rows, cols = x.shape
+    g = min(group, cols)
+    xg = x.astype(jnp.float32).reshape(rows, cols // g, g)
+    amax = jnp.max(jnp.abs(xg), axis=2)                    # (rows, cols/g)
+    scale = amax / 127.0 + _EPS
+    q = jnp.clip(jnp.round(xg / scale[..., None]), -127, 127)
+    return q.reshape(rows, cols).astype(jnp.int8), scale
+
+
+def dequant_ref(codes: jax.Array, scales: jax.Array, *, group: int = 512
+                ) -> jax.Array:
+    rows, cols = codes.shape
+    g = min(group, cols)
+    qg = codes.astype(jnp.float32).reshape(rows, cols // g, g)
+    return (qg * scales[..., None]).reshape(rows, cols)
+
+
+def dequant_add_ref(acc, codes, scales, *, group: int = 512):
+    return (acc.astype(jnp.float32)
+            + dequant_ref(codes, scales, group=group)).astype(acc.dtype)

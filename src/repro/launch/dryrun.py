@@ -1,0 +1,431 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "3")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be run as its own process (the two lines above run before ANY other
+import, since jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --shape train_4k --mesh 1pod --out reports/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh 2pod
+
+Per cell it lowers the appropriate step (train_step for train shapes;
+prefill/serve decode_step for inference shapes), compiles for the
+production mesh, prints ``memory_analysis()`` (proof-of-fit) and
+``cost_analysis()`` (FLOPs/bytes for §Roofline), parses collective bytes
+from the post-SPMD HLO, and writes a JSON record consumed by
+EXPERIMENTS.md §Dry-run / §Roofline and the perf loop.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALIASES, get_config
+from repro.launch import mesh as meshlib
+from repro.models import ShardingRecipe, build, make_param_specs
+from repro.optim.adamw import AdamWConfig
+from repro.optim.zero1 import GradSyncConfig
+from repro.roofline import analysis as roofline
+from repro.roofline.analytic import CellSpec, analytic_cell
+from repro.train import build as build_step
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# long-context decode needs sub-quadratic attention: SSM/hybrid only.
+LONG_OK = {"xlstm-125m", "hymba-1.5b"}
+# archs whose params cannot be replicated across data ranks: pure-GSPMD FSDP
+FSDP_ARCHS = {"grok-1-314b", "qwen1.5-110b", "llama-3.2-vision-90b"}
+
+
+def corr_multiplier(cfg) -> float:
+    """Two-point scan-unroll correction: corrected = m(u1) + M*(m(u2)-m(u1)).
+
+    M = trips-1 for a single layer scan; for several scans with EQUAL trip
+    counts (whisper enc+dec) the same formula is exact; for hybrid (hymba)
+    the two SWA scans have near-equal trips and identical bodies, so
+    M = mean(trips_i - 1).  0 = no scan (fully unrolled: xlstm)."""
+    if cfg.family == "ssm_xlstm":
+        return 0.0
+    if cfg.family == "hybrid":
+        from repro.models.transformer import _hybrid_runs
+        scan_trips = [hi - lo for lo, hi, g in _hybrid_runs(cfg)
+                      if not g and hi - lo > 1]
+        if not scan_trips:
+            return 0.0
+        return sum(t - 1 for t in scan_trips) / len(scan_trips)
+    if cfg.family == "vlm":
+        return cfg.n_layers // 5 - 1
+    if cfg.family == "encdec":
+        assert cfg.enc_layers == cfg.n_layers, \
+            "two-point correction needs equal enc/dec trip counts"
+        return cfg.n_layers - 1
+    return cfg.n_layers - 1
+
+
+def skip_reason(arch: str, shape: str) -> str | None:
+    if shape == "long_500k" and arch not in LONG_OK:
+        return "SKIP(full-attention: 500k decode needs sub-quadratic arch)"
+    return None
+
+
+def make_recipe(arch: str, mesh, *, expand_gqa: bool = False
+                ) -> ShardingRecipe:
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    mode = "tp_fsdp" if arch in FSDP_ARCHS else "tp"
+    return ShardingRecipe(data_axes=data_axes, model_axis="model", mode=mode,
+                          tp_size=mesh.shape["model"], expand_gqa=expand_gqa)
+
+
+def input_specs(arch: str, shape: str, mesh, recipe) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type correct, sharded, no device allocation."""
+    cfg = get_config(arch)
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    bspec = meshlib.sanitize_spec(mesh, P(recipe.data_axes), (b,))
+    tok_ns = NamedSharding(mesh, meshlib.sanitize_spec(
+        mesh, P(recipe.data_axes), (b, s)))
+    out = {}
+    if info["kind"] == "train":
+        dec = min(cfg.dec_len, s) if cfg.family == "encdec" else s
+        out["tokens"] = jax.ShapeDtypeStruct((b, dec), jnp.int32,
+                                             sharding=tok_ns)
+        out["targets"] = jax.ShapeDtypeStruct((b, dec), jnp.int32,
+                                              sharding=tok_ns)
+    else:
+        dec = min(cfg.dec_len, s) if cfg.family == "encdec" else s
+        out["tokens"] = jax.ShapeDtypeStruct((b, dec), jnp.int32,
+                                             sharding=tok_ns)
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, meshlib.sanitize_spec(
+                mesh, P(recipe.data_axes, None, None), (b, s, cfg.d_model))))
+    if cfg.family == "vlm":
+        sh = (b, cfg.n_image_tokens, cfg.d_model)
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            sh, jnp.bfloat16,
+            sharding=NamedSharding(mesh, meshlib.sanitize_spec(
+                mesh, P(recipe.data_axes, None, None), sh)))
+    return out
+
+
+def _param_structs(model, mesh, recipe):
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = make_param_specs(shapes, recipe)
+    specs = meshlib.sanitize_specs(mesh, specs, shapes)
+    return meshlib.struct_with_sharding(shapes, meshlib.named(mesh, specs))
+
+
+def _cache_structs(model, params_s, inputs, mesh, recipe, seq, batch):
+    extras = {k: v for k, v in inputs.items() if k not in ("tokens",)}
+    cache_sh, _ = jax.eval_shape(
+        lambda p, t, ex: model.prefill(p, t, seq, **ex),
+        params_s, inputs["tokens"], extras)
+    specs = jax.tree.map(
+        lambda l: meshlib.best_effort_cache_spec(
+            mesh, l.shape, batch, recipe.data_axes, recipe.model_axis),
+        cache_sh)
+    return meshlib.struct_with_sharding(cache_sh, meshlib.named(mesh, specs))
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, *, grad_sync="circulant",
+             schedule="halving", compress=None, remat=True,
+             out_dir="reports/dryrun", tag="", correction=True,
+             expand_gqa=False, rs_dtype="float32",
+             moe_dispatch="global", remat_policy="nothing") -> dict:
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                 "grad_sync": grad_sync, "schedule": schedule,
+                 "compress": compress, "remat": remat, "tag": tag,
+                 "expand_gqa": expand_gqa, "rs_dtype": rs_dtype,
+                 "moe_dispatch": moe_dispatch}
+    reason = skip_reason(arch, shape)
+    if reason:
+        rec["status"] = reason
+        return rec
+    import dataclasses as _dc0
+    cfg = get_config(arch)
+    if moe_dispatch != "global":
+        cfg = _dc0.replace(cfg, moe_dispatch=moe_dispatch)
+    if remat_policy != "nothing":
+        cfg = _dc0.replace(cfg, remat_policy=remat_policy)
+    mesh = meshlib.make_production_mesh(multi_pod=(mesh_name == "2pod"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    recipe = make_recipe(arch, mesh, expand_gqa=expand_gqa)
+    info = SHAPES[shape]
+    training = info["kind"] == "train"
+    mode = "fsdp_auto" if arch in FSDP_ARCHS else "zero1"
+    rec["mode"] = mode if training else "serve"
+
+    def lower_and_compile(cfg_l):
+        """Lower+compile the cell's step for a given (possibly unroll-
+        modified) config.  Returns (compiled, tokens_global)."""
+        with jax.set_mesh(mesh):
+            model = build(cfg_l, recipe=recipe, remat=remat)
+            params_s = _param_structs(model, mesh, recipe)
+            inputs = input_specs(arch, shape, mesh, recipe)
+
+            if training:
+                sync = GradSyncConfig(impl=grad_sync, schedule=schedule,
+                                      compress=compress, rs_dtype=rs_dtype)
+                built = build_step(mode, model, AdamWConfig(), mesh=mesh,
+                                   recipe=recipe, sync=sync, remat=remat)
+                if mode == "zero1":
+                    opt_s = jax.eval_shape(built.init_opt, params_s)
+                    opt_s = meshlib.struct_with_sharding(
+                        opt_s, built.opt_spec(params_s))
+                else:
+                    opt_s = jax.eval_shape(built.init_opt, params_s)
+                    opt_s = meshlib.struct_with_sharding(
+                        opt_s, jax.tree.map(
+                            lambda l: NamedSharding(
+                                mesh, meshlib.sanitize_spec(
+                                    mesh, P(), l.shape)), opt_s))
+                    # m/v shard like params (FSDP)
+                    pspecs = make_param_specs(params_s, recipe)
+                    pspecs = meshlib.sanitize_specs(mesh, pspecs, params_s)
+                    opt_s = opt_s._replace(
+                        m=meshlib.struct_with_sharding(
+                            jax.eval_shape(lambda p: jax.tree.map(
+                                lambda l: jnp.zeros(l.shape, jnp.float32), p),
+                                params_s),
+                            meshlib.named(mesh, pspecs)),
+                        v=meshlib.struct_with_sharding(
+                            jax.eval_shape(lambda p: jax.tree.map(
+                                lambda l: jnp.zeros(l.shape, jnp.float32), p),
+                                params_s),
+                            meshlib.named(mesh, pspecs)))
+                batch_s = dict(inputs)
+                lowered = built.step_fn.lower(params_s, opt_s, batch_s)
+                tokens_global = info["batch"] * (
+                    batch_s["tokens"].shape[1])
+                return lowered, tokens_global
+            elif info["kind"] == "prefill":
+                extras = {k: v for k, v in inputs.items() if k != "tokens"}
+
+                def prefill_fn(p, t, ex):
+                    return model.prefill(p, t, info["seq"], **ex)
+
+                lowered = jax.jit(prefill_fn).lower(
+                    params_s, inputs["tokens"], extras)
+                tokens_global = info["batch"] * inputs["tokens"].shape[1]
+                return lowered, tokens_global
+            else:  # decode
+                prefill_inputs = input_specs(arch, "prefill_32k"
+                                             if shape == "decode_32k"
+                                             else shape, mesh, recipe)
+                # cache sized to this cell's seq
+                cache_inputs = dict(prefill_inputs)
+                b = info["batch"]
+                # rebuild token struct at this cell's batch
+                dec = (min(cfg_l.dec_len, info["seq"])
+                       if cfg_l.family == "encdec" else info["seq"])
+                tok_ns = NamedSharding(mesh, meshlib.sanitize_spec(
+                    mesh, P(recipe.data_axes), (b, dec)))
+                cache_inputs["tokens"] = jax.ShapeDtypeStruct(
+                    (b, dec), jnp.int32, sharding=tok_ns)
+                for k in ("frames",):
+                    if k in cache_inputs:
+                        sh = (b, info["seq"], cfg_l.d_model)
+                        cache_inputs[k] = jax.ShapeDtypeStruct(
+                            sh, jnp.bfloat16,
+                            sharding=NamedSharding(
+                                mesh, meshlib.sanitize_spec(
+                                    mesh, P(recipe.data_axes, None, None),
+                                    sh)))
+                if "image_embeds" in cache_inputs:
+                    sh = (b, cfg_l.n_image_tokens, cfg_l.d_model)
+                    cache_inputs["image_embeds"] = jax.ShapeDtypeStruct(
+                        sh, jnp.bfloat16,
+                        sharding=NamedSharding(
+                            mesh, meshlib.sanitize_spec(
+                                mesh, P(recipe.data_axes, None, None), sh)))
+                cache_s = _cache_structs(model, params_s, cache_inputs, mesh,
+                                         recipe, info["seq"], b)
+                token_s = jax.ShapeDtypeStruct(
+                    (b,), jnp.int32,
+                    sharding=NamedSharding(mesh, meshlib.sanitize_spec(
+                        mesh, P(recipe.data_axes), (b,))))
+                pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+
+                def decode_fn(p, c, t, pos):
+                    return model.decode_step(p, c, t, pos)
+
+                lowered = jax.jit(decode_fn).lower(params_s, cache_s,
+                                                   token_s, pos_s)
+                tokens_global = info["batch"]  # one token per sequence
+                return lowered, tokens_global
+
+    try:
+        import dataclasses as _dc
+        t0 = time.time()
+        lowered1, tokens_global = lower_and_compile(cfg)
+        t_lower = time.time() - t0
+        compiled = lowered1.compile()
+        t_compile = time.time() - t0 - t_lower
+        stats1 = roofline.parse_collectives(compiled.as_text())
+        ca1 = compiled.cost_analysis()
+
+        # Two-point scan-unroll correction for loop-resident collectives
+        # (and HLO flops/bytes diagnostics): metrics(total) =
+        # m(u1) + (trips-1) * (m(u2) - m(u1)).
+        mult = corr_multiplier(cfg) if correction else 0.0
+        if mult > 0:
+            cfg2 = _dc.replace(cfg, scan_unroll=2)
+            lowered2, _ = lower_and_compile(cfg2)
+            compiled2 = lowered2.compile()
+            stats2 = roofline.parse_collectives(compiled2.as_text())
+            ca2 = compiled2.cost_analysis()
+        else:
+            stats2, ca2 = stats1, ca1
+
+        def corr(a, b):
+            # GSPMD may partition the u2 body slightly differently; floor
+            # the extrapolation at the directly measured u1 value so noise
+            # cannot produce negative totals.
+            return max(a, a + mult * (b - a))
+
+        coll_bytes = corr(stats1.total_bytes, stats2.total_bytes)
+        coll_ops = {k: corr(stats1.ops.get(k, 0), stats2.ops.get(k, 0))
+                    for k in set(stats1.ops) | set(stats2.ops)}
+        coll_bytes_by_op = {
+            k: corr(stats1.bytes_by_op.get(k, 0.0),
+                    stats2.bytes_by_op.get(k, 0.0))
+            for k in set(stats1.bytes_by_op) | set(stats2.bytes_by_op)}
+        hlo_flops_corr = corr(float(ca1.get("flops", 0.0)),
+                              float(ca2.get("flops", 0.0)))
+        hlo_bytes_corr = corr(float(ca1.get("bytes accessed", 0.0)),
+                              float(ca2.get("bytes accessed", 0.0)))
+
+        # Analytic compute/memory terms (inner tile loops are invisible to
+        # HLO cost analysis — see roofline/analytic.py docstring).
+        data_axes = tuple(a for a in mesh.shape if a != "model")
+        cell = CellSpec(kind=info["kind"], seq=info["seq"],
+                        batch=info["batch"], n_chips=n_chips,
+                        tp=mesh.shape["model"],
+                        dp_world=int(np.prod([mesh.shape[a]
+                                              for a in data_axes])),
+                        remat=remat)
+        ana = analytic_cell(cfg, cell)
+
+        rl = roofline.Roofline(
+            flops_per_chip=ana["flops_per_chip"],
+            hbm_bytes_per_chip=ana["hbm_bytes_per_chip"],
+            collective_bytes_per_chip=coll_bytes,
+            model_flops_per_chip=roofline.model_flops(
+                cfg, tokens_global / n_chips, training))
+
+        ma = compiled.memory_analysis()
+        rec.update(
+            status="OK",
+            n_chips=n_chips,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            corr_multiplier=mult,
+            memory=dict(
+                argument_bytes=ma.argument_size_in_bytes,
+                output_bytes=ma.output_size_in_bytes,
+                temp_bytes=ma.temp_size_in_bytes,
+                peak_bytes=(ma.argument_size_in_bytes
+                            + ma.temp_size_in_bytes),
+            ),
+            roofline=rl.as_dict(),
+            collective_ops=coll_ops,
+            collective_bytes_by_op=coll_bytes_by_op,
+            hlo_diag=dict(
+                flops_corrected=hlo_flops_corr,
+                bytes_corrected=hlo_bytes_corr,
+                flops_raw=float(ca1.get("flops", 0.0)),
+                bytes_raw=float(ca1.get("bytes accessed", 0.0)),
+            ),
+            tokens_global=tokens_global,
+        )
+        print(f"[{arch} × {shape} × {mesh_name}] OK  "
+              f"compile={t_compile:.0f}s  "
+              f"args={ma.argument_size_in_bytes/2**30:.2f}GiB  "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB  "
+              f"bottleneck={rl.bottleneck}  "
+              f"terms(c/m/x)=({rl.t_compute:.4f},{rl.t_memory:.4f},"
+              f"{rl.t_collective:.4f})s  "
+              f"roofline_frac={rl.roofline_fraction:.3f}")
+    except Exception as e:  # noqa: BLE001 — record the failure, don't die
+        rec["status"] = f"ERROR: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{arch} × {shape} × {mesh_name}] FAILED: {e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ALIASES), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["1pod", "2pod"], default="1pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--grad-sync", default="circulant",
+                    choices=["circulant", "ring", "xla", "allreduce"])
+    ap.add_argument("--schedule", default="halving")
+    ap.add_argument("--compress", default=None, choices=[None, "int8"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--expand-gqa", action="store_true")
+    ap.add_argument("--rs-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--moe-dispatch", default="global",
+                    choices=["global", "rowwise"])
+    ap.add_argument("--remat-policy", default="nothing",
+                    choices=["nothing", "dots"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-correction", action="store_true",
+                    help="skip the second (unroll=2) compile; mesh-pass "
+                         "only (2pod sweeps)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ALIASES:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        suffix = f"_{args.tag}" if args.tag else ""
+        path = os.path.join(
+            args.out, f"{arch}_{shape}_{args.mesh}{suffix}.json")
+        if args.skip_existing and os.path.exists(path):
+            try:
+                if "ERROR" not in json.load(open(path)).get("status", ""):
+                    print(f"skip existing {path}")
+                    continue
+            except Exception:
+                pass
+        rec = run_cell(arch, shape, args.mesh, grad_sync=args.grad_sync,
+                       schedule=args.schedule, compress=args.compress,
+                       remat=not args.no_remat, tag=args.tag,
+                       correction=not args.no_correction,
+                       expand_gqa=args.expand_gqa, rs_dtype=args.rs_dtype,
+                       moe_dispatch=args.moe_dispatch,
+                       remat_policy=args.remat_policy)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"  -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Production mesh construction + sharding-spec sanitation.
+
+The production target is a TPU v5e pod of 256 chips as a (data=16,
+model=16) mesh, and 2 pods = 512 chips as (pod=2, data=16, model=16).
+Importing this module NEVER touches jax device state — meshes are built
+only inside functions (dryrun.py sets the 512-device XLA flag before any
+jax import; tests/benches keep the real 1-device CPU view).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices (dryrun.py sets "
+            f"xla_force_host_platform_device_count=512); have "
+            f"{len(devices)}")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for e in entry:
+            n *= mesh.shape[e]
+        return n
+    return mesh.shape[entry]
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape, *, model_axis: str = "model",
+                  fallback: bool = True) -> P:
+    """Drop sharding on dims the mesh axes don't divide evenly (GSPMD would
+    error); replication is always sound.  If the model axis was dropped
+    (e.g. 8 experts on a 16-way model axis, 12 heads on 16) RELOCATE it to
+    the largest still-unsharded divisible dim — otherwise the leaf (and its
+    optimizer state) silently replicates over the whole model axis, which
+    for MoE expert stacks is a per-chip memory catastrophe."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    entries = entries[:len(shape)]
+    had_model = any(
+        (e == model_axis) or (isinstance(e, tuple) and model_axis in e)
+        for e in entries)
+    out = []
+    for dim, entry in zip(shape, entries):
+        size = _axis_size(mesh, entry)
+        out.append(entry if size > 1 and dim % size == 0 else
+                   (entry if size == 1 else None))
+    has_model = any(
+        (e == model_axis) or (isinstance(e, tuple) and model_axis in e)
+        for e in out)
+    if fallback and had_model and not has_model and model_axis in mesh.shape:
+        msize = mesh.shape[model_axis]
+        cand, best = None, 0
+        for i, (dim, entry) in enumerate(zip(shape, out)):
+            if entry is None and dim % msize == 0 and dim >= msize \
+                    and dim > best:
+                cand, best = i, dim
+        if cand is not None:
+            out[cand] = model_axis
+    return P(*out)
+
+
+def sanitize_specs(mesh: Mesh, specs, shapes, *, model_axis: str = "model"):
+    """Tree version: specs and shapes are matching pytrees (shapes as
+    ShapeDtypeStruct or arrays)."""
+    return jax.tree.map(
+        lambda sp, sh: sanitize_spec(mesh, sp, sh.shape,
+                                     model_axis=model_axis), specs, shapes,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def named(mesh: Mesh, specs):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def struct_with_sharding(shapes, shardings):
+    """ShapeDtypeStructs carrying NamedShardings (dry-run inputs: weak-type
+    correct, shardable, no allocation)."""
+    return jax.tree.map(
+        lambda sh, ns: jax.ShapeDtypeStruct(sh.shape, sh.dtype, sharding=ns),
+        shapes, shardings)
+
+
+def best_effort_cache_spec(mesh: Mesh, shape, global_batch: int,
+                           data_axes, model_axis) -> P:
+    """Generic cache/state sharding: the dim equal to the global batch goes
+    over the data axes; the largest remaining dim divisible by the model
+    axis goes over model."""
+    entries = [None] * len(shape)
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    msize = mesh.shape[model_axis]
+    batch_dim = None
+    for i, d in enumerate(shape):
+        if d == global_batch and d % dsize == 0:
+            batch_dim = i
+            entries[i] = tuple(data_axes)
+            break
+    model_dim, best = None, 0
+    for i, d in enumerate(shape):
+        if i != batch_dim and d % msize == 0 and d > best and d >= msize:
+            model_dim, best = i, d
+    if model_dim is not None:
+        entries[model_dim] = model_axis
+    return P(*entries)

@@ -1,0 +1,66 @@
+"""Serving driver: batched prefill + decode with the ServeEngine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+        --scale-down --batch 4 --prompt-len 16 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ALIASES, get_config
+from repro.models import build
+from repro.serve import ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ALIASES), required=True)
+    ap.add_argument("--scale-down", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.scale_down:
+        cfg = cfg.scaled_down()
+    model = build(cfg, recipe=None, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    extras = {}
+    if cfg.family == "encdec":
+        extras["frames"] = jax.numpy.asarray(rng.standard_normal(
+            (args.batch, args.prompt_len, cfg.d_model)).astype(np.float32))
+    if cfg.family == "vlm":
+        extras["image_embeds"] = jax.numpy.asarray(rng.standard_normal(
+            (args.batch, cfg.n_image_tokens, cfg.d_model)
+        ).astype(np.float32))
+
+    engine = ServeEngine(model=model, params=params,
+                         max_len=args.prompt_len + args.max_new,
+                         temperature=args.temperature)
+    t0 = time.time()
+    out = engine.generate(prompts, args.max_new, extras=extras)
+    dt = time.time() - t0
+    tps = args.batch * args.max_new / dt
+    print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s incl. "
+          f"compile)")
+    for b in range(min(2, args.batch)):
+        print(f"  seq{b}: {out[b][:12].tolist()}")
+    # steady-state decode timing (compiled)
+    t0 = time.time()
+    out2 = engine.generate(prompts, args.max_new, extras=extras)
+    dt2 = time.time() - t0
+    print(f"steady-state: {args.batch * args.max_new / dt2:.1f} tok/s")
+    return out
+
+
+if __name__ == "__main__":
+    main()

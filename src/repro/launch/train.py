@@ -1,0 +1,151 @@
+"""Training driver: config-driven launcher with checkpointing, watchdog and
+restart-safe data cursors.
+
+Runs anywhere: on this CPU container use a small mesh + reduced config
+(examples/quickstart.py does exactly that); on a real pod, point it at the
+production mesh.  All distribution knobs are CLI flags so the launcher is
+the single entry point a cluster scheduler invokes on every host.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --scale-down --steps 50 --mesh 1x1 --mode single
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.checkpoint import CheckpointManager, config_fingerprint
+from repro.configs import ALIASES, get_config
+from repro.data import for_model
+from repro.ft import FailureInjector, Watchdog
+from repro.launch import mesh as meshlib
+from repro.models import ShardingRecipe, build
+from repro.optim.adamw import AdamWConfig
+from repro.optim.zero1 import GradSyncConfig
+from repro.train import build as build_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ALIASES), required=True)
+    ap.add_argument("--scale-down", action="store_true",
+                    help="reduced same-family config (CPU runs)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--mesh", default="1x1",
+                    help="DxM (data x model), e.g. 4x2; 1x1 = single")
+    ap.add_argument("--mode", default=None,
+                    choices=[None, "single", "zero1", "fsdp_auto"])
+    ap.add_argument("--grad-sync", default="circulant",
+                    choices=["circulant", "ring", "xla", "allreduce"])
+    ap.add_argument("--schedule", default="halving")
+    ap.add_argument("--compress", default=None, choices=[None, "int8"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--fail-at-step", type=int, default=None,
+                    help="failure injection (restart drill)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.scale_down:
+        cfg = cfg.scaled_down()
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mode = args.mode or ("single" if d * m == 1 else "zero1")
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=args.warmup,
+                          total_steps=args.steps)
+    pipe = for_model(cfg, seq_len=args.seq_len,
+                     global_batch=args.global_batch)
+
+    mesh = None
+    recipe = None
+    if mode != "single":
+        if d * m > jax.device_count():
+            raise SystemExit(
+                f"mesh {args.mesh} needs {d*m} devices, have "
+                f"{jax.device_count()} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={d*m})")
+        mesh = meshlib.make_mesh((d, m), ("data", "model"))
+        recipe = ShardingRecipe(data_axes=("data",), model_axis="model")
+    model = build(cfg, recipe=recipe)
+    sync = GradSyncConfig(impl=args.grad_sync, schedule=args.schedule,
+                          compress=args.compress)
+    built = build_step(mode, model, opt_cfg, mesh=mesh, recipe=recipe,
+                       sync=sync)
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt = built.init_opt(params)
+    if mode == "zero1":
+        opt = jax.device_put(opt, built.opt_spec(params))
+    start = 0
+    opt_leaves, opt_treedef = jax.tree.flatten(opt)
+
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir)
+        if mgr.latest_step() is not None:
+            start, params, opt_arrs, man = mgr.restore(None, params)
+            opt = jax.tree.unflatten(
+                opt_treedef, [jnp.asarray(opt_arrs[f"leaf_{i}"])
+                              for i in range(len(opt_leaves))])
+            print(f"resumed from step {start} "
+                  f"(manifest cursor {man.get('data_cursor')})")
+
+    injector = FailureInjector(fail_at_step=args.fail_at_step)
+    wd = Watchdog()
+    ctx = jax.set_mesh(mesh) if mesh is not None else _null_ctx()
+    losses = []
+    with ctx:
+        for step in range(start, args.steps):
+            injector.check(step)
+            t0 = time.time()
+            batch = pipe.batch_at(step)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            if mesh is not None:
+                batch = {k: jax.device_put(
+                    v, NamedSharding(mesh, built.batch_spec))
+                    for k, v in batch.items()}
+            params, opt, metrics = built.step_fn(params, opt, batch)
+            dt = time.time() - t0
+            status = wd.observe(step, dt)
+            losses.append(float(metrics["loss"]))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d}  loss {losses[-1]:.4f}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}  "
+                      f"lr {float(metrics['lr']):.2e}  {dt*1e3:.0f}ms "
+                      f"[{status}]")
+            if mgr and (step + 1) % args.ckpt_every == 0:
+                leaves = jax.tree.leaves(opt)
+                mgr.save_async(
+                    step + 1, params,
+                    {f"leaf_{i}": np.asarray(l)
+                     for i, l in enumerate(leaves)},
+                    {"data_cursor": step + 1,
+                     "config": config_fingerprint(cfg),
+                     "mesh": args.mesh, "arch": args.arch})
+    if mgr:
+        mgr.wait()
+    print(f"final loss: {losses[-1]:.4f} (start {losses[0]:.4f})")
+    return losses
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .config import ModelConfig, ShardingRecipe  # noqa: F401
+from .registry import ModelApi, build, make_param_specs  # noqa: F401

@@ -1,0 +1,185 @@
+"""GQA attention: full / sliding-window / cross, train + prefill + decode.
+
+Covers every attention flavor in the assigned pool: GQA grouping
+(all archs), qk-norm (qwen3), QKV bias (qwen1.5), sliding window (hymba),
+cross-attention (whisper decoder, llama-3.2-vision image layers).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as shd
+from .config import ModelConfig
+from .layers import apply_rope, dense_init, head_rmsnorm
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # (B, S_max, Hkv, dh)
+    v: jax.Array
+
+
+def init_attention(key, cfg: ModelConfig, dtype, *, cross: bool = False,
+                   n_heads: int | None = None, n_kv: int | None = None):
+    h = n_heads if n_heads is not None else cfg.n_heads
+    hkv = n_kv if n_kv is not None else cfg.n_kv_heads
+    d, dh = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), dtype),
+        "wk": dense_init(ks[1], (d, hkv, dh), dtype),
+        "wv": dense_init(ks[2], (d, hkv, dh), dtype),
+        "wo": dense_init(ks[3], (h, dh, d), dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((hkv, dh), dtype)
+        p["bv"] = jnp.zeros((hkv, dh), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Masks (additive, fp32)
+# ---------------------------------------------------------------------------
+
+def causal_mask(s: int, window: int = 0) -> jax.Array:
+    q = jnp.arange(s)[:, None]
+    k = jnp.arange(s)[None, :]
+    ok = k <= q
+    if window > 0:
+        ok &= k > q - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def decode_mask(s_max: int, pos, window: int = 0) -> jax.Array:
+    """Mask over a cache of length s_max for the single query at ``pos``.
+    pos: scalar int array."""
+    k = jnp.arange(s_max)
+    ok = k <= pos
+    if window > 0:
+        ok &= k > pos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product with GQA grouping
+# ---------------------------------------------------------------------------
+
+def _project_q(p, cfg, x, positions, *, rope=True):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    if cfg.qk_norm:
+        q = head_rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def _project_kv(p, cfg, x, positions, *, rope=True):
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        k = head_rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if rope and positions is not None:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def sdpa(q, k, v, mask, recipe=None):
+    """q: (B,S,H,dh), k/v: (B,T,Hkv,dh), mask: broadcastable to (S,T) or
+    (B,1,S,T).  GQA: H = G*Hkv."""
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, dh)
+    scale = dh ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = scores + mask  # mask broadcasts over (b?,k,g) dims
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+FLASH_THRESHOLD = 1024  # use chunked online-softmax above this seq length
+
+
+def _maybe_expand_gqa(k, v, cfg, recipe):
+    """§Perf B: when kv-heads don't divide the model axis but full heads
+    do, materialize the GQA broadcast so every attention tensor keeps ONE
+    consistent head sharding (H/tp) — GSPMD otherwise flip-flops between
+    (hkv, g) factorizations and falls back to full rematerialization
+    (replication) around the flash tiles."""
+    if recipe is None or not getattr(recipe, "expand_gqa", False):
+        return k, v
+    tp = getattr(recipe, "tp_size", 0)
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    if tp and hkv % tp != 0 and h % tp == 0 and h != hkv:
+        g = h // hkv
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    return k, v
+
+
+def self_attention(p, cfg: ModelConfig, x, positions, *, causal=True,
+                   window: int = 0, recipe=None):
+    """Training / prefill full-sequence self attention.  Returns (out, kv)
+    so prefill can seed the cache.  Dispatches to chunked flash attention
+    for long sequences (no S×S tensor is ever materialized)."""
+    from .flash import flash_attention
+    s = x.shape[1]
+    q = _project_q(p, cfg, x, positions)
+    k, v = _project_kv(p, cfg, x, positions)
+    # Expanded copies feed the COMPUTE only; the returned kv (cache) stays
+    # in compact GQA form.
+    k_c, v_c = _maybe_expand_gqa(k, v, cfg, recipe)
+    q = shd.act_bthd(q, recipe)
+    k_c = shd.act_bthd(k_c, recipe)
+    v_c = shd.act_bthd(v_c, recipe)
+    if s > FLASH_THRESHOLD:
+        out = flash_attention(q, k_c, v_c, causal=causal, window=window)
+    else:
+        mask = causal_mask(s, window) if causal else jnp.zeros((), jnp.float32)
+        out = sdpa(q, k_c, v_c, mask)
+    out = shd.act_bthd(out, recipe)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"]), (k, v)
+
+
+def cross_attention(p, cfg: ModelConfig, x, memory_kv, recipe=None):
+    """x: (B,S,d) queries; memory_kv: precomputed (k, v) from the encoder
+    output or image embeddings (no rope, no mask)."""
+    q = _project_q(p, cfg, x, None, rope=False)
+    k, v = memory_kv
+    out = sdpa(q, k, v, jnp.zeros((), jnp.float32))
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"])
+
+
+def project_memory(p, cfg: ModelConfig, memory):
+    """Precompute cross-attention K/V from encoder output / image embeds."""
+    return _project_kv(p, cfg, memory, None, rope=False)
+
+
+def decode_self_attention(p, cfg: ModelConfig, x, cache: KVCache, pos,
+                          window: int = 0, recipe=None):
+    """One-token decode: x (B,1,d), cache (B,S_max,Hkv,dh), pos scalar.
+    Appends projected kv at ``pos`` and attends over the cache."""
+    positions = pos[None, None] if pos.ndim == 0 else pos[:, None]
+    q = _project_q(p, cfg, x, positions)
+    k_new, v_new = _project_kv(p, cfg, x, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
+                                            pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
+                                            pos, axis=1)
+    mask = decode_mask(k.shape[1], pos, window)
+    out = sdpa(q, k, v, mask)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"]), KVCache(k, v)

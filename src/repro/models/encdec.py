@@ -1,0 +1,175 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv frontend is a STUB per the assignment: ``batch["frames"]`` holds
+precomputed frame embeddings (B, S_enc, d_model).  Encoder: non-causal
+self-attention stack.  Decoder: causal self-attention + cross-attention to
+the encoded audio + FFN, trained on text tokens (dec_len).
+
+Cells: train_4k     — enc frames S, dec tokens dec_len, loss on text.
+       prefill_32k  — encode S frames + decoder prefill.
+       decode_32k   — one decoder step cross-attending a 32k-frame memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import sharding as shd
+from .config import ModelConfig
+from .layers import (remat_policy_of,
+                     cross_entropy_loss, dense_init, dtype_of, embed_init,
+                     ffn, init_ffn, rmsnorm)
+
+
+def _init_enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "ffn": init_ffn(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "norm_x": jnp.ones((cfg.d_model,), dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "xattn": attn.init_attention(k2, cfg, dtype, cross=True),
+        "ffn": init_ffn(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = dtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+        jax.random.split(k1, cfg.enc_layers))
+    dec = jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(
+        jax.random.split(k2, cfg.n_layers))
+    return {
+        "enc_layers": enc,
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "dec_layers": dec,
+        "embed": embed_init(k3, (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(k4, (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def encode(params, cfg, frames, recipe=None, remat: bool = True):
+    """frames: (B, S_enc, d_model) stub embeddings -> encoded memory."""
+    x = frames.astype(dtype_of(cfg))
+    x = shd.act_btd(x, recipe)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        a, _ = attn.self_attention(lp["attn"], cfg, h, positions,
+                                   causal=False, recipe=recipe)
+        x = x + a
+        x = x + ffn(lp["ffn"], rmsnorm(x, lp["norm2"], cfg.norm_eps))
+        return shd.act_btd(x, recipe), None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=remat_policy_of(cfg))
+    x, _ = jax.lax.scan(body, x, params["enc_layers"], unroll=cfg.scan_unroll)
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _decoder(params, cfg, tokens, memory, recipe=None, remat: bool = True,
+             want_cache: bool = False):
+    x = params["embed"][tokens].astype(dtype_of(cfg))
+    x = shd.act_btd(x, recipe)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        a, kv = attn.self_attention(lp["attn"], cfg, h, positions,
+                                    recipe=recipe)
+        x = x + a
+        mem_kv = attn.project_memory(lp["xattn"], cfg, memory)
+        x = x + attn.cross_attention(
+            lp["xattn"], cfg, rmsnorm(x, lp["norm_x"], cfg.norm_eps), mem_kv,
+            recipe)
+        x = x + ffn(lp["ffn"], rmsnorm(x, lp["norm2"], cfg.norm_eps))
+        cache = {"k": kv[0], "v": kv[1],
+                 "mem_k": mem_kv[0], "mem_v": mem_kv[1]} if want_cache else None
+        return shd.act_btd(x, recipe), cache
+
+    if remat and not want_cache:
+        body = jax.checkpoint(
+            body, policy=remat_policy_of(cfg))
+    x, caches = jax.lax.scan(body, x, params["dec_layers"],
+                             unroll=cfg.scan_unroll)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches
+
+
+def loss_fn(params, cfg, batch, recipe=None, remat: bool = True):
+    memory = encode(params, cfg, batch["frames"], recipe, remat)
+    x, _ = _decoder(params, cfg, batch["tokens"], memory, recipe, remat)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    logits = shd.act_btv(logits, recipe)
+    return cross_entropy_loss(logits, batch["targets"], batch.get("mask"))
+
+
+def forward_logits(params, cfg, tokens, recipe=None, remat: bool = True,
+                   frames=None):
+    memory = encode(params, cfg, frames, recipe, remat)
+    x, _ = _decoder(params, cfg, tokens, memory, recipe, remat)
+    return x @ params["lm_head"].astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def prefill(params, cfg, tokens, max_len: int, recipe=None, frames=None):
+    """Encode audio + run the decoder prompt.  Cache holds per-layer self
+    kv (padded to max_len over DECODER positions) + projected memory kv."""
+    b, s = tokens.shape
+    memory = encode(params, cfg, frames, recipe, remat=False)
+    x, caches = _decoder(params, cfg, tokens, memory, recipe, remat=False,
+                         want_cache=True)
+    logits = x[:, -1] @ params["lm_head"].astype(x.dtype)
+    dtype = dtype_of(cfg)
+    dec_max = max(max_len, s)
+    full = {
+        "k": jnp.zeros((cfg.n_layers, b, dec_max, cfg.n_kv_heads,
+                        cfg.head_dim), dtype),
+        "v": jnp.zeros((cfg.n_layers, b, dec_max, cfg.n_kv_heads,
+                        cfg.head_dim), dtype),
+        "mem_k": caches["mem_k"], "mem_v": caches["mem_v"],
+    }
+    full["k"] = jax.lax.dynamic_update_slice_in_dim(
+        full["k"], caches["k"].astype(dtype), 0, axis=2)
+    full["v"] = jax.lax.dynamic_update_slice_in_dim(
+        full["v"], caches["v"].astype(dtype), 0, axis=2)
+    return full, logits
+
+
+def decode_step(params, cfg, cache, token, pos, recipe=None):
+    x = params["embed"][token][:, None].astype(dtype_of(cfg))
+
+    def body(x, inp):
+        lp, lc = inp
+        h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        kvc = attn.KVCache(lc["k"], lc["v"])
+        a, new_kv = attn.decode_self_attention(lp["attn"], cfg, h, kvc, pos)
+        x = x + a
+        x = x + attn.cross_attention(
+            lp["xattn"], cfg, rmsnorm(x, lp["norm_x"], cfg.norm_eps),
+            (lc["mem_k"], lc["mem_v"]))
+        x = x + ffn(lp["ffn"], rmsnorm(x, lp["norm2"], cfg.norm_eps))
+        return x, {"k": new_kv.k, "v": new_kv.v,
+                   "mem_k": lc["mem_k"], "mem_v": lc["mem_v"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache),
+                                unroll=cfg.scan_unroll)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, 0] @ params["lm_head"].astype(x.dtype)
+    return new_cache, logits

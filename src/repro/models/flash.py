@@ -1,0 +1,97 @@
+"""Chunked online-softmax attention (flash-style) in pure JAX.
+
+Long-sequence cells (train_4k, prefill_32k) cannot materialize S×S score
+tensors (32k² fp32 = 4 GiB per head); this computes attention in
+(q_chunk × k_chunk) tiles with the standard running-max/running-sum
+rescaling, O(S·chunk) live memory.  The per-q-chunk body is wrapped in
+``jax.checkpoint`` so the backward pass recomputes tile scores instead of
+saving them (the flash-backward memory law).
+
+GQA grouping, causal masking and sliding windows are handled via position
+arithmetic per tile — no global mask tensor ever exists.  On TPU this
+lowers to MXU-sized einsums over VMEM-resident tiles; the same structure
+is what a hand-written Pallas flash kernel would express (kept in XLA-land
+here because the paper's kernels are the collectives, not attention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _tile_mask(q_pos, k_pos, causal: bool, window: int):
+    """(cq, ck) boolean mask from absolute positions."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= kp <= qp
+    if window > 0:
+        ok &= kp > qp - window
+    return ok
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, chunk_q: int = 512,
+                    chunk_k: int = 1024):
+    """q: (B, Sq, H, dh); k, v: (B, Sk, Hkv, dh).  H = G * Hkv.
+    Positions are implicit: q token i has position q_offset + i, k token j
+    has position j (standard prefill/training layout).
+    Returns (B, Sq, H, dh)."""
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    cq = min(chunk_q, sq)
+    while sq % cq:
+        cq -= 1
+    ck = min(chunk_k, sk)
+    while sk % ck:
+        ck -= 1
+    nq, nk = sq // cq, sk // ck
+    scale = dh ** -0.5
+    qg = q.reshape(b, nq, cq, hkv, g, dh).astype(jnp.float32) * scale
+    kc = k.reshape(b, nk, ck, hkv, dh).astype(jnp.float32)
+    vc = v.reshape(b, nk, ck, hkv, dh).astype(jnp.float32)
+
+    @functools.partial(jax.checkpoint, policy=None)
+    def q_chunk_body(qi_idx, q_tile):
+        """q_tile: (B, cq, Hkv, G, dh) -> out tile."""
+        q_pos = q_offset + qi_idx * cq + jnp.arange(cq)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj_idx, k_tile, v_tile = inp
+            k_pos = kj_idx * ck + jnp.arange(ck)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", q_tile, k_tile)
+            mask = _tile_mask(q_pos, k_pos, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            pr = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + pr.sum(-1)
+            acc_new = (acc * alpha[..., None]
+                       + jnp.einsum("bkgqc,bckd->bkgqd", pr, v_tile))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kc.swapaxes(0, 1), vc.swapaxes(0, 1)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B, Hkv, G, cq, dh)
+
+    def outer(_, inp):
+        qi_idx, q_tile = inp
+        return None, q_chunk_body(qi_idx, q_tile)
+
+    _, tiles = jax.lax.scan(outer, None,
+                            (jnp.arange(nq), qg.swapaxes(0, 1)))
+    # tiles: (nq, B, Hkv, G, cq, dh) -> (B, Sq, H, dh)
+    out = tiles.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dh)
+    return out.astype(q.dtype)

@@ -1,0 +1,125 @@
+"""Model registry: one API over every architecture family, plus rule-based
+parameter sharding specs (TP over 'model', optional FSDP over data axes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from . import encdec, transformer, vlm, xlstm
+from .config import ModelConfig, ShardingRecipe
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "hybrid": transformer,
+    "ssm_xlstm": xlstm,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+class ModelApi(NamedTuple):
+    cfg: ModelConfig
+    init: Callable                 # (key) -> params
+    loss: Callable                 # (params, batch) -> scalar
+    forward_logits: Callable       # (params, tokens, **extras) -> (logits, aux)
+    prefill: Callable              # (params, tokens, max_len, **ex) -> (cache, logits)
+    decode_step: Callable          # (params, cache, token, pos) -> (cache, logits)
+    param_specs: Callable          # (params_or_shapes) -> PartitionSpec pytree
+
+
+def build(cfg: ModelConfig, recipe: ShardingRecipe | None = None,
+          remat: bool = True) -> ModelApi:
+    mod = _FAMILY_MODULES[cfg.family]
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: mod.init_params(cfg, key),
+        loss=lambda params, batch: mod.loss_fn(params, cfg, batch, recipe,
+                                               remat),
+        forward_logits=lambda params, tokens, **ex: mod.forward_logits(
+            params, cfg, tokens, recipe, remat, **ex),
+        prefill=lambda params, tokens, max_len, **ex: mod.prefill(
+            params, cfg, tokens, max_len, recipe, **ex),
+        decode_step=lambda params, cache, token, pos: mod.decode_step(
+            params, cfg, cache, token, pos, recipe),
+        param_specs=lambda params: make_param_specs(params, recipe),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules (leaf-name based; stacked layer dims padded with None)
+# ---------------------------------------------------------------------------
+
+def _rules(fsdp):
+    """name -> base spec (innermost dims).  fsdp is an axis tuple or None."""
+    f = fsdp
+    return {
+        # embeddings / heads
+        "embed": (("model", f)),
+        "lm_head": ((f, "model")),
+        # attention
+        "wq": (f, "model", None), "wk": (f, "model", None),
+        "wv": (f, "model", None), "wo": ("model", None, f),
+        "wo_gate": (f, "model", None),
+        "bq": ("model", None), "bk": ("model", None), "bv": ("model", None),
+        # dense ffn
+        "w_gate": (f, "model"), "w_up": (f, "model"), "w_down": ("model", f),
+        # moe (expert-parallel over 'model')
+        "moe.w_gate": ("model", f, None), "moe.w_up": ("model", f, None),
+        "moe.w_down": ("model", None, f), "router": (None, None),
+        # mamba
+        "w_in": (f, "model"), "w_out": ("model", f),
+        "w_dt": ("model", None), "w_B": ("model", None), "w_C": ("model", None),
+        "A_log": ("model", None), "D": ("model",), "conv_w": (None, "model"),
+        "dt_bias": ("model",),
+        # mlstm / slstm
+        "wi": (f, "model"), "wf": (f, "model"),
+        "w_x": (f, None, "model", None), "r_h": (None, "model", None, None),
+    }
+
+
+def _leaf_name(path) -> tuple[str, str]:
+    """(name, qualified) — qualified includes the parent dict key."""
+    names = [k.key for k in path if isinstance(k, DictKey)]
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+    return name, f"{parent}.{name}"
+
+
+def make_param_specs(params, recipe: ShardingRecipe | None):
+    """PartitionSpec pytree matching ``params`` (arrays or ShapeDtypeStructs).
+
+    TP rule set above; when recipe.mode == 'tp_fsdp' the designated weight
+    dim is additionally sharded over the data axes (FSDP).  Leading stacked
+    dims (scan layers / vlm groups) are padded with None.  Unknown leaves
+    replicate.
+    """
+    if recipe is None:
+        return jax.tree.map(lambda _: P(), params)
+    fsdp = tuple(recipe.fsdp_axes) if recipe.fsdp_axes else None
+    rules = _rules(fsdp)
+
+    def spec_for(path, leaf):
+        name, qual = _leaf_name(path)
+        base = rules.get(qual, rules.get(name))
+        ndim = len(leaf.shape)
+        if base is None:
+            return P(*([None] * ndim))
+        base = tuple(base)
+        if ndim < len(base):  # scalar-ish leaf (smoke config edge): replicate
+            return P(*([None] * ndim))
+        pad = ndim - len(base)
+        spec = (None,) * pad + base
+        # Replace 'model' with the recipe's model axis name.
+        spec = tuple(recipe.model_axis if s == "model" else s for s in spec)
+        # Drop shardings that do not divide the dim evenly — GSPMD would
+        # error; replication is always sound.
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)

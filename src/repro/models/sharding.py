@@ -1,0 +1,74 @@
+"""Activation sharding-constraint hooks (GSPMD side of the hybrid scheme).
+
+The model code is recipe-agnostic: every hook is a no-op when recipe is
+None (CPU smoke tests), and emits ``with_sharding_constraint`` with the
+recipe's axis names when lowering on the production mesh.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .config import ShardingRecipe
+
+
+def _norm(entry):
+    """Normalize spec entries: empty axis tuples (manual-region recipes
+    strip the data axes) become None."""
+    if isinstance(entry, tuple) and len(entry) == 0:
+        return None
+    return entry
+
+
+def constrain(x, spec: P | None):
+    if spec is None:
+        return x
+    spec = P(*(_norm(e) for e in spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def act_btd(x, recipe: ShardingRecipe | None):
+    """(batch, seq, d_model): batch over data axes; seq over model when
+    sequence-parallel (context parallelism), else unsharded."""
+    if recipe is None:
+        return x
+    seq = recipe.model_axis if recipe.sequence_parallel else None
+    return constrain(x, P(_norm(recipe.batch_axes), seq, None))
+
+
+def _div_ok(recipe, dim: int) -> bool:
+    tp = getattr(recipe, "tp_size", 0)
+    return tp == 0 or dim % tp == 0
+
+
+def act_bthd(x, recipe: ShardingRecipe | None):
+    """(batch, seq, heads, head_dim): heads over the model axis (skipped
+    when heads don't divide the axis — e.g. whisper's 12 heads on 16)."""
+    if recipe is None:
+        return x
+    m = recipe.model_axis if _div_ok(recipe, x.shape[2]) else None
+    return constrain(x, P(_norm(recipe.batch_axes), None, m, None))
+
+
+def act_btf(x, recipe: ShardingRecipe | None):
+    """(batch, seq, d_ff): hidden over the model axis."""
+    if recipe is None:
+        return x
+    m = recipe.model_axis if _div_ok(recipe, x.shape[2]) else None
+    return constrain(x, P(_norm(recipe.batch_axes), None, m))
+
+
+def act_btv(x, recipe: ShardingRecipe | None):
+    """(batch, seq, vocab): vocab over the model axis."""
+    if recipe is None:
+        return x
+    m = recipe.model_axis if _div_ok(recipe, x.shape[2]) else None
+    return constrain(x, P(_norm(recipe.batch_axes), None, m))
+
+
+def cache_bthd(x, recipe: ShardingRecipe | None):
+    """KV cache (batch, S_max, kv_heads, head_dim): batch over data; kv
+    heads over model when they divide, else replicated over model."""
+    if recipe is None:
+        return x
+    return constrain(x, P(_norm(recipe.batch_axes), None, None, None))

@@ -1,0 +1,313 @@
+"""State-space and recurrent sequence mixers.
+
+* ``mamba``  — selective diagonal SSM (hymba's SSM heads): chunked scan —
+  within-chunk associative scan, sequential carry across chunks — bounding
+  the (B, chunk, d_inner, state) working set to VMEM-friendly sizes
+  instead of materializing the full (B, S, d_inner, state) tensor
+  (the TPU adaptation of mamba's fused CUDA scan; DESIGN §2).
+* ``mlstm``  — xLSTM's matrix-memory LSTM in chunkwise-parallel form:
+  intra-chunk masked quadratic + inter-chunk recurrent (C, n) state.
+  O(S·chunk) work, O(1)-state decode — this is what makes long_500k
+  runnable for the ssm/hybrid archs.
+* ``slstm``  — xLSTM's scalar-memory LSTM with exponential gating and the
+  paper's m-stabilizer, true recurrence via lax.scan (with per-head
+  recurrent weights R).
+
+Numerics note (DESIGN §4): mLSTM uses a sigmoid input gate rather than the
+xLSTM paper's unbounded exp gate so that the chunkwise-parallel form is
+stable in fp32/bf16 without per-step max tracking; sLSTM keeps the exact
+exp gating + stabilizer since its sequential scan makes that free.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+
+
+def _pick_chunk(s: int, chunk: int) -> int:
+    """Largest divisor of s that is <= chunk (assigned shapes are powers of
+    two so this stays at the configured chunk; odd smoke lengths degrade
+    gracefully)."""
+    ch = max(1, min(chunk, s))
+    while s % ch:
+        ch -= 1
+    return ch
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (hymba SSM heads)
+# ---------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    h: jax.Array      # (B, d_inner, state)
+    conv: jax.Array   # (B, conv_k - 1, d_inner) rolling conv window
+
+
+def init_mamba(key, cfg, dtype):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, d_in), dtype, scale=0.5),
+        "w_dt": dense_init(ks[2], (d_in, 1), dtype),
+        "dt_bias": jnp.zeros((d_in,), dtype),
+        "w_B": dense_init(ks[3], (d_in, n), dtype),
+        "w_C": dense_init(ks[4], (d_in, n), dtype),
+        "A_log": jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)
+                         )[None, :].repeat(d_in, 0).astype(dtype),
+        "D": jnp.ones((d_in,), dtype),
+        "w_out": dense_init(ks[5], (d_in, d), dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv along seq.  x (B,S,din), w (K,din).
+    state: (B,K-1,din) previous tail or None (zeros)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else state
+    return out, new_state
+
+
+def _ssm_scan_chunk(a, b, h0):
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t within one chunk via
+    associative scan.  a, b: (B, L, d_in, n); h0: (B, d_in, n)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = aa * h0[:, None] + bb
+    return h, h[:, -1]
+
+
+def mamba_forward(p, cfg, x, *, chunk: int = 256, state: MambaState | None = None):
+    """x: (B, S, d) -> (y (B, S, d), final MambaState).  S % chunk == 0 or
+    S < chunk (single chunk)."""
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    xz = x @ p["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state.conv if state is not None else None
+    xs, conv_tail = _causal_conv(xs, p["conv_w"], conv_state)
+    xs = jax.nn.silu(xs)
+    dt = jax.nn.softplus(xs @ p["w_dt"] + p["dt_bias"])       # (B,S,d_in)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (d_in, n)
+    Bm = xs @ p["w_B"]                                         # (B,S,n)
+    Cm = xs @ p["w_C"]                                         # (B,S,n)
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)         # (B,S,d_in,n)
+    bterm = (dt * xs).astype(jnp.float32)[..., None] * Bm[:, :, None, :].astype(jnp.float32)
+    h0 = (state.h if state is not None
+          else jnp.zeros((b, d_in, n), jnp.float32))
+    ch = _pick_chunk(s, chunk)
+    nch = s // ch
+
+    def step(h_carry, inputs):
+        a_c, b_c = inputs                                      # (B,ch,din,n)
+        h_all, h_last = _ssm_scan_chunk(a_c, b_c, h_carry)
+        return h_last, h_all
+
+    a_ch = a.reshape(b, nch, ch, d_in, n).swapaxes(0, 1)
+    b_ch = bterm.reshape(b, nch, ch, d_in, n).swapaxes(0, 1)
+    h_last, h_seq = jax.lax.scan(step, h0, (a_ch, b_ch))
+    h_seq = h_seq.swapaxes(0, 1).reshape(b, s, d_in, n)
+    y = jnp.einsum("bsdn,bsn->bsd", h_seq, Cm.astype(jnp.float32))
+    y = (y + p["D"].astype(jnp.float32) * xs.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    return out, MambaState(h=h_last, conv=conv_tail)
+
+
+def mamba_decode_step(p, cfg, x, state: MambaState):
+    """x: (B, 1, d) one token; O(1) state update."""
+    out, new_state = mamba_forward(p, cfg, x, chunk=1, state=state)
+    return out, new_state
+
+
+def mamba_init_state(cfg, batch, dtype=jnp.float32) -> MambaState:
+    d_in = cfg.ssm_expand * cfg.d_model
+    return MambaState(
+        h=jnp.zeros((batch, d_in, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, d_in), dtype))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory), chunkwise parallel
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    C: jax.Array    # (B, H, dk, dv)
+    n: jax.Array    # (B, H, dk)
+
+
+def init_mlstm(key, cfg, dtype):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], (d, h, dh), dtype),
+        "wk": dense_init(ks[1], (d, h, dh), dtype),
+        "wv": dense_init(ks[2], (d, h, dh), dtype),
+        "wi": dense_init(ks[3], (d, h), dtype),    # input gate (per head)
+        "wf": dense_init(ks[4], (d, h), dtype),    # forget gate
+        "wo_gate": dense_init(ks[5], (d, h, dh), dtype),  # output gate
+        "wo": dense_init(ks[6], (h, dh, d), dtype),
+        "f_bias": jnp.full((h,), 3.0, dtype),      # init toward remembering
+        "i_bias": jnp.zeros((h,), dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, lf, li, C0, n0):
+    """One chunk.  q,k,v: (B,L,H,dh); lf,li: (B,L,H) log gates (<= 0).
+    C0: (B,H,dk,dv); n0: (B,H,dk).  Returns h (B,L,H,dh), C1, n1."""
+    bsz, L, H, dh = q.shape
+    f32 = jnp.float32
+    q, k, v = (t.astype(f32) for t in (q, k, v))
+    q = q * (dh ** -0.5)  # scale ONCE so intra (q·k) and inter (q·C, q·n)
+    #                       paths stay consistent across chunk boundaries
+    lf, li = lf.astype(f32), li.astype(f32)
+    cf = jnp.cumsum(lf, axis=1)                    # inclusive prefix
+    # Inter-chunk: decay from chunk start to t.
+    decay_t = jnp.exp(cf)                          # (B,L,H)
+    h_inter = jnp.einsum("blhk,bhkv->blhv", q, C0) * decay_t[..., None]
+    d_inter = jnp.einsum("blhk,bhk->blh", q, n0) * decay_t
+    # Intra-chunk: w[t,s] = exp(cf_t - cf_s + li_s) for s <= t.
+    g = li - cf                                    # (B,L,H)
+    logw = cf[:, :, None, :] + g[:, None, :, :]    # (B, t, s, H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    w = jnp.where(mask[None, :, :, None], jnp.exp(logw), 0.0)
+    scores = jnp.einsum("blhk,bshk->blsh", q, k)
+    wsc = w * scores
+    h_intra = jnp.einsum("blsh,bshv->blhv", wsc, v)
+    d_intra = jnp.einsum("blsh->blh", wsc)
+    denom = jnp.maximum(jnp.abs(d_inter + d_intra), 1.0)
+    h = (h_inter + h_intra) / denom[..., None]
+    # State update to end of chunk.
+    decay_L = jnp.exp(cf[:, -1])                   # (B,H)
+    sdecay = jnp.exp(cf[:, -1:, :] - cf + li)      # (B,L,H)
+    C1 = (C0 * decay_L[..., None, None]
+          + jnp.einsum("blh,blhk,blhv->bhkv", sdecay, k, v))
+    n1 = n0 * decay_L[..., None] + jnp.einsum("blh,blhk->bhk", sdecay, k)
+    return h, C1, n1
+
+
+def mlstm_forward(p, cfg, x, *, state: MLSTMState | None = None):
+    b, s, d = x.shape
+    h_, dh = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    lf = jax.nn.log_sigmoid(x @ p["wf"] + p["f_bias"])   # (B,S,H) <= 0
+    li = jax.nn.log_sigmoid(x @ p["wi"] + p["i_bias"])   # sigmoid input gate
+    ch = _pick_chunk(s, cfg.mlstm_chunk)
+    nch = s // ch
+    C0 = (state.C if state is not None
+          else jnp.zeros((b, h_, dh, dh), jnp.float32))
+    n0 = (state.n if state is not None
+          else jnp.zeros((b, h_, dh), jnp.float32))
+
+    def step(carry, inp):
+        C, n = carry
+        qc, kc, vc, lfc, lic = inp
+        hout, C2, n2 = _mlstm_chunk(qc, kc, vc, lfc, lic, C, n)
+        return (C2, n2), hout
+
+    resh = lambda t: t.reshape(b, nch, ch, *t.shape[2:]).swapaxes(0, 1)
+    (C1, n1), hs = jax.lax.scan(step, (C0, n0),
+                                (resh(q), resh(k), resh(v), resh(lf), resh(li)))
+    hseq = hs.swapaxes(0, 1).reshape(b, s, h_, dh)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", x, p["wo_gate"]))
+    out = jnp.einsum("bshk,hkd->bsd", (hseq * og).astype(x.dtype), p["wo"])
+    return out, MLSTMState(C=C1, n=n1)
+
+
+def mlstm_decode_step(p, cfg, x, state: MLSTMState):
+    return mlstm_forward(p, cfg, x, state=state)
+
+
+def mlstm_init_state(cfg, batch) -> MLSTMState:
+    return MLSTMState(
+        C=jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                    jnp.float32),
+        n=jnp.zeros((batch, cfg.n_heads, cfg.head_dim), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar memory, exp gating + stabilizer, true recurrence)
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, dh)
+    n: jax.Array   # (B, H, dh)
+    m: jax.Array   # (B, H, dh) stabilizer
+    h: jax.Array   # (B, H, dh) recurrent output
+
+
+def init_slstm(key, cfg, dtype):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 3)
+    return {
+        # input projections for gates (z, i, f, o): (d, 4, H, dh)
+        "w_x": dense_init(ks[0], (d, 4, h, dh), dtype),
+        # per-head recurrent weights: (4, H, dh, dh)
+        "r_h": dense_init(ks[1], (4, h, dh, dh), dtype, scale=0.05),
+        "bias": jnp.zeros((4, h, dh), dtype),
+        "wo": dense_init(ks[2], (h, dh, d), dtype),
+        "f_bias_extra": jnp.full((h, dh), 3.0, dtype),
+    }
+
+
+def slstm_step(p, x_proj_t, state: SLSTMState) -> tuple[jax.Array, SLSTMState]:
+    """x_proj_t: (B, 4, H, dh) precomputed input contribution at step t."""
+    f32 = jnp.float32
+    rec = jnp.einsum("bhk,ghkl->bghl", state.h.astype(f32),
+                     p["r_h"].astype(f32))
+    pre = x_proj_t.astype(f32) + rec + p["bias"].astype(f32)
+    z = jnp.tanh(pre[:, 0])
+    li = pre[:, 1]                                    # log-space exp gate
+    lf = pre[:, 2] + p["f_bias_extra"].astype(f32)
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(lf + state.m, li)             # stabilizer
+    i_s = jnp.exp(li - m_new)
+    f_s = jnp.exp(lf + state.m - m_new)
+    c_new = f_s * state.c + i_s * z
+    n_new = f_s * state.n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, SLSTMState(c=c_new, n=n_new, m=m_new, h=h_new)
+
+
+def slstm_forward(p, cfg, x, *, state: SLSTMState | None = None):
+    b, s, d = x.shape
+    h_, dh = cfg.n_heads, cfg.head_dim
+    x_proj = jnp.einsum("bsd,dghk->bsghk", x, p["w_x"])  # (B,S,4,H,dh)
+    st = state if state is not None else slstm_init_state(cfg, b)
+
+    def step(carry, xp_t):
+        h_new, new_state = slstm_step(p, xp_t, carry)
+        return new_state, h_new
+
+    final, hs = jax.lax.scan(step, st, x_proj.swapaxes(0, 1))
+    hseq = hs.swapaxes(0, 1)                          # (B,S,H,dh)
+    out = jnp.einsum("bshk,hkd->bsd", hseq.astype(x.dtype), p["wo"])
+    return out, final
+
+
+def slstm_decode_step(p, cfg, x, state: SLSTMState):
+    out, new_state = slstm_forward(p, cfg, x, state=state)
+    return out, new_state
+
+
+def slstm_init_state(cfg, batch) -> SLSTMState:
+    shp = (batch, cfg.n_heads, cfg.head_dim)
+    z = jnp.zeros(shp, jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full(shp, -1e30, jnp.float32), h=z)

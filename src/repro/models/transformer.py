@@ -1,0 +1,327 @@
+"""Decoder-only LM covering the dense, MoE and hybrid (hymba) families.
+
+Layers are stacked-pytree + ``lax.scan`` (compact HLO: compile time and
+program size are per-layer, not per-model).  The hybrid family (hymba) is
+instead UNROLLED at trace time: its per-layer global-vs-sliding-window
+flag must stay static so each layer makes exactly one attention call with
+a static window.  Three entry points:
+
+  loss(params, batch)                    — training (causal LM)
+  prefill(params, tokens) -> (cache, logits)
+  decode_step(params, cache, token, pos) -> (cache, logits)
+
+Hybrid (hymba) blocks run attention heads and mamba heads in PARALLEL on
+the same normed input and fuse via per-branch RMS norms (Hymba §2; meta
+tokens omitted — DESIGN §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import sharding as shd
+from . import ssm
+from .config import ModelConfig
+from .layers import (remat_policy_of,
+                     cross_entropy_loss, dense_init, dtype_of, embed_init,
+                     ffn, init_ffn, rmsnorm)
+from .moe import init_moe, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attention(ks[0], cfg, dtype),
+    }
+    if cfg.family == "hybrid":
+        p["mamba"] = ssm.init_mamba(ks[1], cfg, dtype)
+        p["norm_attn_out"] = jnp.ones((cfg.d_model,), dtype)
+        p["norm_ssm_out"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.is_moe:
+        p["moe"] = init_moe(ks[2], cfg, dtype)
+    elif cfg.d_ff > 0:
+        p["ffn"] = init_ffn(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = dtype_of(cfg)
+    k_emb, k_layers, k_head, k_norm = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                       dtype)
+    return params
+
+
+def _layer_slice(layers, i):
+    return jax.tree.map(lambda a: a[i], layers)
+
+
+def _hybrid_runs(cfg):
+    """Partition [0, n_layers) into maximal contiguous runs of equal
+    is_global flag: [(lo, hi, is_global), ...]."""
+    runs = []
+    lo = 0
+    for i in range(1, cfg.n_layers + 1):
+        flag_prev = (i - 1) in cfg.global_attn_layers
+        if i == cfg.n_layers or (i in cfg.global_attn_layers) != flag_prev:
+            runs.append((lo, i, flag_prev))
+            lo = i
+    return runs
+
+
+# ---------------------------------------------------------------------------
+# Layer forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_forward(lp, cfg: ModelConfig, x, positions, is_global: bool,
+                   recipe, want_cache: bool):
+    """is_global is a STATIC python bool.  Returns (x, aux, cache|None)."""
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    if cfg.family == "hybrid":
+        window = 0 if is_global else cfg.sliding_window
+        a, kv = attn.self_attention(lp["attn"], cfg, h, positions,
+                                    window=window, recipe=recipe)
+        m, mstate = ssm.mamba_forward(
+            lp["mamba"], cfg, h, chunk=min(cfg.mlstm_chunk, h.shape[1]))
+        mix = 0.5 * (rmsnorm(a, lp["norm_attn_out"], cfg.norm_eps)
+                     + rmsnorm(m, lp["norm_ssm_out"], cfg.norm_eps))
+        x = x + mix
+    else:
+        mstate = None
+        a, kv = attn.self_attention(lp["attn"], cfg, h, positions,
+                                    window=cfg.sliding_window, recipe=recipe)
+        x = x + a
+    x = shd.act_btd(x, recipe)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        y, aux = moe_ffn(lp["moe"], cfg, rmsnorm(x, lp["norm2"], cfg.norm_eps),
+                         recipe)
+        x = x + y
+    elif cfg.d_ff > 0:
+        x = x + ffn(lp["ffn"], rmsnorm(x, lp["norm2"], cfg.norm_eps))
+    x = shd.act_btd(x, recipe)
+    cache = None
+    if want_cache:
+        cache = {"k": kv[0], "v": kv[1]}
+        if mstate is not None:
+            cache["mamba"] = mstate
+    return x, aux, cache
+
+
+def _stack_forward(params, cfg, x, positions, recipe, want_cache: bool,
+                   remat: bool):
+    """Hybrid: trace-time unroll (static per-layer windows).
+    Others: lax.scan over stacked layer params."""
+    if cfg.family == "hybrid":
+        # Contiguous runs of same-window layers SCAN (compact HLO, fast
+        # SPMD compile); the few global-attention layers are unrolled so
+        # is_global stays static per call.
+        aux_sum = jnp.zeros((), jnp.float32)
+        cache_chunks = []
+        fwd = _layer_forward
+        if remat:
+            fwd = jax.checkpoint(
+                _layer_forward,
+                policy=remat_policy_of(cfg),
+                static_argnums=(1, 4, 5, 6))  # cfg, is_global, recipe, want
+
+        def swa_body(carry, lp):
+            x, aux_sum = carry
+            x, aux, cache = fwd(lp, cfg, x, positions, False, recipe,
+                                want_cache)
+            return (x, aux_sum + aux), cache
+
+        for lo, hi, is_global in _hybrid_runs(cfg):
+            if is_global or hi - lo == 1:
+                for i in range(lo, hi):
+                    lp = _layer_slice(params["layers"], i)
+                    x, aux, cache = fwd(lp, cfg, x, positions, is_global,
+                                        recipe, want_cache)
+                    aux_sum = aux_sum + aux
+                    if want_cache:
+                        cache_chunks.append(
+                            jax.tree.map(lambda a: a[None], cache))
+            else:
+                seg = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+                (x, aux_sum), caches = jax.lax.scan(
+                    swa_body, (x, aux_sum), seg, unroll=cfg.scan_unroll)
+                if want_cache:
+                    cache_chunks.append(caches)
+        stacked = (jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                *cache_chunks) if want_cache else None)
+        return x, aux_sum, stacked
+
+    def body(carry, lp):
+        x, aux_sum = carry
+        x, aux, cache = _layer_forward(lp, cfg, x, positions, False, recipe,
+                                       want_cache)
+        return (x, aux_sum + aux), cache
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=remat_policy_of(cfg))
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["layers"],
+        unroll=cfg.scan_unroll)
+    return x, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# Public: loss / logits
+# ---------------------------------------------------------------------------
+
+def forward_logits(params, cfg: ModelConfig, tokens, recipe=None,
+                   remat: bool = True):
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(dtype_of(cfg))
+    x = shd.act_btd(x, recipe)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x, aux, _ = _stack_forward(params, cfg, x, positions, recipe,
+                               want_cache=False, remat=remat)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    return shd.act_btv(logits, recipe), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, recipe=None, remat: bool = True):
+    logits, aux = forward_logits(params, cfg, batch["tokens"], recipe, remat)
+    return cross_entropy_loss(logits, batch["targets"],
+                              batch.get("mask")) + aux
+
+
+# ---------------------------------------------------------------------------
+# Public: prefill / decode with cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, recipe=None):
+    dtype = dtype_of(cfg)
+    kv_len = min(max_len, cfg.sliding_window) if (
+        cfg.family == "hybrid" and cfg.sliding_window) else max_len
+    # NOTE: hybrid SWA layers only ever attend within the window, but the
+    # global layers need full length; we size every layer to max_len for
+    # scan homogeneity (a paged cache would split them; see DESIGN §3).
+    kv = {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                        cfg.head_dim), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                        cfg.head_dim), dtype),
+    }
+    if cfg.family == "hybrid":
+        d_in = cfg.ssm_expand * cfg.d_model
+        kv["mamba"] = ssm.MambaState(
+            h=jnp.zeros((cfg.n_layers, batch, d_in, cfg.ssm_state),
+                        jnp.float32),
+            conv=jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, d_in),
+                           dtype))
+    return kv
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int, recipe=None):
+    """Run the prompt, return (cache, last-token logits)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(dtype_of(cfg))
+    x = shd.act_btd(x, recipe)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x, _, caches = _stack_forward(params, cfg, x, positions, recipe,
+                                  want_cache=True, remat=False)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x[:, -1] @ head.astype(x.dtype)
+    cache = init_cache(cfg, b, max_len, recipe)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], caches["k"].astype(cache["k"].dtype), 0, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], caches["v"].astype(cache["v"].dtype), 0, axis=2)
+    if cfg.family == "hybrid":
+        cache["mamba"] = caches["mamba"]
+    return cache, logits
+
+
+def _decode_layer(lp, cfg, x, layer_cache, pos, is_global: bool, recipe):
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    kvc = attn.KVCache(layer_cache["k"], layer_cache["v"])
+    if cfg.family == "hybrid":
+        window = 0 if is_global else cfg.sliding_window
+        a, new_kv = attn.decode_self_attention(lp["attn"], cfg, h, kvc, pos,
+                                               window, recipe)
+        m, mstate = ssm.mamba_decode_step(lp["mamba"], cfg, h,
+                                          layer_cache["mamba"])
+        mix = 0.5 * (rmsnorm(a, lp["norm_attn_out"], cfg.norm_eps)
+                     + rmsnorm(m, lp["norm_ssm_out"], cfg.norm_eps))
+        x = x + mix
+    else:
+        mstate = None
+        a, new_kv = attn.decode_self_attention(lp["attn"], cfg, h, kvc, pos,
+                                               cfg.sliding_window, recipe)
+        x = x + a
+    if cfg.is_moe:
+        y, _ = moe_ffn(lp["moe"], cfg, rmsnorm(x, lp["norm2"], cfg.norm_eps),
+                       recipe)
+        x = x + y
+    elif cfg.d_ff > 0:
+        x = x + ffn(lp["ffn"], rmsnorm(x, lp["norm2"], cfg.norm_eps))
+    out_cache = {"k": new_kv.k, "v": new_kv.v}
+    if mstate is not None:
+        out_cache["mamba"] = mstate
+    return x, out_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, recipe=None):
+    """token: (B,) int32; pos: scalar int32.  Returns (cache, logits)."""
+    x = params["embed"][token][:, None].astype(dtype_of(cfg))
+
+    if cfg.family == "hybrid":
+        cache_chunks = []
+
+        def swa_body(x, inp):
+            lp, lc = inp
+            x, nc = _decode_layer(lp, cfg, x, lc, pos, False, recipe)
+            return x, nc
+
+        for lo, hi, is_global in _hybrid_runs(cfg):
+            if is_global or hi - lo == 1:
+                for i in range(lo, hi):
+                    lp = _layer_slice(params["layers"], i)
+                    lc = _layer_slice(cache, i)
+                    x, nc = _decode_layer(lp, cfg, x, lc, pos, is_global,
+                                          recipe)
+                    cache_chunks.append(jax.tree.map(lambda a: a[None], nc))
+            else:
+                seg_p = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+                seg_c = jax.tree.map(lambda a: a[lo:hi], cache)
+                x, ncs = jax.lax.scan(swa_body, x, (seg_p, seg_c),
+                                      unroll=cfg.scan_unroll)
+                cache_chunks.append(ncs)
+        new_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                 *cache_chunks)
+    else:
+        def body(x, inp):
+            lp, lc = inp
+            x, nc = _decode_layer(lp, cfg, x, lc, pos, False, recipe)
+            return x, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache),
+                                    unroll=cfg.scan_unroll)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x[:, 0] @ head.astype(x.dtype)
+    return new_cache, logits

@@ -1,0 +1,189 @@
+"""Llama-3.2-Vision-style decoder: interleaved gated cross-attention layers.
+
+100 layers = 20 groups of [4 self-attention layers + 1 gated cross-attn
+layer].  The vision tower is a STUB per the assignment:
+``batch["image_embeds"]`` holds precomputed patch embeddings
+(B, n_image_tokens, d_model).  Cross layers use tanh-gated residuals
+(zero-init gate: the model starts as a pure LM, the Llama-3.2 recipe).
+
+Scan is over groups; the 4 self layers inside a group are unrolled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import sharding as shd
+from .config import ModelConfig
+from .layers import (remat_policy_of,
+                     cross_entropy_loss, dense_init, dtype_of, embed_init,
+                     ffn, init_ffn, rmsnorm)
+
+SELF_PER_GROUP = 4
+
+
+def _n_groups(cfg) -> int:
+    assert cfg.n_layers % (SELF_PER_GROUP + 1) == 0, \
+        f"vlm needs n_layers % {SELF_PER_GROUP + 1} == 0, got {cfg.n_layers}"
+    return cfg.n_layers // (SELF_PER_GROUP + 1)
+
+
+def _init_self_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "ffn": init_ffn(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_cross_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "xattn": attn.init_attention(k1, cfg, dtype, cross=True),
+        "ffn": init_ffn(k2, cfg.d_model, cfg.d_ff, dtype),
+        "gate_attn": jnp.zeros((), dtype),
+        "gate_ffn": jnp.zeros((), dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = dtype_of(cfg)
+    ng = _n_groups(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    self_keys = jax.random.split(k1, ng * SELF_PER_GROUP).reshape(
+        ng, SELF_PER_GROUP, 2)
+    selfs = jax.vmap(jax.vmap(lambda k: _init_self_layer(k, cfg, dtype)))(
+        self_keys)
+    crosses = jax.vmap(lambda k: _init_cross_layer(k, cfg, dtype))(
+        jax.random.split(k2, ng))
+    return {
+        "embed": embed_init(k3, (cfg.vocab_size, cfg.d_model), dtype),
+        "self_layers": selfs,     # (G, 4, ...)
+        "cross_layers": crosses,  # (G, ...)
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(k4, (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def _self_layer(lp, cfg, x, positions, recipe, want_cache):
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    a, kv = attn.self_attention(lp["attn"], cfg, h, positions, recipe=recipe)
+    x = x + a
+    x = x + ffn(lp["ffn"], rmsnorm(x, lp["norm2"], cfg.norm_eps))
+    cache = {"k": kv[0], "v": kv[1]} if want_cache else None
+    return shd.act_btd(x, recipe), cache
+
+
+def _cross_layer(lp, cfg, x, img_kv, recipe):
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    a = attn.cross_attention(lp["xattn"], cfg, h, img_kv, recipe)
+    x = x + jnp.tanh(lp["gate_attn"]) * a
+    y = ffn(lp["ffn"], rmsnorm(x, lp["norm2"], cfg.norm_eps))
+    x = x + jnp.tanh(lp["gate_ffn"]) * y
+    return shd.act_btd(x, recipe)
+
+
+def _stack(params, cfg, x, positions, image_embeds, recipe, remat,
+           want_cache=False):
+    def group_body(x, gp):
+        sp, cp = gp  # self params (4, ...), cross params
+        caches = []
+        for i in range(SELF_PER_GROUP):
+            lp = jax.tree.map(lambda a: a[i], sp)
+            x, c = _self_layer(lp, cfg, x, positions, recipe, want_cache)
+            caches.append(c)
+        img_kv = attn.project_memory(cp["xattn"], cfg, image_embeds)
+        x = _cross_layer(cp, cfg, x, img_kv, recipe)
+        stacked = (jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+                   if want_cache else None)
+        return x, stacked
+
+    if remat and not want_cache:
+        group_body = jax.checkpoint(
+            group_body, policy=remat_policy_of(cfg))
+    x, caches = jax.lax.scan(group_body, x,
+                             (params["self_layers"], params["cross_layers"]),
+                             unroll=cfg.scan_unroll)
+    return x, caches
+
+
+def forward_logits(params, cfg, tokens, recipe=None, remat: bool = True,
+                   image_embeds=None):
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(dtype_of(cfg))
+    x = shd.act_btd(x, recipe)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    img = image_embeds.astype(dtype_of(cfg))
+    x, _ = _stack(params, cfg, x, positions, img, recipe, remat)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return shd.act_btv(logits, recipe), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch, recipe=None, remat: bool = True):
+    logits, _ = forward_logits(params, cfg, batch["tokens"], recipe, remat,
+                               image_embeds=batch["image_embeds"])
+    return cross_entropy_loss(logits, batch["targets"], batch.get("mask"))
+
+
+def prefill(params, cfg, tokens, max_len: int, recipe=None, image_embeds=None):
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(dtype_of(cfg))
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    img = image_embeds.astype(dtype_of(cfg))
+    x, caches = _stack(params, cfg, x, positions, img, recipe, remat=False,
+                       want_cache=True)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1] @ params["lm_head"].astype(x.dtype)
+    ng = _n_groups(cfg)
+    dtype = dtype_of(cfg)
+    full = {
+        "k": jnp.zeros((ng, SELF_PER_GROUP, b, max_len, cfg.n_kv_heads,
+                        cfg.head_dim), dtype),
+        "v": jnp.zeros((ng, SELF_PER_GROUP, b, max_len, cfg.n_kv_heads,
+                        cfg.head_dim), dtype),
+    }
+    full["k"] = jax.lax.dynamic_update_slice_in_dim(
+        full["k"], caches["k"].astype(dtype), 0, axis=3)
+    full["v"] = jax.lax.dynamic_update_slice_in_dim(
+        full["v"], caches["v"].astype(dtype), 0, axis=3)
+    # Project image kv once; reused every decode step.
+    def proj(cp):
+        return attn.project_memory(cp["xattn"], cfg, img)
+    full["img_k"], full["img_v"] = jax.vmap(proj)(params["cross_layers"])
+    return full, logits
+
+
+def decode_step(params, cfg, cache, token, pos, recipe=None):
+    x = params["embed"][token][:, None].astype(dtype_of(cfg))
+
+    def group_body(x, inp):
+        sp, cp, kc, vc, ik, iv = inp
+        new_k, new_v = [], []
+        for i in range(SELF_PER_GROUP):
+            lp = jax.tree.map(lambda a: a[i], sp)
+            h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+            kvc = attn.KVCache(kc[i], vc[i])
+            a, nkv = attn.decode_self_attention(lp["attn"], cfg, h, kvc, pos)
+            x = x + a
+            x = x + ffn(lp["ffn"], rmsnorm(x, lp["norm2"], cfg.norm_eps))
+            new_k.append(nkv.k)
+            new_v.append(nkv.v)
+        x = _cross_layer(cp, cfg, x, (ik, iv), None)
+        return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+    x, (nk, nv) = jax.lax.scan(
+        group_body, x,
+        (params["self_layers"], params["cross_layers"],
+         cache["k"], cache["v"], cache["img_k"], cache["img_v"]),
+        unroll=cfg.scan_unroll)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, 0] @ params["lm_head"].astype(x.dtype)
+    new_cache = {"k": nk, "v": nv,
+                 "img_k": cache["img_k"], "img_v": cache["img_v"]}
+    return new_cache, logits

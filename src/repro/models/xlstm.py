@@ -1,0 +1,91 @@
+"""xLSTM LM (alternating mLSTM / sLSTM blocks, xLSTM paper arXiv:2405.04517).
+
+d_ff = 0 in the assigned config: blocks are pure sequence mixers with
+residuals (the mLSTM block carries its own up/down projections via qkv/out;
+sLSTM mixes per-head state).  Even layers are mLSTM (parallelizable,
+chunked), odd layers sLSTM (true recurrence).  Decode state is O(1) in
+sequence length — this arch runs the long_500k cell.
+
+Layers are unrolled at trace time (12 layers, heterogeneous states).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as shd
+from . import ssm
+from .config import ModelConfig
+from .layers import cross_entropy_loss, dense_init, dtype_of, embed_init, rmsnorm
+
+
+def _is_mlstm(i: int) -> bool:
+    return i % 2 == 0
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = dtype_of(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        kl = keys[i]
+        mixer = (ssm.init_mlstm(kl, cfg, dtype) if _is_mlstm(i)
+                 else ssm.init_slstm(kl, cfg, dtype))
+        layers.append({"norm": jnp.ones((cfg.d_model,), dtype),
+                       "mixer": mixer})
+    return {
+        "embed": embed_init(keys[-3], (cfg.vocab_size, cfg.d_model), dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(keys[-2], (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def _forward(params, cfg, x, states=None, collect_states=False, recipe=None):
+    new_states = []
+    for i, lp in enumerate(params["layers"]):
+        h = rmsnorm(x, lp["norm"], cfg.norm_eps)
+        st = states[i] if states is not None else None
+        if _is_mlstm(i):
+            y, ns = ssm.mlstm_forward(lp["mixer"], cfg, h, state=st)
+        else:
+            y, ns = ssm.slstm_forward(lp["mixer"], cfg, h, state=st)
+        x = shd.act_btd(x + y, recipe)
+        new_states.append(ns)
+    return x, (new_states if collect_states else None)
+
+
+def forward_logits(params, cfg: ModelConfig, tokens, recipe=None,
+                   remat: bool = True):
+    x = params["embed"][tokens].astype(dtype_of(cfg))
+    x, _ = _forward(params, cfg, x, recipe=recipe)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["lm_head"].astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch, recipe=None, remat: bool = True):
+    logits, _ = forward_logits(params, cfg, batch["tokens"], recipe)
+    return cross_entropy_loss(logits, batch["targets"], batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, recipe=None):
+    return [ssm.mlstm_init_state(cfg, batch) if _is_mlstm(i)
+            else ssm.slstm_init_state(cfg, batch)
+            for i in range(cfg.n_layers)]
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int, recipe=None):
+    x = params["embed"][tokens].astype(dtype_of(cfg))
+    x, states = _forward(params, cfg, x, collect_states=True, recipe=recipe)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1] @ params["lm_head"].astype(x.dtype)
+    return states, logits
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, recipe=None):
+    x = params["embed"][token][:, None].astype(dtype_of(cfg))
+    x, states = _forward(params, cfg, x, states=cache, collect_states=True,
+                         recipe=recipe)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, 0] @ params["lm_head"].astype(x.dtype)
+    return states, logits

@@ -1,0 +1,3 @@
+from .adamw import (AdamWConfig, AdamState, TreeAdamState, init_state,  # noqa: F401
+                    init_tree_state, update_shard, update_tree, lr_at)
+from .zero1 import GradSyncConfig, zero1_step  # noqa: F401

@@ -1,0 +1,120 @@
+"""AdamW on flat (raveled) vectors + LR schedules.
+
+The ZeRO-1 path (optim/zero1.py) runs these kernels on 1/(pod*data)
+shards of the fused gradient vector; the replicated baseline runs them on
+the full vector.  fp32 moments regardless of param dtype.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamState(NamedTuple):
+    m: jax.Array   # fp32
+    v: jax.Array   # fp32
+    step: jax.Array  # int32 scalar
+
+
+def init_state(n: int) -> AdamState:
+    return AdamState(m=jnp.zeros((n,), jnp.float32),
+                     v=jnp.zeros((n,), jnp.float32),
+                     step=jnp.zeros((), jnp.int32))
+
+
+def lr_at(cfg: AdamWConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def update_shard(cfg: AdamWConfig, state: AdamState, g, p, clip_scale=1.0):
+    """One AdamW step on a (shard of a) flat fp32 gradient.  Returns
+    (delta, new_state): delta is the parameter INCREMENT (new_p = p + delta)
+    so the caller can allgather deltas or params as it prefers."""
+    g = g.astype(jnp.float32) * clip_scale
+    p32 = p.astype(jnp.float32)
+    step = state.step + 1
+    m = cfg.beta1 * state.m + (1 - cfg.beta1) * g
+    v = cfg.beta2 * state.v + (1 - cfg.beta2) * g * g
+    t = step.astype(jnp.float32)
+    mhat = m / (1 - cfg.beta1 ** t)
+    vhat = v / (1 - cfg.beta2 ** t)
+    lr = lr_at(cfg, step)
+    delta = -lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                   + cfg.weight_decay * p32)
+    return delta, AdamState(m=m, v=v, step=step)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_scale_from_norm(cfg: AdamWConfig, gnorm) -> jax.Array:
+    return jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# Pytree variant (FSDP-auto mode: m/v shard exactly like params under GSPMD)
+# ---------------------------------------------------------------------------
+
+class TreeAdamState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def init_tree_state(params) -> TreeAdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TreeAdamState(m=zeros,
+                         v=jax.tree.map(jnp.copy, zeros),
+                         step=jnp.zeros((), jnp.int32))
+
+
+def update_tree(cfg: AdamWConfig, state: TreeAdamState, grads, params):
+    gnorm = global_norm(grads)
+    scale = clip_scale_from_norm(cfg, gnorm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    lr = lr_at(cfg, step)
+    bc1 = 1 - cfg.beta1 ** t
+    bc2 = 1 - cfg.beta2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v2 = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+        delta = -lr * ((m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+                       + cfg.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) + delta).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, TreeAdamState(m=new_m, v=new_v, step=step), gnorm

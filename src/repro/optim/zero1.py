@@ -1,0 +1,268 @@
+"""ZeRO-1 distributed optimizer driven by the paper's collectives.
+
+This is the framework's primary integration of Träff's algorithms: every
+(large) gradient leaf is REDUCE-SCATTERED (Algorithm 1) across the data
+axes along its leading dimension, AdamW updates only the local 1/(pod*data)
+shard (optimizer state is never replicated — the ZeRO-1 memory win), and
+updated parameter shards are ALLGATHERED back with the reversed schedule
+(Algorithm 2's second phase).  Per step and per rank this moves exactly
+2(p-1)/p of the gradient volume in 2*ceil(log2 p) collective-permute
+rounds per leaf — Theorem 2's optimum.
+
+PER-LEAF, not flat-raveled: leaves keep their tensor-parallel (model-axis)
+sharding on inner dimensions — a ravel would force an all-gather over the
+model axis and materialize full fp32 gradients per rank (168 GB for a 42B
+model).  The leading dim (the layer-stack axis for scanned blocks, vocab
+for embeddings) is zero-padded to a multiple of the DP world and sliced
+back after the allgather.  Leaves too small to shard profitably (norms,
+biases, scalars) are synchronized with a plain psum and updated
+replicated — they are <0.1% of parameters.
+
+Grad-sync implementations are pluggable (--grad-sync):
+  circulant[:schedule]  paper Algorithm 1/2 (halving default; power2 /
+                        fully_connected / sqrt per Corollary 2)
+  ring                  p-1-round bandwidth baseline
+  xla                   lax.psum_scatter + lax.all_gather
+  allreduce             plain replicated allreduce + full optimizer
+                        (no ZeRO; memory baseline)
+Optional int8 compressed rounds (quantize kernels) via compress='int8'.
+
+Shard layout per leaf: axis-major blocks over ``axis_names`` order —
+rank (r0, r1) holds rows [lin * ld_pad/P, (lin+1) * ld_pad/P) with
+lin = r0 * p1 + r1; the matching hierarchical AG reassembles exactly.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import collectives as C
+from repro.kernels import make_compressors
+from . import adamw
+
+
+@dataclass(frozen=True)
+class GradSyncConfig:
+    impl: str = "circulant"       # circulant | ring | xla | allreduce
+    schedule: str = "halving"     # Corollary-2 schedule for circulant
+    compress: str | None = None   # None | 'int8'
+    quant_group: int = 512
+    min_shard_numel: int = 1024   # leaves smaller than this stay replicated
+    rs_dtype: str = "float32"     # reduce-scatter payload dtype; 'bfloat16'
+    #                               halves the RS link volume (§Perf A)
+
+
+class Zero1State(NamedTuple):
+    m: object        # pytree: sharded fp32 (zero leaves) / full (tiny)
+    v: object
+    step: jax.Array
+
+
+def data_parallel_world_static(mesh_shape: dict, axis_names) -> int:
+    p = 1
+    for a in axis_names:
+        p *= mesh_shape[a]
+    return p
+
+
+def is_zero_leaf(shape, world: int, min_numel: int) -> bool:
+    """Shard a leaf iff it is big enough and leading-dim padding waste is
+    bounded (< 2x)."""
+    numel = int(np.prod(shape)) if shape else 0
+    if numel < max(min_numel, world):
+        return False
+    ld = shape[0]
+    pad_ld = ld + (-ld) % world
+    return pad_ld <= 2 * ld or numel // max(ld, 1) * pad_ld >= min_numel
+
+
+def leaf_flags(params, world: int, min_numel: int = 1024):
+    return jax.tree.map(
+        lambda l: is_zero_leaf(l.shape, world, min_numel), params)
+
+
+def _pad_lead(x, world: int):
+    ld = x.shape[0]
+    pad = (-ld) % world
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], axis=0)
+    return x
+
+
+def shard_offset(ld_pad: int, axis_names: Sequence[str]):
+    """(row offset, rows per shard) of this rank's slice (axis-major)."""
+    p_total = 1
+    lin = jnp.zeros((), jnp.int32)
+    for a in axis_names:
+        lin = lin * lax.axis_size(a) + lax.axis_index(a)
+        p_total *= lax.axis_size(a)
+    rows = ld_pad // p_total
+    return lin * rows, rows
+
+
+def _rs_kwargs(sync: GradSyncConfig):
+    kw = {}
+    if sync.impl == "circulant":
+        kw["schedule"] = sync.schedule
+        if sync.compress == "int8":
+            comp, decomp = make_compressors(group=sync.quant_group,
+                                            backend="jnp")
+            kw["compress"], kw["decompress"] = comp, decomp
+    return kw
+
+
+def reduce_scatter_leaf(g, axis_names, sync: GradSyncConfig, world: int):
+    """Hierarchical RS along dim 0; returns the averaged local shard."""
+    impl = sync.impl if sync.impl != "allreduce" else "xla"
+    kw = _rs_kwargs(sync)
+    out = _pad_lead(g, world)
+    for ax in axis_names:
+        out = C.reduce_scatter(out, ax, impl=impl, **kw)
+    return out / world
+
+
+def allgather_leaf(shard, ld: int, axis_names, sync: GradSyncConfig):
+    """Inverse: hierarchical AG along dim 0, then drop padding rows."""
+    impl = "circulant" if sync.impl in ("circulant", "ring") else "xla"
+    kw = {"schedule": sync.schedule} if impl == "circulant" else {}
+    out = shard
+    for ax in reversed(list(axis_names)):
+        out = C.allgather(out, ax, impl=impl, **kw)
+    return out[:ld]
+
+
+def allreduce_leaf(g, axis_names, sync: GradSyncConfig, world: int):
+    """Tiny-leaf path: replicated mean.  Scalars/1-elem rows cannot block-
+    partition, so this uses psum (XLA all-reduce) — negligible volume."""
+    out = g
+    for ax in axis_names:
+        out = lax.psum(out, ax)
+    return out / world
+
+
+def zero1_step(loss_and_grad: Callable, params, opt: Zero1State, batch, *,
+               axis_names: Sequence[str], opt_cfg: adamw.AdamWConfig,
+               sync: GradSyncConfig):
+    """One manual-region training step (inside shard_map over the data
+    axes; the model axis stays auto/GSPMD).  Returns (params', opt',
+    metrics)."""
+    loss, grads = loss_and_grad(params, batch)
+    world = 1
+    for a in axis_names:
+        world *= lax.axis_size(a)
+    flags = jax.tree.map(
+        lambda l: is_zero_leaf(l.shape, world, sync.min_shard_numel), params)
+    use_zero = sync.impl != "allreduce"
+
+    # --- reduce: shard big leaves (Algorithm 1), psum tiny ones ---
+    rs_dt = jnp.dtype(sync.rs_dtype)
+
+    def reduce_one(g, flag):
+        if flag and use_zero:
+            g = g.astype(rs_dt)
+            out = reduce_scatter_leaf(g, axis_names, sync, world)
+            return out.astype(jnp.float32)
+        return allreduce_leaf(g.astype(jnp.float32), axis_names, sync, world)
+
+    g_red = jax.tree.map(reduce_one, grads, flags)
+
+    # --- global grad norm: shards partition the reduced grad exactly, so
+    # one psum of the summed shard sq-norms + the (replicated) tiny-leaf
+    # sq-norms gives the global norm ---
+    flat_flags = jax.tree.leaves(flags)
+    flat_g = jax.tree.leaves(g_red)
+    shard_sq = sum((jnp.sum(jnp.square(g)) for g, f in
+                    zip(flat_g, flat_flags) if f and use_zero),
+                   start=jnp.zeros((), jnp.float32))
+    tiny_sq = sum((jnp.sum(jnp.square(g)) for g, f in
+                   zip(flat_g, flat_flags) if not (f and use_zero)),
+                  start=jnp.zeros((), jnp.float32))
+    for ax in axis_names:
+        shard_sq = lax.psum(shard_sq, ax)
+    gnorm = jnp.sqrt(shard_sq + tiny_sq)
+    scale = adamw.clip_scale_from_norm(opt_cfg, gnorm)
+
+    # --- AdamW on shards ---
+    step = opt.step + 1
+    t = step.astype(jnp.float32)
+    lr = adamw.lr_at(opt_cfg, step)
+    bc1 = 1 - opt_cfg.beta1 ** t
+    bc2 = 1 - opt_cfg.beta2 ** t
+
+    def update_one(p, g, m, v, flag):
+        if flag and use_zero:
+            ld = p.shape[0]
+            p_pad = _pad_lead(p, world)
+            off, rows = shard_offset(p_pad.shape[0], axis_names)
+            p_loc = lax.dynamic_slice_in_dim(p_pad, off, rows, axis=0)
+        else:
+            p_loc = p
+        g = g * scale
+        m2 = opt_cfg.beta1 * m + (1 - opt_cfg.beta1) * g
+        v2 = opt_cfg.beta2 * v + (1 - opt_cfg.beta2) * g * g
+        delta = -lr * ((m2 / bc1) / (jnp.sqrt(v2 / bc2) + opt_cfg.eps)
+                       + opt_cfg.weight_decay * p_loc.astype(jnp.float32))
+        new_loc = (p_loc.astype(jnp.float32) + delta).astype(p.dtype)
+        if flag and use_zero:
+            new_p = allgather_leaf(new_loc, p.shape[0], axis_names, sync)
+        else:
+            new_p = new_loc
+        return new_p, m2, v2
+
+    out = jax.tree.map(update_one, params, g_red, opt.m, opt.v, flags)
+    istup = lambda x: isinstance(x, tuple) and len(x) == 3 \
+        and not isinstance(x, jax.Array)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=istup)
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=istup)
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=istup)
+
+    mloss = loss
+    for ax in axis_names:
+        mloss = lax.pmean(mloss, ax)
+    metrics = {"loss": mloss, "grad_norm": gnorm,
+               "lr": adamw.lr_at(opt_cfg, step)}
+    return new_params, Zero1State(m=new_m, v=new_v, step=step), metrics
+
+
+# ---------------------------------------------------------------------------
+# State construction / specs (used by train.steps)
+# ---------------------------------------------------------------------------
+
+def init_zero1_state(params, world: int, sync: GradSyncConfig) -> Zero1State:
+    """GLOBAL optimizer state arrays: zero leaves get (ld_pad, *rest) fp32
+    (to be sharded over the data axes), tiny leaves full fp32 replicas."""
+    use_zero = sync.impl != "allreduce"
+
+    def mk(l):
+        if use_zero and is_zero_leaf(l.shape, world, sync.min_shard_numel):
+            ld_pad = l.shape[0] + (-l.shape[0]) % world
+            return jnp.zeros((ld_pad, *l.shape[1:]), jnp.float32)
+        return jnp.zeros(l.shape, jnp.float32)
+
+    zeros = jax.tree.map(mk, params)
+    return Zero1State(m=zeros, v=jax.tree.map(jnp.copy, zeros),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def zero1_state_specs(params, world: int, sync: GradSyncConfig,
+                      collective_axes):
+    """Manual-axis PartitionSpecs for the optimizer state (dim 0 over the
+    data axes for zero leaves; replicated otherwise)."""
+    from jax.sharding import PartitionSpec as P
+    use_zero = sync.impl != "allreduce"
+
+    def spec(l):
+        if use_zero and is_zero_leaf(l.shape, world, sync.min_shard_numel):
+            return P(collective_axes)
+        return P()
+
+    m_specs = jax.tree.map(spec, params)
+    return Zero1State(m=m_specs, v=jax.tree.map(lambda s: s, m_specs),
+                      step=P())

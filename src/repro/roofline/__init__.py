@@ -1,0 +1,2 @@
+from .analysis import (CollectiveStats, Roofline, analyze, model_flops,  # noqa: F401
+                       parse_collectives)

@@ -1,0 +1,201 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds-per-step per chip
+(TPU v5e constants):
+
+  compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16)
+  memory     = HLO_bytes_accessed / HBM_bw       (819 GB/s)
+  collective = effective_collective_bytes / link_bw  (~50 GB/s/link ICI)
+
+``cost_analysis()`` provides per-device FLOPs and bytes.  Collective bytes
+are NOT in cost_analysis: we parse the post-SPMD HLO text and sum, per
+collective op, the bytes that actually cross links per participating
+device:
+
+  collective-permute     size                  (one send per device)
+  all-gather             out * (g-1)/g
+  reduce-scatter         out * (g-1)            (= in * (g-1)/g)
+  all-reduce             2 * size * (g-1)/g     (RS + AG decomposition)
+  all-to-all             size * (g-1)/g
+
+with g parsed from replica_groups (explicit or iota form).
+
+MODEL_FLOPS = 6·N·D for training cells (N = total params dense / active
+params MoE; D = tokens per chip per step) and 2·N·D for inference cells
+(forward only) — the useful-FLOPs yardstick; ratio to HLO FLOPs exposes
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s
+LINK_BW = 50e9            # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2  # conservative default
+
+
+@dataclass
+class CollectiveStats:
+    ops: dict = field(default_factory=dict)        # op -> count
+    bytes_by_op: dict = field(default_factory=dict)  # op -> effective bytes
+    raw_bytes_by_op: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.ops.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Scan post-SPMD HLO for collective ops; returns per-device effective
+    link bytes.  Start/done pairs are counted once (via -start)."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) ([\w\-]+)\(", line)
+        if not m:
+            continue
+        type_str, opname = m.groups()
+        base = opname.replace("-start", "")
+        if base.endswith("-done") or base not in COLLECTIVE_OPS:
+            continue
+        size = _shape_bytes(type_str)
+        g = _group_size(line)
+        if base == "collective-permute":
+            eff = size
+        elif base == "all-gather":
+            eff = size * (g - 1) / g
+        elif base == "reduce-scatter":
+            eff = size * (g - 1)
+        elif base == "all-reduce":
+            eff = 2 * size * (g - 1) / g
+        else:  # all-to-all
+            eff = size * (g - 1) / g
+        stats.ops[base] = stats.ops.get(base, 0) + 1
+        stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + eff
+        stats.raw_bytes_by_op[base] = (stats.raw_bytes_by_op.get(base, 0)
+                                       + size)
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops_per_chip: float
+    collectives: CollectiveStats | None = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return (self.model_flops_per_chip / self.flops_per_chip
+                if self.flops_per_chip else 0.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-term-bound step time that is useful
+        compute: (MODEL_FLOPS/peak) / max-term.  1.0 = perfectly
+        compute-bound with zero waste."""
+        t_star = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_star == 0:
+            return 0.0
+        return (self.model_flops_per_chip / PEAK_FLOPS) / t_star
+
+    def as_dict(self) -> dict:
+        d = {
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "model_flops_per_chip": self.model_flops_per_chip,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+        if self.collectives:
+            d["collective_ops"] = self.collectives.ops
+            d["collective_bytes_by_op"] = self.collectives.bytes_by_op
+        return d
+
+
+def model_flops(cfg, tokens_per_chip: float, training: bool) -> float:
+    """6·N·D (train) or 2·N·D (inference) with N = active params."""
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    return (6.0 if training else 2.0) * n * tokens_per_chip
+
+
+def analyze(compiled, cfg, *, tokens_global: float, n_chips: int,
+            training: bool) -> Roofline:
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    stats = parse_collectives(compiled.as_text())
+    return Roofline(
+        flops_per_chip=flops,
+        hbm_bytes_per_chip=hbm,
+        collective_bytes_per_chip=stats.total_bytes,
+        model_flops_per_chip=model_flops(cfg, tokens_global / n_chips,
+                                         training),
+        collectives=stats,
+    )

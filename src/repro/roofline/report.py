@@ -1,0 +1,102 @@
+"""Render reports/dryrun JSONs into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir reports/dryrun]
+                                                   [--mesh 1pod] [--tag ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def load(d: str, mesh: str, tag: str = ""):
+    rows = []
+    suffix = f"_{tag}" if tag else ""
+    for fn in sorted(os.listdir(d)):
+        if not fn.endswith(f"_{mesh}{suffix}.json"):
+            continue
+        if not tag and fn.count("_") > 2:
+            # exclude tagged variants when untagged requested
+            base = fn[:-len(f"_{mesh}.json")]
+            pass
+        rows.append(json.load(open(os.path.join(d, fn))))
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.1f}"
+
+
+def render(rows, *, show_hlo=False) -> str:
+    out = []
+    out.append("| arch | shape | mode | status | peak GiB/chip | t_compute "
+               "| t_memory | t_collective | bottleneck | useful/HLO | "
+               "roofline frac |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    rows = sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in rows:
+        arch, shape = r["arch"], r["shape"]
+        st = r.get("status", "?")
+        if st != "OK":
+            short = "SKIP" if st.startswith("SKIP") else "ERROR"
+            note = st.split("(", 1)[-1].rstrip(")") if "(" in st else st
+            out.append(f"| {arch} | {shape} | {r.get('mode', '')} | {short}:"
+                       f" {note[:48]} | | | | | | | |")
+            continue
+        rl = r["roofline"]
+        m = r["memory"]
+        peak = (m["argument_bytes"] + m["temp_bytes"]) / 2**30
+        fit = "" if peak <= 16 else " ⚠"
+        out.append(
+            f"| {arch} | {shape} | {r.get('mode', '')} | OK | "
+            f"{peak:.1f}{fit} | {rl['t_compute_s']:.4f} | "
+            f"{rl['t_memory_s']:.4f} | {rl['t_collective_s']:.4f} | "
+            f"{rl['bottleneck']} | {rl['useful_flops_ratio']:.2f} | "
+            f"{rl['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def render_dryrun(rows) -> str:
+    out = []
+    out.append("| arch | shape | mesh | status | compile s | args GiB | "
+               "temp GiB | collective ops (corrected) |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    rows = sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in rows:
+        st = r.get("status", "?")
+        if st != "OK":
+            short = "SKIP" if st.startswith("SKIP") else st[:60]
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{short} | | | | |")
+            continue
+        m = r["memory"]
+        ops = r.get("collective_ops", {})
+        ops_s = " ".join(f"{k.replace('collective-', 'c')}:{int(v)}"
+                         for k, v in sorted(ops.items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+            f"{r.get('compile_s', '')} | "
+            f"{fmt_bytes(m['argument_bytes'])} | "
+            f"{fmt_bytes(m['temp_bytes'])} | {ops_s} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="reports/dryrun")
+    ap.add_argument("--mesh", default="1pod")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--kind", default="roofline",
+                    choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    rows = load(args.dir, args.mesh, args.tag)
+    print(render(rows) if args.kind == "roofline" else render_dryrun(rows))
+
+
+if __name__ == "__main__":
+    main()

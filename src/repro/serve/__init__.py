@@ -1,0 +1,1 @@
+from .engine import ServeEngine, build_serve_fns  # noqa: F401

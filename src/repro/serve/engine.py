@@ -1,0 +1,65 @@
+"""Batched serving engine: prefill + decode with static-shape KV caches.
+
+``ServeEngine`` is the example-facing loop: accepts a batch of prompts,
+prefills once, then decodes greedily/temperature-sampled to max_new_tokens.
+``build_serve_fns`` returns the jitted prefill/decode closures the launcher
+lowers in the dry-run (decode_32k / long_500k cells lower ``decode_fn``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelApi
+
+
+def build_serve_fns(model: ModelApi, max_len: int):
+    @jax.jit
+    def prefill_fn(params, tokens, extras):
+        return model.prefill(params, tokens, max_len, **extras)
+
+    @jax.jit
+    def decode_fn(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return prefill_fn, decode_fn
+
+
+@dataclass
+class ServeEngine:
+    model: ModelApi
+    params: Any
+    max_len: int
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        self.prefill_fn, self.decode_fn = build_serve_fns(self.model,
+                                                          self.max_len)
+
+    def generate(self, tokens: np.ndarray, max_new_tokens: int,
+                 extras: dict | None = None, key=None) -> np.ndarray:
+        """tokens: (B, S) prompt batch -> (B, max_new_tokens) completions."""
+        extras = extras or {}
+        b, s = tokens.shape
+        if s + max_new_tokens > self.max_len:
+            raise ValueError(f"{s}+{max_new_tokens} exceeds cache {self.max_len}")
+        cache, logits = self.prefill_fn(self.params, jnp.asarray(tokens),
+                                        extras)
+        out = []
+        key = key if key is not None else jax.random.PRNGKey(0)
+        for i in range(max_new_tokens):
+            if self.temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits / self.temperature,
+                                             axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            nxt = nxt.astype(jnp.int32)
+            out.append(np.asarray(nxt))
+            cache, logits = self.decode_fn(self.params, cache, nxt,
+                                           jnp.asarray(s + i, jnp.int32))
+        return np.stack(out, axis=1)

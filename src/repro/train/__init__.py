@@ -1,0 +1,1 @@
+from .steps import BuiltStep, build, flat_param_len  # noqa: F401

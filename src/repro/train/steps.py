@@ -1,0 +1,166 @@
+"""Train-step builders — three execution modes over one model API.
+
+  zero1      partial-manual shard_map: data axes MANUAL (the paper's
+             circulant collectives drive grad reduce-scatter + param
+             allgather; optimizer state sharded 1/P), model axis AUTO
+             (GSPMD tensor-parallel).  Default for archs whose TP-sharded
+             params fit per chip.
+  fsdp_auto  pure GSPMD: params/m/v sharded over (data+model) via
+             NamedSharding; XLA inserts its own collectives.  For the
+             >=90B archs.
+  single     plain jit, no mesh — CPU smoke tests and the quickstart.
+
+Every mode returns (step_fn, init_opt_fn, shardings) with the same
+signature:  step_fn(params, opt, batch) -> (params, opt, metrics).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import ModelApi, ShardingRecipe, make_param_specs
+from repro.optim import adamw as adamw_mod
+from repro.optim.adamw import (AdamWConfig, AdamState, TreeAdamState,
+                               init_state, init_tree_state, update_tree)
+from repro.optim.zero1 import (GradSyncConfig, Zero1State, init_zero1_state,
+                               zero1_state_specs, zero1_step)
+
+
+@dataclass
+class BuiltStep:
+    step_fn: Callable          # (params, opt, batch) -> (params, opt, metrics)
+    init_opt: Callable         # (params) -> opt state (matching sharding)
+    in_shardings: Any = None   # for dry-run lowering
+    batch_spec: Any = None
+    param_spec_tree: Any = None
+    opt_spec: Any = None
+
+
+def flat_param_len(params, world: int) -> int:
+    """Padded fused-gradient length (static, from leaf shapes)."""
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    return n + ((-n) % world)
+
+
+# ---------------------------------------------------------------------------
+# single (no mesh)
+# ---------------------------------------------------------------------------
+
+def build_single(model: ModelApi, opt_cfg: AdamWConfig) -> BuiltStep:
+    @jax.jit
+    def step_fn(params, opt, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        new_params, new_opt, gnorm = update_tree(opt_cfg, opt, grads, params)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm,
+                                     "lr": adamw_mod.lr_at(opt_cfg,
+                                                           new_opt.step)}
+
+    return BuiltStep(step_fn=step_fn, init_opt=init_tree_state)
+
+
+# ---------------------------------------------------------------------------
+# zero1 (manual data axes via the paper's collectives)
+# ---------------------------------------------------------------------------
+
+def build_zero1(model: ModelApi, mesh: Mesh, recipe: ShardingRecipe,
+                opt_cfg: AdamWConfig, sync: GradSyncConfig,
+                remat: bool = True) -> BuiltStep:
+    # Collective order: fastest axis first (intra-pod before cross-pod) so
+    # the full-volume first RS phase stays on fast links (DESIGN §2).
+    collective_axes = tuple(reversed(recipe.data_axes))
+    world = int(np.prod([mesh.shape[a] for a in recipe.data_axes]))
+
+    # Inside the manual region the data axes are already per-shard: the
+    # inner model must only constrain over the AUTO (model) axis.
+    from dataclasses import replace as _dc_replace
+    from repro.models import build as _build_model
+    inner_recipe = _dc_replace(recipe, data_axes=())
+    inner_model = _build_model(model.cfg, recipe=inner_recipe, remat=remat)
+
+    def inner(params, opt, batch):
+        return zero1_step(
+            jax.value_and_grad(inner_model.loss), params, opt, batch,
+            axis_names=collective_axes, opt_cfg=opt_cfg, sync=sync)
+
+    # Manual-axis specs: params replicated over data axes (model axis is
+    # auto — rides on the arrays' NamedShardings); batch sharded over data;
+    # opt m/v PER-LEAF sharded over dim 0 (zero leaves) or replicated
+    # (tiny leaves / the no-ZeRO allreduce baseline).
+    pspec = P()
+    batch_spec = P(recipe.data_axes)
+
+    def batch_specs_for(batch):
+        return jax.tree.map(lambda _: batch_spec, batch)
+
+    def opt_specs_for(params):
+        return zero1_state_specs(params, world, sync, collective_axes)
+
+    # NB: must run under jit — JAX 0.8.2's EAGER shard_map dispatch with
+    # check_vma=False + partial-auto axes trips an internal _unmatch spec
+    # check (it builds P(all mesh axes) but validates against manual-only).
+    @jax.jit
+    def step_fn(params, opt, batch):
+        ospecs = opt_specs_for(params)
+        f = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: pspec, params), ospecs,
+                      batch_specs_for(batch)),
+            out_specs=(jax.tree.map(lambda _: pspec, params), ospecs,
+                       {"loss": P(), "grad_norm": P(), "lr": P()}),
+            axis_names=set(recipe.data_axes),
+            check_vma=False)
+        return f(params, opt, batch)
+
+    def init_opt(params):
+        return init_zero1_state(params, world, sync)
+
+    def opt_sharding(params):
+        ospecs = opt_specs_for(params)
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    return BuiltStep(
+        step_fn=step_fn, init_opt=init_opt,
+        batch_spec=batch_spec,
+        opt_spec=opt_sharding,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fsdp_auto (pure GSPMD)
+# ---------------------------------------------------------------------------
+
+def build_fsdp_auto(model: ModelApi, mesh: Mesh, recipe: ShardingRecipe,
+                    opt_cfg: AdamWConfig) -> BuiltStep:
+    batch_spec = P(recipe.data_axes)
+
+    @jax.jit
+    def step_fn(params, opt, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        new_params, new_opt, gnorm = update_tree(opt_cfg, opt, grads, params)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm,
+                                     "lr": adamw_mod.lr_at(opt_cfg,
+                                                           new_opt.step)}
+
+    return BuiltStep(step_fn=step_fn, init_opt=init_tree_state,
+                     batch_spec=batch_spec)
+
+
+def build(mode: str, model: ModelApi, opt_cfg: AdamWConfig,
+          mesh: Mesh | None = None, recipe: ShardingRecipe | None = None,
+          sync: GradSyncConfig | None = None, remat: bool = True) -> BuiltStep:
+    if mode == "single":
+        return build_single(model, opt_cfg)
+    if mode == "zero1":
+        return build_zero1(model, mesh, recipe, opt_cfg,
+                           sync or GradSyncConfig(), remat=remat)
+    if mode == "fsdp_auto":
+        return build_fsdp_auto(model, mesh, recipe, opt_cfg)
+    raise ValueError(f"unknown mode {mode}")

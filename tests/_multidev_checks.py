@@ -1,0 +1,196 @@
+"""Subprocess worker: validates the shard_map collectives on N fake CPU
+devices against the numpy simulator oracle and checks HLO structure
+(collective-permute counts = Theorem 1/2 round counts).
+
+Run:  python tests/_multidev_checks.py <ndev>
+Exits 0 on success; prints a failure trace otherwise.
+
+Convention: global inputs are (p, ...) arrays sharded on axis 0, so each
+rank's shard has leading dim 1; collective lambdas unwrap with v[0] and
+rewrap with out[None].
+"""
+import os
+import sys
+
+NDEV = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={NDEV} "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import collectives as C  # noqa: E402
+from repro.core import simulator as sim  # noqa: E402
+from repro.core.schedule import ceil_log2  # noqa: E402
+
+mesh = jax.make_mesh((NDEV,), ("x",))
+rng = np.random.default_rng(42)
+
+p = NDEV
+BLK = 6
+
+
+def run1(fn, x_global):
+    """Apply per-rank fn under shard_map; fn sees v[0], returns out;
+    result is stacked (p, ...)."""
+    f = jax.jit(jax.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
+                              in_specs=(P("x"),), out_specs=P("x")))
+    return np.asarray(f(x_global))
+
+
+def check(name, cond=True):
+    if not cond:
+        raise AssertionError(f"FAILED: {name}")
+    print(f"ok: {name}")
+
+
+def make_global(extra=()):  # (p, p*BLK, *extra): row r = rank r's input vector
+    return rng.standard_normal((p, p * BLK, *extra)).astype(np.float32)
+
+
+def sim_inputs(xg):
+    return [[xg[r, i * BLK:(i + 1) * BLK] for i in range(p)] for r in range(p)]
+
+
+# ---------------------------------------------------------------------------
+# reduce-scatter: all schedules + baselines vs simulator oracle
+# ---------------------------------------------------------------------------
+xg = make_global()
+W_oracle, stats = sim.simulate_reduce_scatter(sim_inputs(xg))
+stats.assert_theorem1(p)
+
+scheds = ["halving", "power2", "fully_connected", "sqrt"]
+for sched in scheds:
+    out = run1(lambda v, s=sched: C.circulant_reduce_scatter(v, "x", schedule=s), xg)
+    for r in range(p):
+        np.testing.assert_allclose(out[r], W_oracle[r], rtol=2e-5, atol=2e-5)
+    check(f"circulant_reduce_scatter[{sched}] == oracle (p={p})")
+
+impls = ["ring", "xla"] + (["recursive_halving"] if p & (p - 1) == 0 else [])
+for impl in impls:
+    out = run1(lambda v, i=impl: C.reduce_scatter(v, "x", impl=i), xg)
+    for r in range(p):
+        np.testing.assert_allclose(out[r], W_oracle[r], rtol=2e-5, atol=2e-5)
+    check(f"reduce_scatter[{impl}] == oracle (p={p})")
+
+# Higher-rank payloads (matrix blocks).
+xg2 = make_global(extra=(3,))
+inputs2 = [[xg2[r, i * BLK:(i + 1) * BLK] for i in range(p)] for r in range(p)]
+W2, _ = sim.simulate_reduce_scatter(inputs2)
+out = run1(lambda v: C.circulant_reduce_scatter(v, "x"), xg2)
+for r in range(p):
+    np.testing.assert_allclose(out[r], W2[r], rtol=2e-5, atol=2e-5)
+check("circulant_reduce_scatter rank-3 payload")
+
+# max-reduction (commutative non-add op)
+outmax = run1(lambda v: C.circulant_reduce_scatter(v, "x", op="max"), xg)
+Wmax, _ = sim.simulate_reduce_scatter(sim_inputs(xg), op=np.maximum)
+for r in range(p):
+    np.testing.assert_allclose(outmax[r], Wmax[r], rtol=1e-6)
+check("circulant_reduce_scatter op=max")
+
+# bf16 payload
+outb = run1(lambda v: C.circulant_reduce_scatter(v.astype(jnp.bfloat16), "x"),
+            xg)
+for r in range(p):
+    np.testing.assert_allclose(outb[r].astype(np.float32), W_oracle[r],
+                               rtol=0.05, atol=0.2)
+check("circulant_reduce_scatter bf16")
+
+# compressed rounds: int8 payload, error bounded by quantization noise
+from repro.kernels import make_compressors  # noqa: E402
+
+comp, decomp = make_compressors(group=BLK, backend="jnp")
+outc = run1(lambda v: C.circulant_reduce_scatter(
+    v.reshape(p, BLK), "x", compress=comp, decompress=decomp).reshape(BLK), xg)
+scale = np.abs(xg).max() / 127.0
+for r in range(p):
+    np.testing.assert_allclose(outc[r], W_oracle[r], atol=scale * p, rtol=0.1)
+check("circulant_reduce_scatter int8-compressed rounds")
+
+# ---------------------------------------------------------------------------
+# allgather
+# ---------------------------------------------------------------------------
+blocks = rng.standard_normal((p, BLK)).astype(np.float32)
+for sched in scheds:
+    out = run1(lambda v, s=sched: C.circulant_allgather(v, "x", schedule=s),
+               blocks)
+    out = out.reshape(p, p, BLK)
+    for r in range(p):
+        np.testing.assert_array_equal(out[r], blocks)
+    check(f"circulant_allgather[{sched}] (p={p})")
+
+# ---------------------------------------------------------------------------
+# allreduce: value == sum, replication, determinism
+# ---------------------------------------------------------------------------
+ref_sum = xg.sum(axis=0)
+for sched in scheds:
+    out = run1(lambda v, s=sched: C.circulant_allreduce(v, "x", schedule=s), xg)
+    np.testing.assert_allclose(out[0], ref_sum, rtol=2e-5, atol=2e-5)
+    for r in range(1, p):
+        np.testing.assert_array_equal(out[r], out[0])
+    check(f"circulant_allreduce[{sched}] == sum, replicated (p={p})")
+
+out1 = run1(lambda v: C.circulant_allreduce(v, "x"), xg)
+out2 = run1(lambda v: C.circulant_allreduce(v, "x"), xg)
+np.testing.assert_array_equal(out1, out2)
+check("circulant_allreduce bit-determinism")
+
+out = run1(lambda v: C.ring_allreduce(v, "x"), xg)
+np.testing.assert_allclose(out[0], ref_sum, rtol=2e-5, atol=2e-5)
+check("ring_allreduce == sum")
+
+# ---------------------------------------------------------------------------
+# alltoall by concatenation (paper §4)
+# ---------------------------------------------------------------------------
+a2a_in = rng.standard_normal((p, p, BLK)).astype(np.float32)  # [src, dst, blk]
+out = run1(lambda v: C.circulant_alltoall(v, "x"), a2a_in)
+for r in range(p):
+    for j in range(p):
+        np.testing.assert_array_equal(out[r, j], a2a_in[j, r])
+check(f"circulant_alltoall (p={p})")
+
+# ---------------------------------------------------------------------------
+# HLO structure: Theorem 1/2 round counts visible as collective-permutes
+# ---------------------------------------------------------------------------
+def count_cp(fn):
+    f = jax.jit(jax.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
+                              in_specs=(P("x"),), out_specs=P("x")))
+    txt = f.lower(jax.ShapeDtypeStruct((p, p * BLK), jnp.float32)).as_text()
+    return txt.count("collective_permute")
+
+
+q = ceil_log2(p)
+n_rs = count_cp(lambda v: C.circulant_reduce_scatter(v, "x"))
+check(f"HLO: RS has {q} collective-permutes (got {n_rs})", n_rs == q)
+n_ar = count_cp(lambda v: C.circulant_allreduce(v, "x"))
+check(f"HLO: AR has {2 * q} collective-permutes (got {n_ar})", n_ar == 2 * q)
+n_ring = count_cp(lambda v: C.ring_reduce_scatter(v, "x"))
+check(f"HLO: ring RS has {p - 1} collective-permutes (got {n_ring})",
+      n_ring == p - 1)
+
+# ---------------------------------------------------------------------------
+# Hierarchical (2-axis) allreduce on a (2, NDEV//2) mesh
+# ---------------------------------------------------------------------------
+if NDEV % 2 == 0 and NDEV >= 4:
+    mesh2 = jax.make_mesh((2, NDEV // 2), ("pod", "data"))
+    n2 = NDEV // 2
+    f = jax.jit(jax.shard_map(
+        lambda v: C.hierarchical_allreduce(v[0, 0], ("data", "pod"))[None, None],
+        mesh=mesh2, in_specs=(P("pod", "data"),),
+        out_specs=P("pod", "data")))
+    tot = 8 * n2
+    x2 = rng.standard_normal((2, n2, tot)).astype(np.float32)
+    out = np.asarray(f(x2))
+    ref = x2.sum(axis=(0, 1))
+    for i in range(2):
+        for j in range(n2):
+            np.testing.assert_allclose(out[i, j], ref, rtol=2e-5, atol=2e-5)
+    check("hierarchical_allreduce over (data, pod)")
+
+print(f"ALL MULTIDEV CHECKS PASSED (ndev={NDEV})")

@@ -1,0 +1,74 @@
+"""Cost model tests: Corollary 1 closed form == per-round sum; Corollary 3
+bound; ring/circulant crossover structure (motivates §Perf schedule work)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cost_model as cm
+from repro.core.schedule import ceil_log2
+
+MODEL = cm.CommModel(alpha=1e-6, beta=1e-9, gamma=2.5e-10)
+
+
+@given(st.integers(2, 3000), st.integers(1, 10**9))
+@settings(max_examples=100, deadline=None)
+def test_corollary1_matches_per_round_sum(p, m):
+    t_rounds = cm.t_reduce_scatter(float(m), p, MODEL)
+    t_closed = cm.t_corollary1(float(m), p, MODEL)
+    assert math.isclose(t_rounds, t_closed, rel_tol=1e-9)
+
+
+@given(st.integers(2, 500), st.integers(1, 10**7))
+@settings(max_examples=50, deadline=None)
+def test_corollary3_bound_holds(p, m):
+    """Corollary 3 is stated for Algorithm 1's halving schedule
+    (ceil(log2 p) rounds, each moving at most m elements).  power2 has the
+    same round count so the same bound holds; other Corollary-2 schedules
+    obey the generalized q_sched * (alpha + (beta+gamma) m) bound."""
+    bound = cm.t_corollary3_bound(float(m), p, MODEL)
+    for sched in ["halving", "power2"]:
+        assert cm.t_reduce_scatter(float(m), p, MODEL, sched) <= bound + 1e-12
+    from repro.core.schedule import get_skips
+    for sched in ["fully_connected", "sqrt"]:
+        q = len(get_skips(p, sched))
+        gen_bound = q * (MODEL.alpha + (MODEL.beta + MODEL.gamma) * m)
+        assert cm.t_reduce_scatter(float(m), p, MODEL, sched) <= gen_bound + 1e-12
+
+
+def test_allreduce_is_two_phase_sum():
+    p, m = 22, 1 << 20
+    t = cm.t_allreduce(m, p, MODEL)
+    t2 = cm.t_reduce_scatter(m, p, MODEL) + cm.t_allgather(m, p, MODEL)
+    assert math.isclose(t, t2, rel_tol=1e-12)
+    # Theorem 2 closed form: 2*alpha*q + 2*beta*(p-1)/p*m + gamma*(p-1)/p*m
+    closed = (2 * MODEL.alpha * ceil_log2(p)
+              + (2 * MODEL.beta + MODEL.gamma) * (p - 1) / p * m)
+    assert math.isclose(t, closed, rel_tol=1e-9)
+
+
+def test_latency_regime_circulant_wins():
+    """Small m: ceil(log2 p) rounds beat p-1 rounds (the paper's point)."""
+    p, m = 256, 64
+    assert cm.t_allreduce(m, p, MODEL) < cm.t_ring_allreduce(m, p, MODEL)
+
+
+def test_bandwidth_regime_topology_oblivious_tie():
+    """Large m under the paper's (hop-free) model: circulant == ring volume,
+    so circulant still wins on rounds."""
+    p, m = 64, 1 << 28
+    assert cm.t_allreduce(m, p, MODEL) <= cm.t_ring_allreduce(m, p, MODEL)
+
+
+def test_torus_hop_amplification_flips_large_m():
+    """Beyond-paper: on a torus, large skips burn min(s, p-s) links; for
+    large m the ring wins — the crossover exists and is finite."""
+    p = 64
+    m_small, m_big = 1024, 1 << 26
+    assert (cm.t_allreduce(m_small, p, MODEL, torus=True)
+            < cm.t_ring_allreduce(m_small, p, MODEL))
+    assert (cm.t_allreduce(m_big, p, MODEL, torus=True)
+            > cm.t_ring_allreduce(m_big, p, MODEL))
+    x = cm.crossover_m(p, MODEL)
+    assert 1024 < x < (1 << 26)

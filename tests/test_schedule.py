@@ -1,0 +1,142 @@
+"""Property + unit tests for the paper's skip schedules (Theorem 1 structure,
+Corollary 2 validity, §3 max-run property)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import schedule as S
+
+
+@given(st.integers(1, 5000))
+def test_halving_skip_count_is_ceil_log2(p):
+    skips = S.halving_skips(p)
+    assert len(skips) == S.ceil_log2(p)
+    assert list(skips) == sorted(skips, reverse=True)
+    if p > 1:
+        assert skips[-1] == 1
+
+
+@given(st.integers(2, 2000))
+def test_halving_is_valid_corollary2_schedule(p):
+    assert S.is_valid_schedule(p, S.halving_skips(p))
+
+
+@given(st.integers(2, 512))
+def test_power2_and_fully_connected_valid(p):
+    assert S.is_valid_schedule(p, S.power2_skips(p))
+    assert S.is_valid_schedule(p, S.fully_connected_skips(p))
+
+
+@given(st.integers(2, 512))
+def test_sqrt_schedule_valid(p):
+    assert S.is_valid_schedule(p, S.sqrt_skips(p))
+
+
+@given(st.integers(2, 1000))
+def test_every_offset_decomposes_greedily_under_halving(p):
+    """The paper: any i is a sum of different skips s_k <= i — the greedy
+    decomposition exists for the halving schedule."""
+    skips = S.halving_skips(p)
+    for i in range(1, p):
+        parts = S.decompose(i, skips)
+        assert sum(parts) == i
+        assert len(set(parts)) == len(parts)
+        assert all(x in skips for x in parts)
+
+
+@given(st.integers(2, 2000))
+def test_blocks_sent_exactly_p_minus_1(p):
+    """Theorem 1 volume: sum over rounds of (s_{k-1} - s_k) == p - 1."""
+    plans = S.reduce_scatter_plan(p)
+    assert S.total_blocks(plans) == p - 1
+    # and the allgather phase mirrors it (Theorem 2's second p-1):
+    assert S.total_blocks(S.allgather_plan(p)) == p - 1
+
+
+@given(st.integers(2, 2000))
+def test_max_block_run_at_most_ceil_p_over_2(p):
+    """Paper §3: halving scheme never sends a run longer than ceil(p/2)."""
+    assert S.max_block_run(S.reduce_scatter_plan(p)) <= (p + 1) // 2
+
+
+def test_halving_max_run_is_floor_p_over_2_exactly():
+    """The longest run under halving is the first round's
+    p - ceil(p/2) = floor(p/2) — tight against the paper's ceil(p/2) bound.
+    (The paper's remark that straight doubling lacks the property concerns
+    Bruck-style buffer rotation copies; in our nested-range formulation
+    both schedules keep contiguous, non-wrapping runs.)"""
+    for p in range(2, 300):
+        assert S.max_block_run(S.reduce_scatter_plan(p)) == p // 2
+
+
+def test_paper_example_p22_skips():
+    """Worked example in §2.1: p=22 gives skips 11, 6, 3, 2, 1."""
+    assert S.halving_skips(22) == (11, 6, 3, 2, 1)
+
+
+def test_paper_example_p22_receive_sources():
+    """§2.1 example: processor 21 receives partial sums from 10, 15, 18,
+    19, 20 in the five rounds."""
+    p = 22
+    plans = S.reduce_scatter_plan(p)
+    r = 21
+    froms = [(r - pl.skip) % p for pl in plans]
+    assert froms == [10, 15, 18, 19, 20]
+
+
+def test_paper_example_p22_round_partial_sums():
+    """§2.1 example, full check: per-round arrivals into W at rank 21.
+
+    The paper's display has a small typo — (x_20 + x_9) is printed on the
+    skip-2 line but can only arrive with the final skip-1 round (sender 19
+    has no incoming path from rank 20 by round 4: 20->19 would need skip
+    -1 mod 22 = 21, not in {11,6,3,2}).  We assert the corrected grouping;
+    the union and the per-pair bracketing match the paper.
+    """
+    arrivals = S.reduction_tree(22)
+    # Shift to rank-21 view: reduction_tree traces rank 0; the paper's rank
+    # is 21, so sources shift by +21 mod 22.
+    shifted = {k: tuple(sorted((x + 21) % 22 for x in v))
+               for k, v in arrivals.items()}
+    assert shifted[0] == (10,)
+    assert shifted[1] == (4, 15)
+    assert shifted[2] == (1, 7, 12, 18)
+    assert shifted[3] == (2, 5, 8, 13, 16, 19)
+    assert shifted[4] == (0, 3, 6, 9, 11, 14, 17, 20)
+    # Theorem 1: all 21 = p-1 sources arrive exactly once.
+    allsrc = sorted(x for v in shifted.values() for x in v)
+    assert allsrc == [i for i in range(22) if i != 21]
+
+
+@given(st.integers(2, 300))
+def test_reduction_tree_spans_all_ranks(p):
+    arrivals = S.reduction_tree(p)
+    seen = [x for v in arrivals.values() for x in v]
+    assert len(seen) == p - 1  # each source folded exactly once
+    assert set(seen) | {0} == set(range(p))
+
+
+@given(st.integers(2, 256), st.integers(2, 16))
+def test_two_level_schedule_valid(ngroups, group):
+    p = ngroups * group
+    skips = S.two_level_skips(p, group)
+    assert S.is_valid_schedule(p, skips)
+
+
+def test_invalid_schedules_rejected():
+    assert not S.is_valid_schedule(8, (4, 2))          # no trailing 1
+    assert not S.is_valid_schedule(8, (2, 4, 1))       # not decreasing
+    assert not S.is_valid_schedule(8, (4, 4, 1))       # duplicate
+    assert not S.is_valid_schedule(16, (5, 4, 3, 2, 1))  # fold-liveness
+    assert not S.is_valid_schedule(10, (7, 2, 1))      # 4..6 unreachable
+
+
+def test_plan_ranges_partition_1_to_p():
+    for p in [2, 3, 7, 22, 64, 100, 257]:
+        for sched in ["halving", "power2", "fully_connected", "sqrt"]:
+            plans = S.reduce_scatter_plan(p, sched)
+            covered = sorted(i for pl in plans for i in range(pl.lo, pl.hi))
+            assert covered == list(range(1, p)), (p, sched)

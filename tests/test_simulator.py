@@ -1,0 +1,154 @@
+"""Simulator tests = direct validation of the paper's Theorems 1 & 2 and the
+§4 all-to-all observation, over many p (powers of two and not)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import simulator as sim
+from repro.core.schedule import ceil_log2
+
+RNG = np.random.default_rng(0)
+
+
+def make_inputs(p, blk, dtype=np.float64, seed=0):
+    rng = np.random.default_rng(seed)
+    return [[rng.standard_normal(blk).astype(dtype) for _ in range(p)]
+            for _ in range(p)]
+
+
+@pytest.mark.parametrize("p", [2, 3, 4, 5, 7, 8, 13, 16, 22, 31, 32, 57, 64, 100])
+def test_reduce_scatter_correct_and_theorem1(p):
+    inputs = make_inputs(p, blk=5)
+    W, stats = sim.simulate_reduce_scatter(inputs)
+    ref = sim.ref_reduce_scatter(inputs)
+    for r in range(p):
+        np.testing.assert_allclose(W[r], ref[r], rtol=1e-10, atol=1e-10)
+    stats.assert_theorem1(p)
+
+
+@pytest.mark.parametrize("p", [2, 3, 5, 8, 22, 37, 64])
+def test_allreduce_correct_and_theorem2(p):
+    inputs = make_inputs(p, blk=3)
+    W, stats = sim.simulate_allreduce(inputs)
+    ref = sim.ref_allreduce(inputs)
+    for r in range(p):
+        for i in range(p):
+            np.testing.assert_allclose(W[r][i], ref[r][i], rtol=1e-10)
+    stats.assert_theorem2(p)
+
+
+@pytest.mark.parametrize("p", [2, 3, 6, 17, 32])
+def test_allgather_correct(p):
+    blocks = [RNG.standard_normal(4) for _ in range(p)]
+    out, stats = sim.simulate_allgather(blocks)
+    for r in range(p):
+        for j in range(p):
+            np.testing.assert_array_equal(out[r][j], blocks[j])
+    assert stats.rounds == ceil_log2(p)
+    assert all(b == p - 1 for b in stats.blocks_sent)
+
+
+@given(st.integers(2, 40), st.integers(1, 8), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_reduce_scatter_property(p, blk, seed):
+    inputs = make_inputs(p, blk, seed=seed)
+    W, stats = sim.simulate_reduce_scatter(inputs)
+    ref = sim.ref_reduce_scatter(inputs)
+    for r in range(p):
+        np.testing.assert_allclose(W[r], ref[r], rtol=1e-9, atol=1e-9)
+    stats.assert_theorem1(p)
+
+
+@pytest.mark.parametrize("schedule", ["halving", "power2", "fully_connected",
+                                      "sqrt"])
+@pytest.mark.parametrize("p", [2, 5, 16, 22, 40])
+def test_corollary2_schedules_all_correct(p, schedule):
+    """Corollary 2: any valid skip sequence solves the problem (with its own
+    round count); volume stays p-1 blocks."""
+    inputs = make_inputs(p, blk=3)
+    W, stats = sim.simulate_reduce_scatter(inputs, schedule=schedule)
+    ref = sim.ref_reduce_scatter(inputs)
+    for r in range(p):
+        np.testing.assert_allclose(W[r], ref[r], rtol=1e-10)
+    assert all(b == p - 1 for b in stats.blocks_sent)
+
+
+def test_irregular_blocks_mpi_reduce_scatter_flavor():
+    """Blocks of different sizes per column (MPI_Reduce_scatter): the
+    algorithm works as long as column sizes are consistent (paper §2.1)."""
+    p = 9
+    rng = np.random.default_rng(3)
+    sizes = rng.integers(1, 7, size=p)
+    inputs = [[rng.standard_normal(sizes[i]) for i in range(p)]
+              for _ in range(p)]
+    W, stats = sim.simulate_reduce_scatter(inputs)
+    ref = sim.ref_reduce_scatter(inputs)
+    for r in range(p):
+        np.testing.assert_allclose(W[r], ref[r], rtol=1e-10)
+    stats.assert_theorem1(p)
+
+
+def test_single_nonempty_block_reduce_to_root_corollary3():
+    """Extreme case of Corollary 3: all elements in one column == MPI_Reduce
+    to that root."""
+    p, m = 12, 24
+    rng = np.random.default_rng(5)
+    root = 7
+    inputs = [[rng.standard_normal(m) if i == root else np.zeros(0)
+               for i in range(p)] for _ in range(p)]
+    W, stats = sim.simulate_reduce_scatter(inputs)
+    ref = sum(inputs[r][root] for r in range(p))
+    np.testing.assert_allclose(W[root], ref, rtol=1e-10)
+    stats.assert_theorem1(p)
+
+
+@pytest.mark.parametrize("p", [2, 4, 6, 11, 16, 22])
+def test_alltoall_by_concatenation(p):
+    """Paper §4: reduce-scatter with ⊕ = concatenation solves all-to-all in
+    ceil(log2 p) rounds."""
+    rng = np.random.default_rng(9)
+    inputs = [[rng.standard_normal(3) for _ in range(p)] for _ in range(p)]
+    out, stats = sim.simulate_alltoall(inputs)
+    for r in range(p):
+        for j in range(p):
+            np.testing.assert_array_equal(out[r][j], inputs[j][r])
+    assert stats.rounds == ceil_log2(p)
+
+
+def test_alltoall_volume_amplification_reported():
+    """The A2A volume exceeds p-1 blocks (Bruck trade-off) — quantified."""
+    p = 16
+    inputs = [[np.ones(1) for _ in range(p)] for _ in range(p)]
+    _, stats = sim.simulate_alltoall(inputs)
+    assert stats.blocks_sent[0] > p - 1
+    # For pow2 p under halving==doubling: exactly (p/2)*log2(p)
+    assert stats.blocks_sent[0] == (p // 2) * ceil_log2(p)
+
+
+def test_commutative_but_order_sensitive_op_is_deterministic():
+    """All ranks reduce in the same schedule order ⇒ identical results for a
+    fixed p (determinism claim, DESIGN §6) even for float addition."""
+    p = 22
+    inputs = make_inputs(p, blk=7, dtype=np.float32, seed=11)
+    W1, _ = sim.simulate_reduce_scatter(inputs)
+    W2, _ = sim.simulate_reduce_scatter(inputs)
+    for a, b in zip(W1, W2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_noncommutative_op_breaks_without_right_order():
+    """§2.1 closing remark: the algorithm heavily exploits commutativity —
+    a non-commutative ⊕ gives a different (wrong) result in general."""
+    p = 6
+    rng = np.random.default_rng(13)
+    inputs = [[rng.standard_normal(2) for _ in range(p)] for _ in range(p)]
+
+    def noncomm(a, b):  # 'first' projection mixed with subtraction
+        return a - 2 * b
+
+    W, _ = sim.simulate_reduce_scatter(inputs, op=noncomm)
+    # Sequential rank-order fold:
+    ref = sim.ref_reduce_scatter(inputs, op=noncomm)
+    diffs = [np.abs(W[r] - ref[r]).max() for r in range(p)]
+    assert max(diffs) > 1e-9
