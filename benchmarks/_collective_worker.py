@@ -12,16 +12,17 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core import collectives as C  # noqa: E402
 
 NDEV = 8
-mesh = jax.make_mesh((NDEV,), ("x",))
+mesh = compat.make_mesh((NDEV,), ("x",))
 rng = np.random.default_rng(0)
 
 
 def timed(fn, x, iters=10):
-    f = jax.jit(jax.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
-                              in_specs=(P("x"),), out_specs=P("x")))
+    f = jax.jit(compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
+                                 in_specs=(P("x"),), out_specs=P("x")))
     f(x).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):

@@ -23,16 +23,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import collectives as C
 from repro.core.schedule import (ceil_log2, get_skips, reduction_tree)
 
 P_DEV = 8
-mesh = jax.make_mesh((P_DEV,), ("x",))
+mesh = compat.make_mesh((P_DEV,), ("x",))
 
 
 def shmap(fn):
-    return jax.jit(jax.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
-                                 in_specs=(P("x"),), out_specs=P("x")))
+    return jax.jit(compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
+                                    in_specs=(P("x"),), out_specs=P("x")))
 
 
 def main():
@@ -65,8 +66,8 @@ def main():
 
     # HLO structure = the paper's round counts
     def count_cp(fn):
-        t = jax.jit(jax.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
-                                  in_specs=(P('x'),), out_specs=P('x'))
+        t = jax.jit(compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
+                                     in_specs=(P('x'),), out_specs=P('x'))
                     ).lower(jax.ShapeDtypeStruct((p, p * 4), jnp.float32)
                             ).as_text()
         return t.count("collective_permute")

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from .schedule import (allgather_plan, ceil_log2, reduce_scatter_plan)
 
 Array = jax.Array
@@ -91,6 +92,7 @@ def circulant_reduce_scatter(
     *,
     schedule: str = "halving",
     op: str | ReduceFn = "add",
+    group: int | None = None,
     compress: Callable[[Array], Any] | None = None,
     decompress: Callable[[Any], Array] | None = None,
 ) -> Array:
@@ -102,23 +104,22 @@ def circulant_reduce_scatter(
       send R[s_k : s_{k-1}] to (r + s_k) — one ppermute —
       fold the received blocks into R[0 : s_{k-1} - s_k].
     The live buffer shrinks from p blocks to 1; exactly p-1 blocks are
-    sent/received/reduced per rank (Theorem 1).
+    sent/received/reduced per rank (Theorem 1).  ``group`` parameterizes
+    the two_level schedule (intra-group size; ignored otherwise).
     """
     reduce_fn = _resolve_op(op)
-    p = lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     if p == 1:
         return x
     r = lax.axis_index(axis_name)
     R = _as_blocks(x, p)
     # Rotated initial copy: R[i] = V[(r + i) mod p]   (paper: the gamma*m copy)
     R = jnp.roll(R, -r, axis=0)
-    for pl in reduce_scatter_plan(p, schedule):
+    for pl in reduce_scatter_plan(p, schedule, group):
         payload = R[pl.lo:pl.hi]
         if compress is not None:
             payload = compress(payload)
-        T = jax.tree.map(
-            lambda leaf: lax.ppermute(leaf, axis_name, _fwd_perm(p, pl.skip)),
-            payload)
+        T = compat.ppermute(payload, axis_name, _fwd_perm(p, pl.skip))
         if decompress is not None:
             T = decompress(T)
         nb = pl.nblocks
@@ -136,6 +137,7 @@ def circulant_allgather(
     axis_name: str,
     *,
     schedule: str = "halving",
+    group: int | None = None,
 ) -> Array:
     """Gather rank blocks in rank order.  ``x``: rank r's block
     (blk, *rest); returns (p*blk, *rest) identical on all ranks.
@@ -145,14 +147,14 @@ def circulant_allgather(
     receive into R[s : s'] from (r + s).  The buffer grows from 1 block to
     p; p-1 blocks communicated per rank.
     """
-    p = lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     if p == 1:
         return x
     r = lax.axis_index(axis_name)
     R = x[None]  # (1, blk, *rest) — rotated coords: R[i] = block of (r+i)
-    for pl in allgather_plan(p, schedule):
+    for pl in allgather_plan(p, schedule, group):
         payload = R[:pl.nblocks]
-        T = lax.ppermute(payload, axis_name, _bwd_perm(p, pl.skip))
+        T = compat.ppermute(payload, axis_name, _bwd_perm(p, pl.skip))
         R = jnp.concatenate([R, T], axis=0)
     out = jnp.roll(R, r, axis=0)  # un-rotate: out[j] = block of rank j
     return out.reshape(p * x.shape[0], *x.shape[1:])
@@ -168,15 +170,16 @@ def circulant_allreduce(
     *,
     schedule: str = "halving",
     op: str | ReduceFn = "add",
+    group: int | None = None,
     compress: Callable[[Array], Any] | None = None,
     decompress: Callable[[Any], Array] | None = None,
 ) -> Array:
     """Paper Algorithm 2: reduce-scatter + reversed allgather.
     2*ceil(log2 p) ppermutes, 2(p-1) blocks moved, p-1 reductions/rank."""
     w = circulant_reduce_scatter(
-        x, axis_name, schedule=schedule, op=op,
+        x, axis_name, schedule=schedule, op=op, group=group,
         compress=compress, decompress=decompress)
-    return circulant_allgather(w, axis_name, schedule=schedule)
+    return circulant_allgather(w, axis_name, schedule=schedule, group=group)
 
 
 # ---------------------------------------------------------------------------
@@ -199,7 +202,7 @@ def circulant_alltoall(
     over a stacked payload.  Volume is (p/2)*ceil(log2 p) blocks per rank
     (the classic Bruck trade-off: round-optimal, not volume-optimal).
     """
-    p = lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     if p == 1:
         return x
     r = lax.axis_index(axis_name)
@@ -211,7 +214,7 @@ def circulant_alltoall(
         # Stack every array sent this round into ONE ppermute payload.
         send_entries = [e for i in range(pl.lo, pl.hi) for e in slots[i]]
         stacked = jnp.stack([a for (_, a) in send_entries], axis=0)
-        T = lax.ppermute(stacked, axis_name, _fwd_perm(p, s))
+        T = compat.ppermute(stacked, axis_name, _fwd_perm(p, s))
         # Unstack with shifted source offsets; ⊕ = list concatenation.
         idx = 0
         for j in range(pl.nblocks):
@@ -240,7 +243,7 @@ def ring_reduce_scatter(x: Array, axis_name: str, *,
     In rotated coordinates the schedule is static: at step t, send
     R[p-1-t] to rank r+1, receive the peer's partial for our R[p-2-t]."""
     reduce_fn = _resolve_op(op)
-    p = lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     if p == 1:
         return x
     r = lax.axis_index(axis_name)
@@ -248,7 +251,7 @@ def ring_reduce_scatter(x: Array, axis_name: str, *,
     perm = _fwd_perm(p, 1)
     buf = R[p - 1]
     for t in range(p - 1):
-        got = lax.ppermute(buf, axis_name, perm)
+        got = compat.ppermute(buf, axis_name, perm)
         idx = p - 2 - t
         buf = reduce_fn(R[idx], got)
     return buf
@@ -257,7 +260,7 @@ def ring_reduce_scatter(x: Array, axis_name: str, *,
 def ring_allreduce(x: Array, axis_name: str, *,
                    op: str | ReduceFn = "add", **_ignored) -> Array:
     """Ring RS + ring allgather: 2(p-1) rounds, bandwidth-optimal."""
-    p = lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     if p == 1:
         return x
     r = lax.axis_index(axis_name)
@@ -266,7 +269,7 @@ def ring_allreduce(x: Array, axis_name: str, *,
     blocks = [w]
     perm = _fwd_perm(p, 1)
     for t in range(p - 1):
-        blocks.append(lax.ppermute(blocks[-1], axis_name, perm))
+        blocks.append(compat.ppermute(blocks[-1], axis_name, perm))
     # blocks[t] on rank r is block (r - t) mod p; assemble in rank order.
     stacked = jnp.stack(blocks[::-1], axis=0)  # [p-1-t] -> block r - t
     # stacked[i] = block (r + i - (p-1)) = (r + i + 1) mod p
@@ -279,7 +282,7 @@ def recursive_halving_reduce_scatter(x: Array, axis_name: str, *,
     """Hypercube/butterfly reduce-scatter — power-of-two p ONLY (the
     classic algorithm whose non-pow2 awkwardness motivates the paper)."""
     reduce_fn = _resolve_op(op)
-    p = lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     if p == 1:
         return x
     if p & (p - 1):
@@ -291,8 +294,8 @@ def recursive_halving_reduce_scatter(x: Array, axis_name: str, *,
         lowhalf, highhalf = buf[: buf.shape[0] // 2], buf[buf.shape[0] // 2:]
         bit = (r // d) % 2  # traced scalar: which half this rank keeps
         send = jnp.where(bit == 1, lowhalf, highhalf)
-        got = lax.ppermute(send, axis_name,
-                           [(i, i ^ d) for i in range(p)])
+        got = compat.ppermute(send, axis_name,
+                              [(i, i ^ d) for i in range(p)])
         keep = jnp.where(bit == 1, highhalf, lowhalf)
         buf = reduce_fn(keep, got)
         d //= 2
@@ -300,7 +303,7 @@ def recursive_halving_reduce_scatter(x: Array, axis_name: str, *,
 
 
 def xla_reduce_scatter(x: Array, axis_name: str, **_) -> Array:
-    p = lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     return lax.psum_scatter(_as_blocks(x, p), axis_name,
                             scatter_dimension=0, tiled=False)
 

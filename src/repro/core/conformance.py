@@ -1,0 +1,292 @@
+"""Cross-implementation conformance harness for the paper's collectives.
+
+Sweeps every (collective × impl × schedule × op × dtype) combination that
+is meaningful for a given axis size ``p`` and asserts, per case:
+
+  (a) agreement with a host-side numpy reference — bitwise for integer and
+      order-independent (max/min) reductions, tolerance-based for float
+      summation — and, where XLA provides a native baseline (psum_scatter /
+      psum / pmax / pmin), agreement with that baseline too;
+  (b) for the circulant implementations, that the lowered HLO contains
+      exactly ``rounds(schedule)`` collective-permute ops for
+      reduce-scatter and ``2 * rounds(schedule)`` for allreduce, where for
+      the ceil(log2 p)-round schedules (halving / power2) ``rounds ==
+      ceil_log2(p)`` — Theorems 1 and 2 machine-checked at every tested p,
+      non-powers-of-two included (they are the paper's whole point).
+
+The numeric checks need ``p`` fake XLA devices, which must be configured
+before the first jax import; run this module as its own process:
+
+    python src/repro/core/conformance.py <p>
+
+``tests/test_conformance.py`` drives one subprocess per p in
+``DEFAULT_PS``.
+"""
+import os
+import sys
+
+if __name__ == "__main__":  # set device count BEFORE the jax import below
+    import re as _re
+    _CLI_P = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+    # Strip any inherited device-count flag: XLA keeps the LAST occurrence,
+    # so a caller's exported =8 would silently override the requested p.
+    _inherited = _re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                         os.environ.get("XLA_FLAGS", ""))
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_CLI_P} " + _inherited)
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", ".."))
+
+import math  # noqa: E402
+from dataclasses import dataclass  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax import lax  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro import compat  # noqa: E402
+from repro.core import collectives as C  # noqa: E402
+from repro.core.schedule import ceil_log2, get_skips  # noqa: E402
+
+# Non-powers-of-two dominate by design — power-of-two p is the case the
+# classic algorithms already handle; the paper's claim is the general one.
+DEFAULT_PS = (2, 3, 4, 5, 6, 7, 8, 12, 16)
+SCHEDULES = ("halving", "power2", "fully_connected", "sqrt", "two_level")
+OPTIMAL_SCHEDULES = ("halving", "power2")   # exactly ceil(log2 p) rounds
+OPS = ("add", "max", "min")
+DTYPES = ("float32", "bfloat16", "int32")
+
+AXIS = "x"
+BLK = 4  # elements per block — tiny on purpose; compile time dominates
+
+_NP_OPS = {"add": np.add, "max": np.maximum, "min": np.minimum}
+
+
+def two_level_group(p: int) -> int:
+    """Intra-group size for the two_level schedule: the divisor of p
+    nearest sqrt(p).  1 for primes (two_level degenerates to halving)."""
+    divisors = [d for d in range(2, p) if p % d == 0]
+    if not divisors:
+        return 1
+    return min(divisors, key=lambda d: (abs(d - math.sqrt(p)), d))
+
+
+def schedule_rounds(p: int, schedule: str) -> int:
+    group = two_level_group(p) if schedule == "two_level" else None
+    return len(get_skips(p, schedule, group=group))
+
+
+@dataclass(frozen=True)
+class Case:
+    collective: str            # reduce_scatter | allreduce
+    impl: str                  # circulant | ring | recursive_halving | xla
+    schedule: str = "halving"
+    op: str = "add"
+    dtype: str = "float32"
+
+    @property
+    def label(self) -> str:
+        return (f"{self.collective}[{self.impl}:{self.schedule}"
+                f":{self.op}:{self.dtype}]")
+
+
+def sweep_cases(p: int) -> list[Case]:
+    """Every meaningful combination for axis size p, deduplicated: impls ×
+    both collectives at the defaults, then schedule / op / dtype sweeps on
+    the circulant implementation (the component under test)."""
+    pow2 = p & (p - 1) == 0
+    cases: list[Case] = []
+    for coll in ("reduce_scatter", "allreduce"):
+        impls = ["circulant", "ring", "xla"]
+        if coll == "reduce_scatter" and pow2 and p > 1:
+            impls.append("recursive_halving")
+        cases.extend(Case(coll, impl) for impl in impls)
+        cases.extend(Case(coll, "circulant", schedule=s)
+                     for s in SCHEDULES if s != "halving")
+        cases.extend(Case(coll, "circulant", op=op)
+                     for op in OPS if op != "add")
+        cases.extend(Case(coll, "circulant", dtype=dt)
+                     for dt in DTYPES if dt != "float32")
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# Execution helpers
+# ---------------------------------------------------------------------------
+
+def _shmap1(mesh, fn):
+    """Per-rank fn over a (p, ...) global sharded on axis 0 (the repo's
+    standard v[0]-unwrap convention)."""
+    return jax.jit(compat.shard_map(
+        lambda v: fn(v[0])[None], mesh=mesh,
+        in_specs=(P(AXIS),), out_specs=P(AXIS)))
+
+
+def _impl_fn(case: Case, p: int):
+    kw = {"op": case.op}
+    if case.impl == "circulant":
+        kw["schedule"] = case.schedule
+        if case.schedule == "two_level":
+            kw["group"] = two_level_group(p)
+    if case.collective == "reduce_scatter":
+        return lambda v: C.reduce_scatter(v, AXIS, impl=case.impl, **kw)
+    return lambda v: C.allreduce(v, AXIS, impl=case.impl, **kw)
+
+
+def _xla_baseline_fn(case: Case):
+    """Native-XLA reference for the same collective, when one exists."""
+    if case.collective == "reduce_scatter":
+        if case.op == "add":
+            return lambda v: C.xla_reduce_scatter(v, AXIS)
+        return None  # psum_scatter is add-only
+    if case.op == "add":
+        return lambda v: C.xla_allreduce(v, AXIS)
+    red = lax.pmax if case.op == "max" else lax.pmin
+    return lambda v: red(v, AXIS)
+
+
+def _make_input(case: Case, p: int, rng: np.random.Generator) -> np.ndarray:
+    n = p * BLK
+    if case.dtype == "int32":
+        return rng.integers(-50, 50, size=(p, n), dtype=np.int64).astype(
+            np.int32)
+    x = rng.standard_normal((p, n)).astype(np.float32)
+    if case.dtype == "bfloat16":
+        x = np.asarray(jnp.asarray(x, jnp.bfloat16).astype(jnp.float32))
+    return x
+
+
+def _reference(case: Case, xg: np.ndarray) -> np.ndarray:
+    """Host ground truth: op-fold over ranks (float64 accumulation for
+    float inputs; exact dtype for integers)."""
+    npop = _NP_OPS[case.op]
+    work = xg.astype(np.float64) if case.dtype != "int32" else xg
+    red = work[0]
+    for r in range(1, xg.shape[0]):
+        red = npop(red, work[r])
+    return red
+
+
+def _tolerances(case: Case, p: int) -> dict:
+    if case.dtype == "int32" or case.op in ("max", "min"):
+        return {"rtol": 0, "atol": 0}
+    if case.dtype == "bfloat16":
+        return {"rtol": 0.05, "atol": 0.05 * p}
+    return {"rtol": 2e-5, "atol": 2e-5}
+
+
+def run_case(mesh, p: int, case: Case, rng: np.random.Generator) -> None:
+    """Execute one case and assert agreement; raises AssertionError with
+    the case label on any mismatch."""
+    xg = _make_input(case, p, rng)
+    dt = jnp.dtype(case.dtype)
+    out = np.asarray(_shmap1(mesh, _impl_fn(case, p))(
+        jnp.asarray(xg, dtype=dt)))
+    ref = _reference(case, xg)
+    tol = _tolerances(case, p)
+    try:
+        if case.collective == "reduce_scatter":
+            ref_blocks = ref.reshape(p, BLK)
+            for r in range(p):
+                np.testing.assert_allclose(
+                    out[r].astype(np.float64), ref_blocks[r], **tol)
+        else:
+            for r in range(p):
+                np.testing.assert_allclose(
+                    out[r].astype(np.float64), ref, **tol)
+                # Theorem 2's output is REPLICATED — bitwise, not just close.
+                np.testing.assert_array_equal(out[r], out[0])
+    except AssertionError as e:
+        raise AssertionError(f"{case.label} vs host reference (p={p}): {e}") \
+            from None
+
+    base_fn = _xla_baseline_fn(case)
+    if base_fn is None:
+        return
+    base = np.asarray(_shmap1(mesh, base_fn)(jnp.asarray(xg, dtype=dt)))
+    try:
+        if case.dtype == "int32" or case.op in ("max", "min"):
+            np.testing.assert_array_equal(out, base)  # bitwise
+        else:
+            np.testing.assert_allclose(out.astype(np.float64),
+                                       base.astype(np.float64), **tol)
+    except AssertionError as e:
+        raise AssertionError(f"{case.label} vs XLA baseline (p={p}): {e}") \
+            from None
+
+
+# ---------------------------------------------------------------------------
+# HLO structure: Theorem 1/2 round counts
+# ---------------------------------------------------------------------------
+
+def count_collective_permutes(mesh, p: int, fn) -> int:
+    txt = _shmap1(mesh, fn).lower(
+        jax.ShapeDtypeStruct((p, p * BLK), jnp.float32)).as_text()
+    return txt.count("collective_permute")
+
+
+def check_round_counts(mesh, p: int) -> dict[str, tuple[int, int]]:
+    """Assert RS/AR collective-permute counts for every schedule; returns
+    {schedule: (n_rs, n_ar)} for reporting."""
+    results = {}
+    for sched in SCHEDULES:
+        kw = {"schedule": sched}
+        if sched == "two_level":
+            kw["group"] = two_level_group(p)
+        rounds = schedule_rounds(p, sched)
+        if sched in OPTIMAL_SCHEDULES:
+            assert rounds == ceil_log2(p), \
+                f"{sched} must be a ceil(log2 p)-round schedule (p={p})"
+        n_rs = count_collective_permutes(
+            mesh, p, lambda v, kw=kw: C.circulant_reduce_scatter(v, AXIS, **kw))
+        n_ar = count_collective_permutes(
+            mesh, p, lambda v, kw=kw: C.circulant_allreduce(v, AXIS, **kw))
+        assert n_rs == rounds, \
+            (f"RS[{sched}] p={p}: {n_rs} collective-permutes, "
+             f"want {rounds} (Theorem 1)")
+        assert n_ar == 2 * rounds, \
+            (f"AR[{sched}] p={p}: {n_ar} collective-permutes, "
+             f"want {2 * rounds} (Theorem 2)")
+        results[sched] = (n_rs, n_ar)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def run_sweep(p: int, mesh=None, verbose: bool = False) -> dict:
+    """Full conformance sweep at axis size p (requires >= p devices)."""
+    if mesh is None:
+        mesh = compat.make_mesh((p,), (AXIS,))
+    rng = np.random.default_rng(1234 + p)
+    cases = sweep_cases(p)
+    for case in cases:
+        run_case(mesh, p, case, rng)
+        if verbose:
+            print(f"ok: {case.label}")
+    rounds = check_round_counts(mesh, p)
+    if verbose:
+        for sched, (n_rs, n_ar) in rounds.items():
+            print(f"ok: HLO rounds p={p} {sched}: RS={n_rs} AR={n_ar} "
+                  f"(ceil_log2={ceil_log2(p)})")
+    return {"p": p, "n_cases": len(cases), "rounds": rounds}
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    p = int(argv[0]) if argv else 8
+    if jax.device_count() < p:
+        print(f"need {p} devices, have {jax.device_count()} "
+              f"(set XLA_FLAGS=--xla_force_host_platform_device_count={p})")
+        return 2
+    report = run_sweep(p, verbose=True)
+    print(f"CONFORMANCE OK (p={p}, {report['n_cases']} cases, "
+          f"{len(report['rounds'])} schedules)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import ALIASES, get_config
 from repro.launch import mesh as meshlib
 from repro.models import ShardingRecipe, build, make_param_specs
@@ -173,7 +174,7 @@ def run_cell(arch: str, shape: str, mesh_name: str, *, grad_sync="circulant",
     def lower_and_compile(cfg_l):
         """Lower+compile the cell's step for a given (possibly unroll-
         modified) config.  Returns (compiled, tokens_global)."""
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             model = build(cfg_l, recipe=recipe, remat=remat)
             params_s = _param_structs(model, mesh, recipe)
             inputs = input_specs(arch, shape, mesh, recipe)
@@ -277,7 +278,7 @@ def run_cell(arch: str, shape: str, mesh_name: str, *, grad_sync="circulant",
         compiled = lowered1.compile()
         t_compile = time.time() - t0 - t_lower
         stats1 = roofline.parse_collectives(compiled.as_text())
-        ca1 = compiled.cost_analysis()
+        ca1 = compat.cost_analysis(compiled)
 
         # Two-point scan-unroll correction for loop-resident collectives
         # (and HLO flops/bytes diagnostics): metrics(total) =
@@ -288,7 +289,7 @@ def run_cell(arch: str, shape: str, mesh_name: str, *, grad_sync="circulant",
             lowered2, _ = lower_and_compile(cfg2)
             compiled2 = lowered2.compile()
             stats2 = roofline.parse_collectives(compiled2.as_text())
-            ca2 = compiled2.cost_analysis()
+            ca2 = compat.cost_analysis(compiled2)
         else:
             stats2, ca2 = stats1, ca1
 

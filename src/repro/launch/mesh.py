@@ -13,6 +13,8 @@ import numpy as np
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -24,11 +26,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"need {n} devices (dryrun.py sets "
             f"xla_force_host_platform_device_count=512); have "
             f"{len(devices)}")
-    return jax.make_mesh(shape, axes, devices=devices)
+    return compat.make_mesh(shape, axes, devices=devices)
 
 
 def make_mesh(shape, axes) -> Mesh:
-    return jax.make_mesh(tuple(shape), tuple(axes))
+    return compat.make_mesh(tuple(shape), tuple(axes))
 
 
 def _axis_size(mesh: Mesh, entry) -> int:

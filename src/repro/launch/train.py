@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
+from repro import compat
 from repro.checkpoint import CheckpointManager, config_fingerprint
 from repro.configs import ALIASES, get_config
 from repro.data import for_model
@@ -103,7 +104,7 @@ def main(argv=None):
 
     injector = FailureInjector(fail_at_step=args.fail_at_step)
     wd = Watchdog()
-    ctx = jax.set_mesh(mesh) if mesh is not None else _null_ctx()
+    ctx = compat.use_mesh(mesh) if mesh is not None else _null_ctx()
     losses = []
     with ctx:
         for step in range(start, args.steps):

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro import compat
 from repro.core import collectives as C
 from repro.kernels import make_compressors
 from . import adamw
@@ -101,8 +102,8 @@ def shard_offset(ld_pad: int, axis_names: Sequence[str]):
     p_total = 1
     lin = jnp.zeros((), jnp.int32)
     for a in axis_names:
-        lin = lin * lax.axis_size(a) + lax.axis_index(a)
-        p_total *= lax.axis_size(a)
+        lin = lin * compat.axis_size(a) + lax.axis_index(a)
+        p_total *= compat.axis_size(a)
     rows = ld_pad // p_total
     return lin * rows, rows
 
@@ -156,7 +157,7 @@ def zero1_step(loss_and_grad: Callable, params, opt: Zero1State, batch, *,
     loss, grads = loss_and_grad(params, batch)
     world = 1
     for a in axis_names:
-        world *= lax.axis_size(a)
+        world *= compat.axis_size(a)
     flags = jax.tree.map(
         lambda l: is_zero_leaf(l.shape, world, sync.min_shard_numel), params)
     use_zero = sync.impl != "allreduce"

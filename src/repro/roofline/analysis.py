@@ -30,6 +30,8 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
+from repro import compat
+
 PEAK_FLOPS = 197e12       # bf16 / chip
 HBM_BW = 819e9            # B/s
 LINK_BW = 50e9            # B/s per ICI link
@@ -187,7 +189,7 @@ def model_flops(cfg, tokens_per_chip: float, training: bool) -> float:
 
 def analyze(compiled, cfg, *, tokens_global: float, n_chips: int,
             training: bool) -> Roofline:
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     flops = float(ca.get("flops", 0.0))
     hbm = float(ca.get("bytes accessed", 0.0))
     stats = parse_collectives(compiled.as_text())

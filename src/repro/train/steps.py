@@ -25,6 +25,7 @@ import numpy as np
 from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.models import ModelApi, ShardingRecipe, make_param_specs
 from repro.optim import adamw as adamw_mod
 from repro.optim.adamw import (AdamWConfig, AdamState, TreeAdamState,
@@ -78,10 +79,20 @@ def build_zero1(model: ModelApi, mesh: Mesh, recipe: ShardingRecipe,
     world = int(np.prod([mesh.shape[a] for a in recipe.data_axes]))
 
     # Inside the manual region the data axes are already per-shard: the
-    # inner model must only constrain over the AUTO (model) axis.
+    # inner model must only constrain over the AUTO (model) axis.  On JAX
+    # builds whose XLA cannot partition ppermutes inside a manual subgroup
+    # (0.4.x — see compat.SUPPORTS_PARTIAL_MANUAL_COLLECTIVES) the whole
+    # step instead runs manual over EVERY mesh axis: model-axis ranks hold
+    # full replicas (TP constraints dropped), while the data-axis circulant
+    # collectives — the part under test — are unchanged.
     from dataclasses import replace as _dc_replace
     from repro.models import build as _build_model
-    inner_recipe = _dc_replace(recipe, data_axes=())
+    if compat.SUPPORTS_PARTIAL_MANUAL_COLLECTIVES:
+        inner_recipe = _dc_replace(recipe, data_axes=())
+        manual_axes = set(recipe.data_axes)
+    else:
+        inner_recipe = None
+        manual_axes = None  # full manual
     inner_model = _build_model(model.cfg, recipe=inner_recipe, remat=remat)
 
     def inner(params, opt, batch):
@@ -108,13 +119,13 @@ def build_zero1(model: ModelApi, mesh: Mesh, recipe: ShardingRecipe,
     @jax.jit
     def step_fn(params, opt, batch):
         ospecs = opt_specs_for(params)
-        f = jax.shard_map(
+        f = compat.shard_map(
             inner, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: pspec, params), ospecs,
                       batch_specs_for(batch)),
             out_specs=(jax.tree.map(lambda _: pspec, params), ospecs,
                        {"loss": P(), "grad_norm": P(), "lr": P()}),
-            axis_names=set(recipe.data_axes),
+            axis_names=manual_axes,
             check_vma=False)
         return f(params, opt, batch)
 

@@ -13,9 +13,11 @@ import os
 import sys
 
 NDEV = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+import re  # noqa: E402 — strip inherited count: XLA keeps the LAST flag
+_inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                    os.environ.get("XLA_FLAGS", ""))
 os.environ["XLA_FLAGS"] = (
-    f"--xla_force_host_platform_device_count={NDEV} "
-    + os.environ.get("XLA_FLAGS", ""))
+    f"--xla_force_host_platform_device_count={NDEV} " + _inherited)
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -24,11 +26,12 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro import compat  # noqa: E402
 from repro.core import collectives as C  # noqa: E402
 from repro.core import simulator as sim  # noqa: E402
 from repro.core.schedule import ceil_log2  # noqa: E402
 
-mesh = jax.make_mesh((NDEV,), ("x",))
+mesh = compat.make_mesh((NDEV,), ("x",))
 rng = np.random.default_rng(42)
 
 p = NDEV
@@ -38,8 +41,8 @@ BLK = 6
 def run1(fn, x_global):
     """Apply per-rank fn under shard_map; fn sees v[0], returns out;
     result is stacked (p, ...)."""
-    f = jax.jit(jax.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
-                              in_specs=(P("x"),), out_specs=P("x")))
+    f = jax.jit(compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
+                                 in_specs=(P("x"),), out_specs=P("x")))
     return np.asarray(f(x_global))
 
 
@@ -159,8 +162,8 @@ check(f"circulant_alltoall (p={p})")
 # HLO structure: Theorem 1/2 round counts visible as collective-permutes
 # ---------------------------------------------------------------------------
 def count_cp(fn):
-    f = jax.jit(jax.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
-                              in_specs=(P("x"),), out_specs=P("x")))
+    f = jax.jit(compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
+                                 in_specs=(P("x"),), out_specs=P("x")))
     txt = f.lower(jax.ShapeDtypeStruct((p, p * BLK), jnp.float32)).as_text()
     return txt.count("collective_permute")
 
@@ -178,9 +181,9 @@ check(f"HLO: ring RS has {p - 1} collective-permutes (got {n_ring})",
 # Hierarchical (2-axis) allreduce on a (2, NDEV//2) mesh
 # ---------------------------------------------------------------------------
 if NDEV % 2 == 0 and NDEV >= 4:
-    mesh2 = jax.make_mesh((2, NDEV // 2), ("pod", "data"))
+    mesh2 = compat.make_mesh((2, NDEV // 2), ("pod", "data"))
     n2 = NDEV // 2
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(compat.shard_map(
         lambda v: C.hierarchical_allreduce(v[0, 0], ("data", "pod"))[None, None],
         mesh=mesh2, in_specs=(P("pod", "data"),),
         out_specs=P("pod", "data")))

@@ -9,8 +9,11 @@ Run: python tests/_zero1_checks.py
 import os
 import sys
 
+import re  # noqa: E402 — strip inherited count: XLA keeps the LAST flag
+_inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                    os.environ.get("XLA_FLAGS", ""))
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                           + os.environ.get("XLA_FLAGS", ""))
+                           + _inherited)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
@@ -18,6 +21,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.data import for_model  # noqa: E402
 from repro.models import ShardingRecipe, build  # noqa: E402
@@ -26,7 +30,7 @@ from repro.optim.zero1 import GradSyncConfig  # noqa: E402
 from repro.train import build as build_step  # noqa: E402
 from repro.core.schedule import ceil_log2  # noqa: E402
 
-mesh = jax.make_mesh((4, 2), ("data", "model"))
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 cfg = get_config("qwen3-1.7b").scaled_down(n_layers=2, vocab_size=64)
 opt_cfg = AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=50,
                       weight_decay=0.01)
@@ -50,7 +54,7 @@ def run_single():
 def run_zero1(impl, schedule="halving", compress=None):
     recipe = ShardingRecipe(data_axes=("data",), model_axis="model")
     model = build(cfg, recipe=recipe, remat=False)
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
     sync = GradSyncConfig(impl=impl, schedule=schedule, compress=compress,
                           quant_group=64)
@@ -59,7 +63,7 @@ def run_zero1(impl, schedule="halving", compress=None):
     opt = built.init_opt(params)
     opt = jax.device_put(opt, built.opt_spec(params))
     losses = []
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         for step in range(N_STEPS):
             batch = {k: jax.device_put(
                 jnp.asarray(v), NamedSharding(mesh, built.batch_spec))
@@ -98,7 +102,7 @@ check(f"zero1[circulant+int8] close to baseline (max err {err_c:.2e})",
 # Optimizer-state sharding: m has 1/4 of padded flat length per device.
 recipe = ShardingRecipe(data_axes=("data",), model_axis="model")
 model = build(cfg, recipe=recipe, remat=False)
-with jax.set_mesh(mesh):
+with compat.use_mesh(mesh):
     params = model.init(jax.random.PRNGKey(0))
 built = build_step("zero1", model, opt_cfg, mesh=mesh, recipe=recipe,
                    sync=GradSyncConfig())
@@ -121,7 +125,7 @@ check(f"ZeRO-1 opt bytes/device {opt_bytes_per_dev} <~ full/4 "
 # HLO structure: the jitted train step contains the RS + AG rounds
 # (2*ceil(log2 4) = 4 collective-permutes) over the data axis.
 batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
-with jax.set_mesh(mesh):
+with compat.use_mesh(mesh):
     lowered = jax.jit(built.step_fn).lower(params, opt, batch)
 txt = lowered.as_text()
 n_cp = txt.count("collective_permute")
@@ -133,16 +137,16 @@ check(f"train-step HLO has >= {2 * q} collective-permutes (got {n_cp})",
 # Multi-pod: (pod=2, data=2, model=2) mesh — hierarchical circulant
 # RS/AG nested over ('data', 'pod') must also match single-device training.
 # ---------------------------------------------------------------------------
-mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+mesh3 = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 recipe3 = ShardingRecipe(data_axes=("pod", "data"), model_axis="model")
 model3 = build(cfg, recipe=recipe3, remat=False)
-with jax.set_mesh(mesh3):
+with compat.use_mesh(mesh3):
     params3 = model3.init(jax.random.PRNGKey(0))
 built3 = build_step("zero1", model3, opt_cfg, mesh=mesh3, recipe=recipe3,
                     sync=GradSyncConfig())
 opt3 = jax.device_put(built3.init_opt(params3), built3.opt_spec(params3))
 losses3 = []
-with jax.set_mesh(mesh3):
+with compat.use_mesh(mesh3):
     for step in range(N_STEPS):
         batch = {k: jax.device_put(
             jnp.asarray(v), NamedSharding(mesh3, built3.batch_spec))

@@ -1,0 +1,67 @@
+"""Cross-implementation conformance sweeps (src/repro/core/conformance.py).
+
+One subprocess per axis size p (XLA locks the fake-device count at first
+jax init, so every p needs its own process).  Per p the worker asserts:
+
+  * circulant / ring / recursive-halving / XLA reduce-scatter + allreduce
+    against a host numpy reference and the native-XLA baseline,
+  * every Corollary-2 schedule (halving, power2, fully_connected, sqrt,
+    two_level), ops add/max/min, dtypes f32/bf16/i32,
+  * lowered-HLO collective-permute counts: exactly rounds(schedule) for
+    RS and 2*rounds(schedule) for AR, with rounds == ceil(log2 p) for the
+    halving/power2 schedules — Theorem 1/2 at every tested p, including
+    the non-powers-of-two the paper exists for.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.conformance import (
+    DEFAULT_PS, OPS, SCHEDULES, sweep_cases, two_level_group)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+WORKER = os.path.join(HERE, "..", "src", "repro", "core", "conformance.py")
+
+
+@pytest.mark.parametrize("p", DEFAULT_PS)
+def test_conformance_sweep(p):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # worker sets its own device count
+    proc = subprocess.run(
+        [sys.executable, WORKER, str(p)],
+        capture_output=True, text=True, timeout=900, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"conformance sweep failed for p={p}:\n--- stdout ---\n"
+            f"{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    assert f"CONFORMANCE OK (p={p}" in proc.stdout
+
+
+def test_sweep_covers_required_space():
+    """The generated case list spans all impls, schedules, ops and dtypes
+    the tentpole promises (static check, no devices needed)."""
+    cases = sweep_cases(8)
+    assert {c.impl for c in cases} == {
+        "circulant", "ring", "recursive_halving", "xla"}
+    assert {c.schedule for c in cases if c.impl == "circulant"} == set(
+        SCHEDULES)
+    assert {c.op for c in cases} == set(OPS)
+    assert {c.dtype for c in cases} == {"float32", "bfloat16", "int32"}
+    # recursive halving only exists at powers of two
+    assert not any(c.impl == "recursive_halving" for c in sweep_cases(6))
+
+
+def test_default_ps_mostly_non_pow2():
+    non_pow2 = [p for p in DEFAULT_PS if p & (p - 1)]
+    assert len(non_pow2) >= 4, "non-powers-of-two are the paper's point"
+
+
+def test_two_level_group_divides():
+    for p in DEFAULT_PS:
+        g = two_level_group(p)
+        assert g >= 1 and p % g == 0
+    assert two_level_group(12) == 3
+    assert two_level_group(16) == 4
+    assert two_level_group(7) == 1  # prime: degenerates to halving

@@ -3,8 +3,7 @@ bound; ring/circulant crossover structure (motivates §Perf schedule work)."""
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import cost_model as cm
 from repro.core.schedule import ceil_log2

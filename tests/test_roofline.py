@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.roofline import analysis as A
 
 
@@ -53,7 +54,7 @@ def test_cost_analysis_undercounts_loops():
     for nl in (2, 8):
         w = jnp.ones((nl, 128, 128))
         c = jax.jit(make(nl)).lower(x, w).compile()
-        fl[nl] = c.cost_analysis()["flops"]
+        fl[nl] = compat.cost_analysis(c)["flops"]
     assert fl[2] == fl[8], "if this fails, XLA fixed it — drop the " \
         "two-point correction and use raw HLO numbers"
 
@@ -80,7 +81,7 @@ def test_analytic_flops_vs_unrolled_hlo(arch):
         return logits
 
     comp = jax.jit(fwd).lower(params, tokens).compile()
-    hlo_flops = comp.cost_analysis()["flops"]
+    hlo_flops = compat.cost_analysis(comp)["flops"]
     ana = forward_flops_global(cfg, s, b, "prefill")
     ratio = hlo_flops / ana
     assert 0.75 < ratio < 1.25, (hlo_flops, ana, ratio)

@@ -2,8 +2,7 @@
 §4 all-to-all observation, over many p (powers of two and not)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import simulator as sim
 from repro.core.schedule import ceil_log2
