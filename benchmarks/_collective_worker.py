@@ -21,8 +21,11 @@ rng = np.random.default_rng(0)
 
 
 def timed(fn, x, iters=10):
+    # check_vma=False: required for the fused rows (0.4.x shard_map has no
+    # replication rule for pallas_call); harmless for the jnp rows.
     f = jax.jit(compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
-                                 in_specs=(P("x"),), out_specs=P("x")))
+                                 in_specs=(P("x"),), out_specs=P("x"),
+                                 check_vma=False))
     f(x).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
@@ -37,9 +40,13 @@ for n_elem in [1 << 12, 1 << 18, 1 << 22]:
         "circulant_rs": lambda v: C.circulant_reduce_scatter(v, "x"),
         "circulant_rs_pow2": lambda v: C.circulant_reduce_scatter(
             v, "x", schedule="power2"),
+        "circulant_rs_fused": lambda v: C.circulant_reduce_scatter(
+            v, "x", use_fused_kernel=True),
         "ring_rs": lambda v: C.ring_reduce_scatter(v, "x"),
         "xla_rs": lambda v: C.xla_reduce_scatter(v, "x"),
         "circulant_ar": lambda v: C.circulant_allreduce(v, "x"),
+        "circulant_ar_fused": lambda v: C.circulant_allreduce(
+            v, "x", use_fused_kernel=True),
         "ring_ar": lambda v: C.ring_allreduce(v, "x"),
         "xla_psum": lambda v: C.xla_allreduce(v, "x"),
     }

@@ -96,8 +96,10 @@ def bench_collectives():
 
 # ---------------------------------------------------------------------------
 def bench_kernels():
+    import jax
     import jax.numpy as jnp
-    from repro.kernels import fused_block_reduce, quantize_blocks
+    from repro.kernels import (fused_block_reduce, fused_round,
+                               quantize_blocks)
     from repro.kernels import ref as R
 
     rng = np.random.default_rng(0)
@@ -114,6 +116,50 @@ def bench_kernels():
         ok = bool(jnp.allclose(out, ref))
         emit(f"kernels/block_reduce_{shape[0]}x{shape[1]}", us,
              f"allclose={ok};interpret=True")
+
+    # Fused circulant round (fold + next-send layout, one pass) vs the
+    # unfused jnp chain (reduce + concat + 2 slices) on one mid-game round
+    # shape: live 8 blocks, 4 received, keep/send split at 4.
+    def one_round(f):
+        @jax.jit
+        def run(live, T):
+            return f(live, T, nb=4, next_lo=4, op="add")
+        return run
+
+    fused_fn = one_round(fused_round)
+    unfused_fn = one_round(R.fused_round_ref)
+
+    def timed(f, live, T, iters=20):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            k, s = f(live, T)
+        k.block_until_ready()
+        s.block_until_ready()
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    for cols in [16384, 65536]:
+        live = jnp.asarray(rng.standard_normal((8, cols)), jnp.float32)
+        T = jnp.asarray(rng.standard_normal((4, cols)), jnp.float32)
+        for f in (fused_fn, unfused_fn):  # warm up both before timing
+            k, s = f(live, T)
+            k.block_until_ready()
+        # Paired back-to-back reps: per-rep ratios cancel common-mode
+        # machine-load drift (shared CI runners swing several-x); the
+        # reported ratio is the median of the paired ratios.
+        t_fused, t_unfused, ratios = 1e30, 1e30, []
+        for _ in range(9):
+            tf = timed(fused_fn, live, T)
+            tu = timed(unfused_fn, live, T)
+            ratios.append(tf / tu)
+            t_fused, t_unfused = min(t_fused, tf), min(t_unfused, tu)
+        ratio = sorted(ratios)[len(ratios) // 2]
+        kf, sf = fused_fn(live, T)
+        ku, su = unfused_fn(live, T)
+        ok = bool(jnp.array_equal(kf, ku) and jnp.array_equal(sf, su))
+        emit(f"kernels/fused_round_8x{cols}", t_fused,
+             f"bitwise={ok};unfused_us={t_unfused:.3f};"
+             f"ratio={ratio:.3f};interpret=True")
+
     x = jnp.asarray(rng.standard_normal((16, 4096)), jnp.float32)
     t0 = time.perf_counter()
     payload = quantize_blocks(x, group=512)

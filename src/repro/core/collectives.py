@@ -20,6 +20,18 @@ context that binds ``axis_name``.  Baselines implemented alongside:
 
 Payload hooks (``compress``/``decompress``) implement per-round gradient
 compression (beyond-paper, §Perf).
+
+Every circulant collective takes ``use_fused_kernel`` (default ``None`` =
+auto): ``True`` routes each round's local buffer work through the fused
+Pallas round kernel (``kernels.fused_round``) — fold + next-round send
+layout in one HBM pass instead of the slice → jnp-op → concat chain; the
+lowered HLO keeps the exact same collective-permute count and the results
+are bitwise-identical (the kernel body is static slicing around the same
+⊕).  Auto enables Pallas on TPU under a native (post-0.4.x) shard_map
+and keeps the jnp path everywhere else: on CPU the kernel would run in
+interpret mode (validation, not speed), and the legacy 0.4.x shard_map
+needs ``check_vma=False`` for pallas_call, so auto must not flip default
+call sites onto it.
 """
 from __future__ import annotations
 
@@ -31,6 +43,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import compat
+from repro.kernels import fused_round, permute_rows, resolve_fused
 from .schedule import (allgather_plan, ceil_log2, reduce_scatter_plan)
 
 Array = jax.Array
@@ -95,6 +108,7 @@ def circulant_reduce_scatter(
     group: int | None = None,
     compress: Callable[[Array], Any] | None = None,
     decompress: Callable[[Any], Array] | None = None,
+    use_fused_kernel: bool | None = None,
 ) -> Array:
     """Paper Algorithm 1.  ``x``: per-rank input vector, leading dim n
     divisible by p.  Returns rank r's reduced block  (n/p, *rest):
@@ -106,6 +120,10 @@ def circulant_reduce_scatter(
     The live buffer shrinks from p blocks to 1; exactly p-1 blocks are
     sent/received/reduced per rank (Theorem 1).  ``group`` parameterizes
     the two_level schedule (intra-group size; ignored otherwise).
+
+    With ``use_fused_kernel`` the per-round fold + next-send assembly runs
+    as one Pallas kernel pass (see module docstring); the round structure
+    and every ppermute are unchanged.
     """
     reduce_fn = _resolve_op(op)
     p = compat.axis_size(axis_name)
@@ -115,6 +133,14 @@ def circulant_reduce_scatter(
     R = _as_blocks(x, p)
     # Rotated initial copy: R[i] = V[(r + i) mod p]   (paper: the gamma*m copy)
     R = jnp.roll(R, -r, axis=0)
+    if resolve_fused(use_fused_kernel) and isinstance(op, str):
+        return _fused_reduce_scatter_rounds(
+            R, axis_name, p, schedule, group, op, compress, decompress)
+    if use_fused_kernel and not isinstance(op, str):
+        # Explicit request only — auto silently keeps the jnp path.
+        raise ValueError(
+            "use_fused_kernel needs a named op ('add'/'max'/'min'), "
+            f"got callable {op!r}")
     for pl in reduce_scatter_plan(p, schedule, group):
         payload = R[pl.lo:pl.hi]
         if compress is not None:
@@ -128,6 +154,38 @@ def circulant_reduce_scatter(
     return R[0]
 
 
+def _fused_reduce_scatter_rounds(R: Array, axis_name: str, p: int,
+                                 schedule: str, group: int | None, op: str,
+                                 compress, decompress) -> Array:
+    """Algorithm 1's round loop on the fused Pallas kernel.
+
+    The rotated block buffer is viewed as 2-D ``(blocks, block_numel)``;
+    after the prologue slice every round is ppermute → fused_round, with
+    the kernel emitting both the shrunken live buffer and the next
+    round's contiguous payload.  Identical values and ppermute sequence
+    to the jnp path — only the local data movement is fused.
+    """
+    blk_shape = R.shape[1:]
+    R2 = R.reshape(p, -1)
+    plans = reduce_scatter_plan(p, schedule, group)
+    live = R2[: plans[0].lo]
+    send = R2[plans[0].lo : plans[0].hi]
+    for k, pl in enumerate(plans):
+        payload = send if compress is None else compress(send)
+        T = compat.ppermute(payload, axis_name, _fwd_perm(p, pl.skip))
+        if decompress is not None:
+            T = decompress(T)
+        if T.dtype != live.dtype:
+            # Match the jnp path, whose concatenate promotes the buffer
+            # (e.g. bf16 live vs f32 decompressed payload).
+            dt = jnp.result_type(live.dtype, T.dtype)
+            live, T = live.astype(dt), T.astype(dt)
+        next_lo = plans[k + 1].lo if k + 1 < len(plans) else pl.lo
+        live, send = fused_round(live, T, nb=pl.nblocks, next_lo=next_lo,
+                                 op=op)
+    return live[0].reshape(blk_shape)
+
+
 # ---------------------------------------------------------------------------
 # Allgather — Algorithm 2's second phase (reversed skip stack), standalone
 # ---------------------------------------------------------------------------
@@ -138,6 +196,7 @@ def circulant_allgather(
     *,
     schedule: str = "halving",
     group: int | None = None,
+    use_fused_kernel: bool | None = None,
 ) -> Array:
     """Gather rank blocks in rank order.  ``x``: rank r's block
     (blk, *rest); returns (p*blk, *rest) identical on all ranks.
@@ -146,11 +205,28 @@ def circulant_allgather(
     previous bound s' and skip s, send R[0 : s'-s] toward (r - s) and
     receive into R[s : s'] from (r + s).  The buffer grows from 1 block to
     p; p-1 blocks communicated per rank.
+
+    Allgather has no ⊕, so its fused form needs no Pallas: the growing
+    concat chain (which recopies the whole buffer every round — O(p log p)
+    block traffic) becomes static in-place updates of one preallocated
+    (p, blk) buffer (O(p) traffic; XLA turns the static-index
+    dynamic-update-slice into an in-place write under jit).  Send payloads
+    are buffer prefixes, already contiguous.
     """
     p = compat.axis_size(axis_name)
     if p == 1:
         return x
     r = lax.axis_index(axis_name)
+    if resolve_fused(use_fused_kernel):
+        buf = jnp.zeros((p, *x.shape), x.dtype)
+        buf = lax.dynamic_update_slice_in_dim(buf, x[None], 0, axis=0)
+        for pl in allgather_plan(p, schedule, group):
+            payload = lax.slice_in_dim(buf, 0, pl.nblocks, axis=0)
+            T = compat.ppermute(payload, axis_name, _bwd_perm(p, pl.skip))
+            # Received blocks land at rows [lo, hi) = [skip, prev bound).
+            buf = lax.dynamic_update_slice_in_dim(buf, T, pl.lo, axis=0)
+        out = jnp.roll(buf, r, axis=0)
+        return out.reshape(p * x.shape[0], *x.shape[1:])
     R = x[None]  # (1, blk, *rest) — rotated coords: R[i] = block of (r+i)
     for pl in allgather_plan(p, schedule, group):
         payload = R[:pl.nblocks]
@@ -173,13 +249,16 @@ def circulant_allreduce(
     group: int | None = None,
     compress: Callable[[Array], Any] | None = None,
     decompress: Callable[[Any], Array] | None = None,
+    use_fused_kernel: bool | None = None,
 ) -> Array:
     """Paper Algorithm 2: reduce-scatter + reversed allgather.
     2*ceil(log2 p) ppermutes, 2(p-1) blocks moved, p-1 reductions/rank."""
     w = circulant_reduce_scatter(
         x, axis_name, schedule=schedule, op=op, group=group,
-        compress=compress, decompress=decompress)
-    return circulant_allgather(w, axis_name, schedule=schedule, group=group)
+        compress=compress, decompress=decompress,
+        use_fused_kernel=use_fused_kernel)
+    return circulant_allgather(w, axis_name, schedule=schedule, group=group,
+                               use_fused_kernel=use_fused_kernel)
 
 
 # ---------------------------------------------------------------------------
@@ -191,6 +270,7 @@ def circulant_alltoall(
     axis_name: str,
     *,
     schedule: str = "halving",
+    use_fused_kernel: bool | None = None,
 ) -> Array:
     """All-to-all in ceil(log2 p) rounds: Algorithm 1 with ⊕ =
     concatenation.  ``x``: (p, blk, *rest); row j is rank r's payload for
@@ -201,12 +281,21 @@ def circulant_alltoall(
     of same-shaped arrays, so every round is still a single fused ppermute
     over a stacked payload.  Volume is (p/2)*ceil(log2 p) blocks per rank
     (the classic Bruck trade-off: round-optimal, not volume-optimal).
+
+    The fused form keeps each slot as ONE stacked (count, blk) array —
+    per-round send assembly concatenates a few contiguous slot buffers
+    instead of restacking individual blocks — and lays the final slot into
+    source order with one Pallas row-permutation pass (the permutation is
+    trace-time metadata).
     """
     p = compat.axis_size(axis_name)
     if p == 1:
         return x
     r = lax.axis_index(axis_name)
     rot = jnp.roll(x, -r, axis=0)  # rot[i] = payload for dest (r+i)
+    if resolve_fused(use_fused_kernel):
+        return _fused_alltoall_rounds(rot, axis_name, p, schedule, r,
+                                      x.shape[1:])
     # slots[i]: list of (offset o, payload) — payload originated at (r+o).
     slots: list[list[tuple[int, Array]]] = [[(0, rot[i])] for i in range(p)]
     for pl in reduce_scatter_plan(p, schedule):
@@ -229,6 +318,40 @@ def circulant_alltoall(
     ordered = [a for (_, a) in sorted(entries, key=lambda e: e[0])]
     stacked = jnp.stack(ordered, axis=0)  # stacked[o] = payload from (r+o)
     return jnp.roll(stacked, r, axis=0)   # row j = payload from rank j
+
+
+def _fused_alltoall_rounds(rot: Array, axis_name: str, p: int, schedule: str,
+                           r, blk_shape: tuple) -> Array:
+    """Bruck-style rounds over stacked slot buffers (fused alltoall).
+
+    slots[i] is one (count_i, blk) array; offs[i] is the parallel Python
+    list of source offsets.  Entry order inside each slot matches the
+    unfused list-of-arrays path exactly, so results are bitwise-equal.
+    """
+    rot2 = rot.reshape(p, -1)
+    slots = [lax.slice_in_dim(rot2, i, i + 1, axis=0) for i in range(p)]
+    offs: list[list[int]] = [[0] for _ in range(p)]
+    for pl in reduce_scatter_plan(p, schedule):
+        s = pl.skip
+        send = (slots[pl.lo] if pl.nblocks == 1 else
+                jnp.concatenate(slots[pl.lo:pl.hi], axis=0))
+        T = compat.ppermute(send, axis_name, _fwd_perm(p, s))
+        idx = 0
+        for j in range(pl.nblocks):
+            src_slot = pl.lo + j
+            cnt = len(offs[src_slot])
+            piece = lax.slice_in_dim(T, idx, idx + cnt, axis=0)
+            slots[j] = jnp.concatenate([slots[j], piece], axis=0)
+            offs[j] = offs[j] + [(o - s) % p for o in offs[src_slot]]
+            idx += cnt
+        assert idx == T.shape[0]
+        del slots[pl.lo:], offs[pl.lo:]
+    assert slots[0].shape[0] == p, \
+        f"expected {p} payloads, got {slots[0].shape[0]}"
+    order = sorted(range(p), key=lambda i: offs[0][i])
+    ordered = permute_rows(slots[0], order)  # ordered[o] = from (r+o)
+    out = jnp.roll(ordered, r, axis=0)       # row j = payload from rank j
+    return out.reshape(p, *blk_shape)
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,8 @@
 """Cross-implementation conformance harness for the paper's collectives.
 
-Sweeps every (collective × impl × schedule × op × dtype) combination that
-is meaningful for a given axis size ``p`` and asserts, per case:
+Sweeps every (collective × impl × schedule × op × dtype ×
+use_fused_kernel) combination that is meaningful for a given axis size
+``p`` and asserts, per case:
 
   (a) agreement with a host-side numpy reference — bitwise for integer and
       order-independent (max/min) reductions, tolerance-based for float
@@ -85,30 +86,38 @@ class Case:
     schedule: str = "halving"
     op: str = "add"
     dtype: str = "float32"
+    fused: bool = False        # use_fused_kernel (circulant only)
 
     @property
     def label(self) -> str:
+        tag = ":fused" if self.fused else ""
         return (f"{self.collective}[{self.impl}:{self.schedule}"
-                f":{self.op}:{self.dtype}]")
+                f":{self.op}:{self.dtype}{tag}]")
 
 
 def sweep_cases(p: int) -> list[Case]:
     """Every meaningful combination for axis size p, deduplicated: impls ×
     both collectives at the defaults, then schedule / op / dtype sweeps on
-    the circulant implementation (the component under test)."""
+    the circulant implementation (the component under test).  Every
+    circulant case is mirrored with ``use_fused_kernel=True`` so the fused
+    Pallas round kernel is held to the exact same reference checks."""
     pow2 = p & (p - 1) == 0
     cases: list[Case] = []
     for coll in ("reduce_scatter", "allreduce"):
         impls = ["circulant", "ring", "xla"]
         if coll == "reduce_scatter" and pow2 and p > 1:
             impls.append("recursive_halving")
-        cases.extend(Case(coll, impl) for impl in impls)
-        cases.extend(Case(coll, "circulant", schedule=s)
-                     for s in SCHEDULES if s != "halving")
-        cases.extend(Case(coll, "circulant", op=op)
-                     for op in OPS if op != "add")
-        cases.extend(Case(coll, "circulant", dtype=dt)
-                     for dt in DTYPES if dt != "float32")
+        base = [Case(coll, impl) for impl in impls]
+        base.extend(Case(coll, "circulant", schedule=s)
+                    for s in SCHEDULES if s != "halving")
+        base.extend(Case(coll, "circulant", op=op)
+                    for op in OPS if op != "add")
+        base.extend(Case(coll, "circulant", dtype=dt)
+                    for dt in DTYPES if dt != "float32")
+        cases.extend(base)
+        cases.extend(
+            Case(c.collective, c.impl, c.schedule, c.op, c.dtype, fused=True)
+            for c in base if c.impl == "circulant")
     return cases
 
 
@@ -116,18 +125,22 @@ def sweep_cases(p: int) -> list[Case]:
 # Execution helpers
 # ---------------------------------------------------------------------------
 
-def _shmap1(mesh, fn):
+def _shmap1(mesh, fn, check_vma: bool | None = None):
     """Per-rank fn over a (p, ...) global sharded on axis 0 (the repo's
-    standard v[0]-unwrap convention)."""
+    standard v[0]-unwrap convention).  ``check_vma=False`` is passed only
+    for the fused cases — 0.4.x shard_map has no replication rule for
+    pallas_call — so the jnp/baseline cases keep exercising the
+    replication checker."""
     return jax.jit(compat.shard_map(
         lambda v: fn(v[0])[None], mesh=mesh,
-        in_specs=(P(AXIS),), out_specs=P(AXIS)))
+        in_specs=(P(AXIS),), out_specs=P(AXIS), check_vma=check_vma))
 
 
 def _impl_fn(case: Case, p: int):
     kw = {"op": case.op}
     if case.impl == "circulant":
         kw["schedule"] = case.schedule
+        kw["use_fused_kernel"] = case.fused
         if case.schedule == "two_level":
             kw["group"] = two_level_group(p)
     if case.collective == "reduce_scatter":
@@ -182,7 +195,8 @@ def run_case(mesh, p: int, case: Case, rng: np.random.Generator) -> None:
     the case label on any mismatch."""
     xg = _make_input(case, p, rng)
     dt = jnp.dtype(case.dtype)
-    out = np.asarray(_shmap1(mesh, _impl_fn(case, p))(
+    out = np.asarray(_shmap1(mesh, _impl_fn(case, p),
+                             check_vma=False if case.fused else None)(
         jnp.asarray(xg, dtype=dt)))
     ref = _reference(case, xg)
     tol = _tolerances(case, p)
@@ -221,15 +235,17 @@ def run_case(mesh, p: int, case: Case, rng: np.random.Generator) -> None:
 # HLO structure: Theorem 1/2 round counts
 # ---------------------------------------------------------------------------
 
-def count_collective_permutes(mesh, p: int, fn) -> int:
-    txt = _shmap1(mesh, fn).lower(
+def count_collective_permutes(mesh, p: int, fn,
+                              check_vma: bool | None = None) -> int:
+    txt = _shmap1(mesh, fn, check_vma=check_vma).lower(
         jax.ShapeDtypeStruct((p, p * BLK), jnp.float32)).as_text()
     return txt.count("collective_permute")
 
 
 def check_round_counts(mesh, p: int) -> dict[str, tuple[int, int]]:
-    """Assert RS/AR collective-permute counts for every schedule; returns
-    {schedule: (n_rs, n_ar)} for reporting."""
+    """Assert RS/AR collective-permute counts for every schedule, on BOTH
+    the jnp and the fused-Pallas round paths (fusion must not change the
+    communication structure); returns {schedule[:fused]: (n_rs, n_ar)}."""
     results = {}
     for sched in SCHEDULES:
         kw = {"schedule": sched}
@@ -239,17 +255,25 @@ def check_round_counts(mesh, p: int) -> dict[str, tuple[int, int]]:
         if sched in OPTIMAL_SCHEDULES:
             assert rounds == ceil_log2(p), \
                 f"{sched} must be a ceil(log2 p)-round schedule (p={p})"
-        n_rs = count_collective_permutes(
-            mesh, p, lambda v, kw=kw: C.circulant_reduce_scatter(v, AXIS, **kw))
-        n_ar = count_collective_permutes(
-            mesh, p, lambda v, kw=kw: C.circulant_allreduce(v, AXIS, **kw))
-        assert n_rs == rounds, \
-            (f"RS[{sched}] p={p}: {n_rs} collective-permutes, "
-             f"want {rounds} (Theorem 1)")
-        assert n_ar == 2 * rounds, \
-            (f"AR[{sched}] p={p}: {n_ar} collective-permutes, "
-             f"want {2 * rounds} (Theorem 2)")
-        results[sched] = (n_rs, n_ar)
+        for fused in (False, True):
+            kwf = dict(kw, use_fused_kernel=fused)
+            cv = False if fused else None
+            tag = f"{sched}:fused" if fused else sched
+            n_rs = count_collective_permutes(
+                mesh, p,
+                lambda v, kwf=kwf: C.circulant_reduce_scatter(v, AXIS, **kwf),
+                check_vma=cv)
+            n_ar = count_collective_permutes(
+                mesh, p,
+                lambda v, kwf=kwf: C.circulant_allreduce(v, AXIS, **kwf),
+                check_vma=cv)
+            assert n_rs == rounds, \
+                (f"RS[{tag}] p={p}: {n_rs} collective-permutes, "
+                 f"want {rounds} (Theorem 1)")
+            assert n_ar == 2 * rounds, \
+                (f"AR[{tag}] p={p}: {n_ar} collective-permutes, "
+                 f"want {2 * rounds} (Theorem 2)")
+            results[tag] = (n_rs, n_ar)
     return results
 
 

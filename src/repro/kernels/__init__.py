@@ -1,12 +1,20 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-block_reduce — the per-round ⊕ fold of Algorithm 1 (γ term).
+block_reduce — the per-round ⊕ fold of Algorithm 1 (γ term), standalone.
+fused_round  — the whole local side of a circulant round: ⊕-fold of the
+               received blocks PLUS contiguous layout of the next round's
+               send blocks, one HBM pass (the collectives' hot path).
 quantize     — int8 group quantization + fused dequant-add for compressed
                communication rounds (β term).
 
 Each kernel has a pure-jnp oracle in ref.py; ops.py holds the jitted,
 shape-flexible public wrappers.
 """
+from .fused_round import (  # noqa: F401
+    fused_round,
+    permute_rows,
+    resolve_fused,
+)
 from .ops import (  # noqa: F401
     dequant_accumulate,
     dequantize_blocks,

@@ -22,6 +22,8 @@ from jax.experimental import pallas as pl
 DEFAULT_ROW_TILE = 256
 DEFAULT_COL_TILE = 512
 
+# Shared named-⊕ table (fused_round.py imports it; ref.py/collectives
+# mirror the same names for their jnp paths).
 _OPS = {
     "add": lambda a, b: a + b,
     "max": jnp.maximum,

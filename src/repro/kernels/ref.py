@@ -11,6 +11,22 @@ def block_reduce_ref(a: jax.Array, b: jax.Array, *, op: str = "add") -> jax.Arra
     return {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}[op](a, b)
 
 
+def fused_round_ref(live: jax.Array, received: jax.Array, *, nb: int,
+                    next_lo: int, op: str = "add"
+                    ) -> tuple[jax.Array, jax.Array | None]:
+    """jnp oracle for kernels.fused_round: fold + keep/send split."""
+    lo = live.shape[0]
+    head = block_reduce_ref(live[:nb], received, op=op)
+    new = jnp.concatenate([head, live[nb:lo]], axis=0)
+    if next_lo == lo:
+        return new, None
+    return new[:next_lo], new[next_lo:lo]
+
+
+def permute_rows_ref(x: jax.Array, perm) -> jax.Array:
+    return x[jnp.asarray(tuple(int(i) for i in perm))]
+
+
 def quantize_ref(x: jax.Array, *, group: int = 512
                  ) -> tuple[jax.Array, jax.Array]:
     rows, cols = x.shape

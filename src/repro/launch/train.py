@@ -49,6 +49,10 @@ def main(argv=None):
                     choices=["circulant", "ring", "xla", "allreduce"])
     ap.add_argument("--schedule", default="halving")
     ap.add_argument("--compress", default=None, choices=[None, "int8"])
+    ap.add_argument("--fused-kernel", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fused Pallas round kernel for the circulant "
+                         "collectives (auto = Pallas on TPU, jnp on CPU)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--warmup", type=int, default=20)
     ap.add_argument("--ckpt-dir", default=None)
@@ -80,7 +84,9 @@ def main(argv=None):
         recipe = ShardingRecipe(data_axes=("data",), model_axis="model")
     model = build(cfg, recipe=recipe)
     sync = GradSyncConfig(impl=args.grad_sync, schedule=args.schedule,
-                          compress=args.compress)
+                          compress=args.compress,
+                          use_fused_kernel={"auto": None, "on": True,
+                                            "off": False}[args.fused_kernel])
     built = build_step(mode, model, opt_cfg, mesh=mesh, recipe=recipe,
                        sync=sync)
 

@@ -25,7 +25,9 @@ Grad-sync implementations are pluggable (--grad-sync):
   xla                   lax.psum_scatter + lax.all_gather
   allreduce             plain replicated allreduce + full optimizer
                         (no ZeRO; memory baseline)
-Optional int8 compressed rounds (quantize kernels) via compress='int8'.
+Optional int8 compressed rounds (quantize kernels) via compress='int8';
+``use_fused_kernel`` routes the circulant rounds' local fold + send
+assembly through the fused Pallas round kernel (kernels.fused_round).
 
 Shard layout per leaf: axis-major blocks over ``axis_names`` order —
 rank (r0, r1) holds rows [lin * ld_pad/P, (lin+1) * ld_pad/P) with
@@ -57,6 +59,8 @@ class GradSyncConfig:
     min_shard_numel: int = 1024   # leaves smaller than this stay replicated
     rs_dtype: str = "float32"     # reduce-scatter payload dtype; 'bfloat16'
     #                               halves the RS link volume (§Perf A)
+    use_fused_kernel: bool | None = None  # fused Pallas round kernel for the
+    #                               circulant RS/AG; None = auto (TPU only)
 
 
 class Zero1State(NamedTuple):
@@ -112,6 +116,7 @@ def _rs_kwargs(sync: GradSyncConfig):
     kw = {}
     if sync.impl == "circulant":
         kw["schedule"] = sync.schedule
+        kw["use_fused_kernel"] = sync.use_fused_kernel
         if sync.compress == "int8":
             comp, decomp = make_compressors(group=sync.quant_group,
                                             backend="jnp")
@@ -132,7 +137,9 @@ def reduce_scatter_leaf(g, axis_names, sync: GradSyncConfig, world: int):
 def allgather_leaf(shard, ld: int, axis_names, sync: GradSyncConfig):
     """Inverse: hierarchical AG along dim 0, then drop padding rows."""
     impl = "circulant" if sync.impl in ("circulant", "ring") else "xla"
-    kw = {"schedule": sync.schedule} if impl == "circulant" else {}
+    kw = ({"schedule": sync.schedule,
+           "use_fused_kernel": sync.use_fused_kernel}
+          if impl == "circulant" else {})
     out = shard
     for ax in reversed(list(axis_names)):
         out = C.allgather(out, ax, impl=impl, **kw)

@@ -116,6 +116,8 @@ def build_zero1(model: ModelApi, mesh: Mesh, recipe: ShardingRecipe,
     # NB: must run under jit — JAX 0.8.2's EAGER shard_map dispatch with
     # check_vma=False + partial-auto axes trips an internal _unmatch spec
     # check (it builds P(all mesh axes) but validates against manual-only).
+    # check_vma=False is also what lets sync.use_fused_kernel route the
+    # collectives through pallas_call (no replication rule on 0.4.x).
     @jax.jit
     def step_fn(params, opt, batch):
         ospecs = opt_specs_for(params)

@@ -51,6 +51,13 @@ def test_sweep_covers_required_space():
     assert {c.dtype for c in cases} == {"float32", "bfloat16", "int32"}
     # recursive halving only exists at powers of two
     assert not any(c.impl == "recursive_halving" for c in sweep_cases(6))
+    # every circulant case is mirrored on the fused Pallas round path
+    plain = {(c.collective, c.schedule, c.op, c.dtype) for c in cases
+             if c.impl == "circulant" and not c.fused}
+    fused = {(c.collective, c.schedule, c.op, c.dtype) for c in cases
+             if c.impl == "circulant" and c.fused}
+    assert fused == plain and fused
+    assert not any(c.fused for c in cases if c.impl != "circulant")
 
 
 def test_default_ps_mostly_non_pow2():
