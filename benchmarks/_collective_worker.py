@@ -44,9 +44,13 @@ for n_elem in [1 << 12, 1 << 18, 1 << 22]:
             v, "x", use_fused_kernel=True),
         "ring_rs": lambda v: C.ring_reduce_scatter(v, "x"),
         "xla_rs": lambda v: C.xla_reduce_scatter(v, "x"),
+        "circulant_rs_int8": lambda v: C.circulant_reduce_scatter(
+            v, "x", wire_dtype="int8"),
         "circulant_ar": lambda v: C.circulant_allreduce(v, "x"),
         "circulant_ar_fused": lambda v: C.circulant_allreduce(
             v, "x", use_fused_kernel=True),
+        "circulant_ar_int8": lambda v: C.circulant_allreduce(
+            v, "x", wire_dtype="int8"),
         "ring_ar": lambda v: C.ring_allreduce(v, "x"),
         "xla_psum": lambda v: C.xla_allreduce(v, "x"),
     }

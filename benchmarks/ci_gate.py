@@ -1,15 +1,20 @@
 """CI benchmark gate: run the smoke benchmarks, archive them as JSON, fail on violations.
 
-Runs ``benchmarks.run --only rounds,kernels`` in a subprocess (the rounds bench itself raises on
-any ``assert_theorem1/2`` violation, which this gate surfaces as a failure), parses the CSV into
-``BENCH_ci.json`` (the perf-trajectory artifact CI uploads per commit), and additionally asserts:
+Runs ``benchmarks.run --only rounds,kernels,wire`` in a subprocess (the rounds bench itself
+raises on any ``assert_theorem1/2`` violation and the wire bench on any round-count or byte-
+budget violation, which this gate surfaces as failures), parses the CSV into ``BENCH_ci.json``
+(the perf-trajectory artifact CI uploads per commit), and additionally asserts:
 
 * no ``ERROR`` rows and every kernel ``allclose``/``bitwise`` flag true (the Pallas kernels agree
   with their jnp oracles);
-* the fused round kernel stays within ``FUSED_RATIO_MAX`` of the unfused jnp chain in interpret
-  mode — a regression backstop, not a speedup claim: on shared CI runners interpret-mode timing
-  is noisy, so the bound is deliberately loose (on a quiet machine the median ratio is ~1.0 at
-  the benched shapes; the compiled TPU path is where the fused pass wins).
+* the fused round kernels (plain AND compressed-dq) stay within ``FUSED_RATIO_MAX`` of their
+  unfused jnp chains in interpret mode — a regression backstop, not a speedup claim: on shared
+  CI runners interpret-mode timing is noisy, so the bound is deliberately loose (on a quiet
+  machine the median ratio is ~1.0 at the benched shapes; the compiled TPU path is where the
+  fused pass wins);
+* compressed-wire rows: every asserted row is ``within_budget`` (measured collective-permute
+  bytes <= the analytic codes+scales budget), int8 rows show >= ``WIRE_REDUCTION_MIN`` payload
+  reduction vs f32, and the collective-permute count equals the Theorem 1/2 round count.
 
 Usage:  PYTHONPATH=src python -m benchmarks.ci_gate [--out BENCH_ci.json]
 Exit code 0 iff every check passes.
@@ -27,7 +32,11 @@ import sys
 # headroom for shared-runner noise: interpret-mode medians have been
 # observed up to ~1.3 on a loaded machine at the smaller benched shape.
 FUSED_RATIO_MAX = 2.0
-ONLY = "rounds,kernels"
+# int8 wire = 1 + 4/group bytes/elem vs 4 for f32 -> 3.97x at group=512;
+# 3.0 leaves room for smaller groups without letting a scales-bloat or
+# padding regression through.
+WIRE_REDUCTION_MIN = 3.0
+ONLY = "rounds,kernels,wire"
 
 
 def parse_csv(text: str) -> list[dict]:
@@ -62,11 +71,31 @@ def check(rows: list[dict]) -> list[str]:
             if ratio > FUSED_RATIO_MAX:
                 msg = f"{row['name']}: fused/unfused ratio {ratio:.3f} > {FUSED_RATIO_MAX}"
                 failures.append(msg + " (interpret-mode noise backstop)")
+        if row["name"].startswith("wire/"):
+            f = row["fields"]
+            if "within_budget" in f and f["within_budget"] != "True":
+                failures.append(
+                    f"{row['name']}: wire bytes exceed the codes+scales budget "
+                    f"(cp_bytes={f.get('cp_bytes')}, budget={f.get('budget')})"
+                )
+            if f.get("rounds") != f.get("theory_rounds"):
+                failures.append(
+                    f"{row['name']}: {f.get('rounds')} collective-permutes, "
+                    f"want {f.get('theory_rounds')} (compression must not change rounds)"
+                )
+            if row["name"].endswith("_int8") and "reduction_vs_f32" in f:
+                red = float(f["reduction_vs_f32"])
+                if red < WIRE_REDUCTION_MIN:
+                    failures.append(
+                        f"{row['name']}: payload reduction {red:.2f}x < {WIRE_REDUCTION_MIN}x"
+                    )
     names = {row["name"] for row in rows}
     if not any(n.startswith("rounds/") for n in names):
         failures.append("no rounds/ benchmark rows produced")
     if not any("fused_round" in n for n in names):
         failures.append("no kernels/fused_round rows produced")
+    if not any(n.startswith("wire/") and n.endswith("_int8") for n in names):
+        failures.append("no wire/*_int8 compressed-payload rows produced")
     return failures
 
 
@@ -100,6 +129,7 @@ def main(argv=None) -> int:
         "rows": rows,
         "failures": failures,
         "fused_ratio_max": FUSED_RATIO_MAX,
+        "wire_reduction_min": WIRE_REDUCTION_MIN,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)

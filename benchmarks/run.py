@@ -10,6 +10,9 @@ and the Corollary-2 schedule family.  Benchmarks:
   collectives  wall-clock of the shard_map collectives on 8 simulated
                devices (subprocess; structure demo, not TPU perf)
   kernels      Pallas interpret-mode vs jnp-ref timing + allclose
+  wire         measured bytes-on-wire per (collective × wire format) from
+               compiled HLO vs the analytic codes+scales budget — the
+               int8 wire format's ~3.9x β-term reduction, machine-checked
   roofline     re-emit the dry-run roofline table (reads reports/dryrun)
 
 Output: ``name,us_per_call,derived`` CSV rows.
@@ -95,6 +98,20 @@ def bench_collectives():
 
 
 # ---------------------------------------------------------------------------
+def bench_wire():
+    here = os.path.dirname(os.path.abspath(__file__))
+    worker = os.path.join(here, "_wire_worker.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, worker], capture_output=True,
+                          text=True, timeout=900, env=env)
+    if proc.returncode != 0:
+        emit("wire/ERROR", 0.0, proc.stderr[-200:].replace("\n", " "))
+        return
+    print(proc.stdout, end="")
+
+
+# ---------------------------------------------------------------------------
 def bench_kernels():
     import jax
     import jax.numpy as jnp
@@ -168,6 +185,53 @@ def bench_kernels():
     emit("kernels/quantize_16x4096", us,
          f"compression={x.size * 4 / comp:.2f}x")
 
+    # Compressed round (dequant + fold + requant-next-send, one pass) vs
+    # its jnp oracle on the same mid-game round geometry; both jitted —
+    # under jit the two are bitwise-equal (identical arithmetic; XLA
+    # makes the same contraction choices for both graphs).
+    from repro.kernels import fused_round_dq
+    from repro.kernels.ref import fused_round_dq_ref, quantize_ref
+
+    def one_dq_round(f):
+        @jax.jit
+        def run(live, c, s):
+            return f(live, c, s, nb=4, next_lo=4, op="add", group=512)
+        return run
+
+    dq_fused = one_dq_round(fused_round_dq)
+    dq_ref = one_dq_round(fused_round_dq_ref)
+    for cols in [16384, 65536]:
+        live = jnp.asarray(rng.standard_normal((8, cols)), jnp.float32)
+        c, s = quantize_ref(
+            jnp.asarray(rng.standard_normal((4, cols)), jnp.float32),
+            group=512)
+        c, s = jax.device_put(c), jax.device_put(s)
+
+        def timed_dq(f, iters=20):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                k, sd = f(live, c, s)
+            k.block_until_ready()
+            return (time.perf_counter() - t0) / iters * 1e6
+
+        for f in (dq_fused, dq_ref):
+            k, _ = f(live, c, s)
+            k.block_until_ready()
+        t_fused, t_ref, ratios = 1e30, 1e30, []
+        for _ in range(9):
+            tf, tu = timed_dq(dq_fused), timed_dq(dq_ref)
+            ratios.append(tf / tu)
+            t_fused, t_ref = min(t_fused, tf), min(t_ref, tu)
+        ratio = sorted(ratios)[len(ratios) // 2]
+        kf, sf = dq_fused(live, c, s)
+        ku, su = dq_ref(live, c, s)
+        ok = bool(jnp.array_equal(kf, ku)
+                  and jnp.array_equal(sf[0], su[0])
+                  and jnp.array_equal(sf[1], su[1]))
+        emit(f"kernels/fused_round_dq_8x{cols}", t_fused,
+             f"bitwise={ok};unfused_us={t_ref:.3f};"
+             f"ratio={ratio:.3f};interpret=True")
+
 
 # ---------------------------------------------------------------------------
 def bench_roofline():
@@ -202,6 +266,7 @@ BENCHES = {
     "cost_model": bench_cost_model,
     "collectives": bench_collectives,
     "kernels": bench_kernels,
+    "wire": bench_wire,
     "roofline": bench_roofline,
 }
 

@@ -19,7 +19,12 @@ context that binds ``axis_name``.  Baselines implemented alongside:
 * ``xla_*`` — XLA's built-in psum / psum_scatter / all_gather for A/B tests.
 
 Payload hooks (``compress``/``decompress``) implement per-round gradient
-compression (beyond-paper, §Perf).
+compression (beyond-paper, §Perf).  The first-class compressed path is
+``wire_dtype="int8"``: each round's send payload becomes int8 codes +
+per-group f32 scales packed into ONE int8 wire buffer (still exactly one
+collective-permute per round), folded on receive by a single fused
+dequantize-⊕(-requantize) pass — see the README's compressed wire format
+section.
 
 Every circulant collective takes ``use_fused_kernel`` (default ``None`` =
 auto): ``True`` routes each round's local buffer work through the fused
@@ -43,7 +48,10 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import compat
-from repro.kernels import fused_round, permute_rows, resolve_fused
+from repro.kernels import (DEFAULT_GROUP, fused_round, fused_round_dq,
+                           pack_wire, permute_rows, quantize_rows,
+                           resolve_fused, unpack_wire)
+from repro.kernels import ref as _kref
 from .schedule import (allgather_plan, ceil_log2, reduce_scatter_plan)
 
 Array = jax.Array
@@ -90,6 +98,32 @@ def _fwd_perm(p: int, s: int) -> list[tuple[int, int]]:
     return [(i, (i + s) % p) for i in range(p)]
 
 
+WIRE_DTYPES = (None, "int8")
+
+
+def _check_wire(wire_dtype, x: Array, op, compress, decompress=None) -> bool:
+    """Validate the ``wire_dtype`` kwarg; returns True iff compression is
+    requested.  int8 wire needs float payloads and a named ⊕ (the fused
+    dequant-fold kernel has no callable-op form), and is mutually
+    exclusive with the generic compress/decompress hooks."""
+    if wire_dtype is None:
+        return False
+    if wire_dtype not in WIRE_DTYPES:
+        raise ValueError(
+            f"unknown wire_dtype {wire_dtype!r}; have {WIRE_DTYPES}")
+    if compress is not None or decompress is not None:
+        raise ValueError(
+            "wire_dtype and compress/decompress hooks are mutually "
+            "exclusive")
+    if op is not None and not isinstance(op, str):
+        raise ValueError(
+            f"wire_dtype needs a named op ('add'/'max'/'min'), got {op!r}")
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        raise ValueError(
+            f"wire_dtype='int8' needs a float payload, got {x.dtype}")
+    return True
+
+
 def _bwd_perm(p: int, s: int) -> list[tuple[int, int]]:
     """Data on rank i goes to rank (i - s) mod p  (allgather phase)."""
     return [(i, (i - s) % p) for i in range(p)]
@@ -109,6 +143,8 @@ def circulant_reduce_scatter(
     compress: Callable[[Array], Any] | None = None,
     decompress: Callable[[Any], Array] | None = None,
     use_fused_kernel: bool | None = None,
+    wire_dtype: str | None = None,
+    wire_group: int = DEFAULT_GROUP,
 ) -> Array:
     """Paper Algorithm 1.  ``x``: per-rank input vector, leading dim n
     divisible by p.  Returns rank r's reduced block  (n/p, *rest):
@@ -124,7 +160,15 @@ def circulant_reduce_scatter(
     With ``use_fused_kernel`` the per-round fold + next-send assembly runs
     as one Pallas kernel pass (see module docstring); the round structure
     and every ppermute are unchanged.
+
+    ``wire_dtype="int8"`` (default ``None`` = off) compresses every
+    round's send payload to int8 codes + per-group f32 scales packed into
+    ONE int8 wire buffer (``wire_group`` elements per scale), cutting the
+    β-term bytes ~4x at a bounded quantization error; accumulation stays
+    f32 and the round/ppermute structure is unchanged.  Lossy — see the
+    README's compressed-wire-format section.
     """
+    wired = _check_wire(wire_dtype, x, op, compress, decompress)
     reduce_fn = _resolve_op(op)
     p = compat.axis_size(axis_name)
     if p == 1:
@@ -133,6 +177,10 @@ def circulant_reduce_scatter(
     R = _as_blocks(x, p)
     # Rotated initial copy: R[i] = V[(r + i) mod p]   (paper: the gamma*m copy)
     R = jnp.roll(R, -r, axis=0)
+    if wired:
+        return _compressed_reduce_scatter_rounds(
+            R, axis_name, p, schedule, group, op, wire_group,
+            fused=resolve_fused(use_fused_kernel))
     if resolve_fused(use_fused_kernel) and isinstance(op, str):
         return _fused_reduce_scatter_rounds(
             R, axis_name, p, schedule, group, op, compress, decompress)
@@ -186,6 +234,56 @@ def _fused_reduce_scatter_rounds(R: Array, axis_name: str, p: int,
     return live[0].reshape(blk_shape)
 
 
+def _compressed_reduce_scatter_rounds(R: Array, axis_name: str, p: int,
+                                      schedule: str, group: int | None,
+                                      op: str, wire_group: int,
+                                      fused: bool) -> Array:
+    """Algorithm 1's round loop on the int8 wire format.
+
+    The rotated block buffer is promoted to an f32 (blocks, block_numel)
+    accumulation buffer whose columns are padded to a whole number of
+    quantization groups.  Every round then ppermutes ONE packed int8
+    buffer ([codes | scale bytes], see kernels.quantize) and runs a
+    single dequantize + ⊕-fold + requantize-next-send pass — the Pallas
+    ``fused_round_dq`` kernel when ``fused``, its jnp oracle otherwise
+    (bitwise-identical arithmetic; both jitted).  Round count and
+    ppermute sequence match the uncompressed path exactly.
+    """
+    blk_shape, out_dtype = R.shape[1:], R.dtype
+    R2 = R.reshape(p, -1).astype(jnp.float32)
+    cols = R2.shape[1]
+    g = min(wire_group, cols)
+    pc = (-cols) % g
+    if pc:
+        R2 = jnp.pad(R2, ((0, 0), (0, pc)))
+    plans = reduce_scatter_plan(p, schedule, group)
+    live = R2[: plans[0].lo]
+    first = R2[plans[0].lo : plans[0].hi]
+    if fused:
+        codes, scales = quantize_rows(first, group=g)
+    else:
+        codes, scales = _kref.quantize_ref(first, group=g)
+    wire = pack_wire(codes, scales)
+    for k, pl in enumerate(plans):
+        Tw = compat.ppermute(wire, axis_name, _fwd_perm(p, pl.skip))
+        rc, rs = unpack_wire(Tw, live.shape[1], group=g)
+        next_lo = plans[k + 1].lo if k + 1 < len(plans) else pl.lo
+        if fused:
+            live, send = fused_round_dq(live, rc, rs, nb=pl.nblocks,
+                                        next_lo=next_lo, op=op, group=g)
+        else:
+            live, send = _kref.fused_round_dq_ref(live, rc, rs,
+                                                  nb=pl.nblocks,
+                                                  next_lo=next_lo, op=op,
+                                                  group=g)
+        if send is not None:
+            wire = pack_wire(*send)
+    out = live[0]
+    if pc:
+        out = out[:cols]
+    return out.reshape(blk_shape).astype(out_dtype)
+
+
 # ---------------------------------------------------------------------------
 # Allgather — Algorithm 2's second phase (reversed skip stack), standalone
 # ---------------------------------------------------------------------------
@@ -197,6 +295,8 @@ def circulant_allgather(
     schedule: str = "halving",
     group: int | None = None,
     use_fused_kernel: bool | None = None,
+    wire_dtype: str | None = None,
+    wire_group: int = DEFAULT_GROUP,
 ) -> Array:
     """Gather rank blocks in rank order.  ``x``: rank r's block
     (blk, *rest); returns (p*blk, *rest) identical on all ranks.
@@ -213,10 +313,15 @@ def circulant_allgather(
     dynamic-update-slice into an in-place write under jit).  Send payloads
     are buffer prefixes, already contiguous.
     """
+    wired = _check_wire(wire_dtype, x, None, None)
     p = compat.axis_size(axis_name)
     if p == 1:
         return x
     r = lax.axis_index(axis_name)
+    if wired:
+        return _compressed_allgather_rounds(
+            x, axis_name, p, r, schedule, group, wire_group,
+            fused=resolve_fused(use_fused_kernel))
     if resolve_fused(use_fused_kernel):
         buf = jnp.zeros((p, *x.shape), x.dtype)
         buf = lax.dynamic_update_slice_in_dim(buf, x[None], 0, axis=0)
@@ -236,6 +341,53 @@ def circulant_allgather(
     return out.reshape(p * x.shape[0], *x.shape[1:])
 
 
+def _compressed_allgather_rounds(x: Array, axis_name: str, p: int, r,
+                                 schedule: str, group: int | None,
+                                 wire_group: int, fused: bool) -> Array:
+    """Allgather on the int8 wire format.
+
+    Allgather has no ⊕, so each rank quantizes its own block ONCE; the
+    rounds then move the packed int8 wire rows unmodified (every element
+    is quantized exactly once — the error is a single quantization step).
+    ``fused`` selects the preallocated-buffer round structure (static
+    in-place updates) vs the concat chain — both move identical bytes and
+    one ppermute per round.  All ranks dequantize the same codes, so the
+    gathered result is bitwise-replicated (Theorem 2's invariant
+    survives compression).
+    """
+    x2 = x.reshape(1, -1).astype(jnp.float32)
+    cols = x2.shape[1]
+    g = min(wire_group, cols)
+    pc = (-cols) % g
+    if pc:
+        x2 = jnp.pad(x2, ((0, 0), (0, pc)))
+    if fused:
+        codes, scales = quantize_rows(x2, group=g)
+    else:
+        codes, scales = _kref.quantize_ref(x2, group=g)
+    row = pack_wire(codes, scales)                 # (1, wc) int8
+    wc = row.shape[1]
+    if fused:
+        buf = jnp.zeros((p, wc), jnp.int8)
+        buf = lax.dynamic_update_slice_in_dim(buf, row, 0, axis=0)
+        for pl in allgather_plan(p, schedule, group):
+            payload = lax.slice_in_dim(buf, 0, pl.nblocks, axis=0)
+            T = compat.ppermute(payload, axis_name, _bwd_perm(p, pl.skip))
+            buf = lax.dynamic_update_slice_in_dim(buf, T, pl.lo, axis=0)
+    else:
+        buf = row
+        for pl in allgather_plan(p, schedule, group):
+            payload = buf[:pl.nblocks]
+            T = compat.ppermute(payload, axis_name, _bwd_perm(p, pl.skip))
+            buf = jnp.concatenate([buf, T], axis=0)
+    codes, scales = unpack_wire(buf, x2.shape[1], group=g)
+    vals = _kref.dequant_ref(codes, scales, group=g)   # (p, cols_pad) f32
+    if pc:
+        vals = vals[:, :cols]
+    out = jnp.roll(vals, r, axis=0)  # un-rotate: out[j] = block of rank j
+    return out.reshape(p * x.shape[0], *x.shape[1:]).astype(x.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Algorithm 2 — allreduce
 # ---------------------------------------------------------------------------
@@ -250,15 +402,21 @@ def circulant_allreduce(
     compress: Callable[[Array], Any] | None = None,
     decompress: Callable[[Any], Array] | None = None,
     use_fused_kernel: bool | None = None,
+    wire_dtype: str | None = None,
+    wire_group: int = DEFAULT_GROUP,
 ) -> Array:
     """Paper Algorithm 2: reduce-scatter + reversed allgather.
-    2*ceil(log2 p) ppermutes, 2(p-1) blocks moved, p-1 reductions/rank."""
+    2*ceil(log2 p) ppermutes, 2(p-1) blocks moved, p-1 reductions/rank.
+    ``wire_dtype="int8"`` compresses both phases (RS partial sums are
+    requantized per round; AG blocks are quantized once)."""
     w = circulant_reduce_scatter(
         x, axis_name, schedule=schedule, op=op, group=group,
         compress=compress, decompress=decompress,
-        use_fused_kernel=use_fused_kernel)
+        use_fused_kernel=use_fused_kernel, wire_dtype=wire_dtype,
+        wire_group=wire_group)
     return circulant_allgather(w, axis_name, schedule=schedule, group=group,
-                               use_fused_kernel=use_fused_kernel)
+                               use_fused_kernel=use_fused_kernel,
+                               wire_dtype=wire_dtype, wire_group=wire_group)
 
 
 # ---------------------------------------------------------------------------

@@ -28,10 +28,14 @@ class CommModel:
     alpha: per-round latency [s]
     beta:  per-element transmission time [s/elem]  (elem = one vector elem)
     gamma: per-element reduction time [s/elem]
+    elem_bytes: bytes of one UNCOMPRESSED vector element (what beta was
+        calibrated against); lets the wire-format scaling below convert a
+        compressed bytes-per-element figure back into a beta multiplier.
     """
     alpha: float
     beta: float
     gamma: float
+    elem_bytes: float = 4.0
 
     @staticmethod
     def tpu_v5e(elem_bytes: int = 2) -> "CommModel":
@@ -40,44 +44,85 @@ class CommModel:
         (2 reads + 1 write per elem @ 819 GB/s)."""
         return CommModel(alpha=1e-6,
                          beta=elem_bytes / 50e9,
-                         gamma=3 * elem_bytes / 819e9)
+                         gamma=3 * elem_bytes / 819e9,
+                         elem_bytes=elem_bytes)
+
+
+def wire_bytes_per_elem(elem_bytes: float, wire_dtype: str | None = None,
+                        wire_group: int = 512) -> float:
+    """Bytes on the wire per payload element under a wire format.
+
+    ``int8`` sends one code byte per element plus one f32 scale per
+    ``wire_group`` elements (the packed [codes | scale bytes] buffer of
+    kernels.quantize) — ``1 + 4/group`` bytes/elem vs ``elem_bytes``
+    uncompressed, i.e. a ~3.9x β-term reduction from f32 at the default
+    group of 512."""
+    if wire_dtype is None:
+        return float(elem_bytes)
+    if wire_dtype == "int8":
+        return 1.0 + 4.0 / wire_group
+    raise ValueError(f"unknown wire_dtype {wire_dtype!r}")
+
+
+def _wire_scale(model: CommModel, wire_dtype: str | None,
+                wire_group: int) -> float:
+    """β multiplier for a wire format (1.0 when uncompressed)."""
+    if wire_dtype is None:
+        return 1.0
+    return (wire_bytes_per_elem(model.elem_bytes, wire_dtype, wire_group)
+            / model.elem_bytes)
 
 
 def _round_cost(plans: tuple[RoundPlan, ...], block_elems: float,
                 model: CommModel, p: int, *, torus: bool,
-                reduce_on_recv: bool) -> float:
+                reduce_on_recv: bool, wire_scale: float = 1.0) -> float:
     t = 0.0
     for pl in plans:
         m_k = pl.nblocks * block_elems
         hops = min(pl.skip, p - pl.skip) if torus else 1
-        t += model.alpha + model.beta * hops * m_k
+        t += model.alpha + model.beta * wire_scale * hops * m_k
         if reduce_on_recv:
             t += model.gamma * m_k
     return t
 
 
 def t_reduce_scatter(m: float, p: int, model: CommModel,
-                     schedule: str = "halving", *, torus: bool = False) -> float:
-    """Predicted time of Algorithm 1 on m total elements (uniform blocks)."""
+                     schedule: str = "halving", *, torus: bool = False,
+                     wire_dtype: str | None = None,
+                     wire_group: int = 512) -> float:
+    """Predicted time of Algorithm 1 on m total elements (uniform blocks).
+    ``wire_dtype="int8"`` scales the β term to the compressed payload
+    (codes + scales bytes); α (round count) and γ (every element is still
+    reduced) are unchanged."""
     if p == 1:
         return 0.0
     plans = reduce_scatter_plan(p, schedule)
-    return _round_cost(plans, m / p, model, p, torus=torus, reduce_on_recv=True)
+    return _round_cost(plans, m / p, model, p, torus=torus,
+                       reduce_on_recv=True,
+                       wire_scale=_wire_scale(model, wire_dtype, wire_group))
 
 
 def t_allgather(m: float, p: int, model: CommModel,
-                schedule: str = "halving", *, torus: bool = False) -> float:
+                schedule: str = "halving", *, torus: bool = False,
+                wire_dtype: str | None = None,
+                wire_group: int = 512) -> float:
     if p == 1:
         return 0.0
     plans = allgather_plan(p, schedule)
-    return _round_cost(plans, m / p, model, p, torus=torus, reduce_on_recv=False)
+    return _round_cost(plans, m / p, model, p, torus=torus,
+                       reduce_on_recv=False,
+                       wire_scale=_wire_scale(model, wire_dtype, wire_group))
 
 
 def t_allreduce(m: float, p: int, model: CommModel,
-                schedule: str = "halving", *, torus: bool = False) -> float:
+                schedule: str = "halving", *, torus: bool = False,
+                wire_dtype: str | None = None,
+                wire_group: int = 512) -> float:
     """Algorithm 2 = Algorithm 1 + reversed allgather (Theorem 2)."""
-    return (t_reduce_scatter(m, p, model, schedule, torus=torus)
-            + t_allgather(m, p, model, schedule, torus=torus))
+    return (t_reduce_scatter(m, p, model, schedule, torus=torus,
+                             wire_dtype=wire_dtype, wire_group=wire_group)
+            + t_allgather(m, p, model, schedule, torus=torus,
+                          wire_dtype=wire_dtype, wire_group=wire_group))
 
 
 def t_corollary1(m: float, p: int, model: CommModel) -> float:

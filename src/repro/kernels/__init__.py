@@ -1,18 +1,26 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-block_reduce — the per-round ⊕ fold of Algorithm 1 (γ term), standalone.
-fused_round  — the whole local side of a circulant round: ⊕-fold of the
-               received blocks PLUS contiguous layout of the next round's
-               send blocks, one HBM pass (the collectives' hot path).
-quantize     — int8 group quantization + fused dequant-add for compressed
-               communication rounds (β term).
+block_reduce   — the per-round ⊕ fold of Algorithm 1 (γ term), standalone.
+fused_round    — the whole local side of a circulant round: ⊕-fold of the
+                 received blocks PLUS contiguous layout of the next
+                 round's send blocks, one HBM pass (the collectives' hot
+                 path).
+fused_round_dq — the compressed-round variant: dequantize the received
+                 int8 payload + ⊕-fold + requantize the next round's
+                 send rows, one HBM pass (the wire_dtype="int8" hot path).
+quantize       — int8 group quantization + fused dequant-add, plus the
+                 packed [codes | scale bytes] wire format
+                 (pack_wire/unpack_wire) for compressed communication
+                 rounds (β term).
 
 Each kernel has a pure-jnp oracle in ref.py; ops.py holds the jitted,
 shape-flexible public wrappers.
 """
 from .fused_round import (  # noqa: F401
     fused_round,
+    fused_round_dq,
     permute_rows,
+    quantize_rows,
     resolve_fused,
 )
 from .ops import (  # noqa: F401
@@ -21,4 +29,11 @@ from .ops import (  # noqa: F401
     fused_block_reduce,
     make_compressors,
     quantize_blocks,
+)
+from .quantize import (  # noqa: F401
+    DEFAULT_GROUP,
+    pack_wire,
+    unpack_wire,
+    wire_ngroups,
+    wire_width,
 )

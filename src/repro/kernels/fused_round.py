@@ -37,9 +37,11 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro import compat
+from . import quantize as _qz
 from .block_reduce import DEFAULT_COL_TILE, _OPS
 
 
@@ -167,6 +169,146 @@ def fused_round(
     if final:
         return res, None
     return res[0], res[1]
+
+
+# ---------------------------------------------------------------------------
+# Compressed (int8 wire) round: dequant + ⊕-fold + requant-next-send,
+# one HBM traversal (the wire_dtype="int8" hot loop)
+# ---------------------------------------------------------------------------
+
+def _dq_round_body(x_ref, c_ref, s_ref, keep_ref, send_c_ref, send_s_ref, *,
+                   op: str, nb: int, next_lo: int, lo: int, g: int):
+    """Compressed-round kernel body; ``send_*`` refs are None on the final
+    round.  Same static keep/send routing as ``_round_body``, but the
+    received payload arrives as int8 codes + f32 scales (dequantized in
+    VMEM, never materialized as f32 in HBM) and the next round's send rows
+    leave requantized.  Elementwise expressions mirror ``ref.quantize_ref``
+    / ``ref.dequant_ref`` exactly so the interpret path is bitwise-equal
+    to the jnp reference path."""
+    reduce_fn = _OPS[op]
+    cols = c_ref.shape[1]
+    q = c_ref[...].astype(jnp.float32).reshape(nb, cols // g, g)
+    deq = (q * s_ref[...][..., None]).reshape(nb, cols)
+    folded = reduce_fn(x_ref[:nb], deq)
+    a = min(nb, next_lo)
+    if a:
+        _store_rows(keep_ref, 0, a, folded[:a] if a < nb else folded)
+    if a < next_lo:
+        _store_rows(keep_ref, a, next_lo, x_ref[a:next_lo])
+    if send_c_ref is None:
+        return
+    parts = []
+    if nb > next_lo:
+        parts.append(folded[next_lo:nb])
+    b = max(nb, next_lo)
+    if b < lo:
+        parts.append(x_ref[b:lo])
+    send = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    ns = lo - next_lo
+    sg = send.reshape(ns, cols // g, g)
+    amax = jnp.max(jnp.abs(sg), axis=2)
+    scale = amax * _qz._INV127 + _qz._EPS
+    codes = jnp.clip(jnp.round(sg / scale[..., None]), -127, 127)
+    send_c_ref[...] = codes.reshape(ns, cols).astype(jnp.int8)
+    send_s_ref[...] = scale
+
+
+def _dq_kernel_keep_send(x_ref, c_ref, s_ref, keep_ref, send_c_ref,
+                         send_s_ref, *, op, nb, next_lo, lo, g):
+    _dq_round_body(x_ref, c_ref, s_ref, keep_ref, send_c_ref, send_s_ref,
+                   op=op, nb=nb, next_lo=next_lo, lo=lo, g=g)
+
+
+def _dq_kernel_keep_only(x_ref, c_ref, s_ref, keep_ref, *, op, nb, next_lo,
+                         lo, g):
+    _dq_round_body(x_ref, c_ref, s_ref, keep_ref, None, None, op=op, nb=nb,
+                   next_lo=next_lo, lo=lo, g=g)
+
+
+def fused_round_dq(
+    live: jax.Array,
+    codes: jax.Array,
+    scales: jax.Array,
+    *,
+    nb: int,
+    next_lo: int,
+    op: str = "add",
+    group: int = _qz.DEFAULT_GROUP,
+    col_tile: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """One fused COMPRESSED circulant round over 2-D buffers.
+
+    ``live``: (lo, cols) f32 accumulation buffer, ``cols`` divisible by
+    the quantization group ``g = min(group, cols)``; ``codes``/``scales``:
+    the received int8 payload for ``nb`` blocks.  In ONE pass: dequantize,
+    ⊕-fold into the buffer head, emit ``keep`` rows [0, next_lo), and
+    requantize rows [next_lo, lo) as the next round's ``(codes, scales)``
+    send pair (``None`` when ``next_lo == lo``, the final round).
+    jnp oracle: ``ref.fused_round_dq_ref`` (bitwise-equal in interpret).
+    """
+    if live.ndim != 2 or codes.ndim != 2:
+        raise ValueError(
+            f"need 2-D buffers, got {live.shape} and {codes.shape}")
+    lo, cols = live.shape
+    g = min(group, cols)
+    if cols % g:
+        raise ValueError(f"cols {cols} not divisible by group {g}")
+    ng = cols // g
+    if codes.shape != (nb, cols):
+        raise ValueError(f"codes shape {codes.shape} != ({nb}, {cols})")
+    if scales.shape != (nb, ng):
+        raise ValueError(f"scales shape {scales.shape} != ({nb}, {ng})")
+    if not (1 <= nb <= lo and 1 <= next_lo <= lo):
+        raise ValueError(
+            f"invalid round: nb={nb}, next_lo={next_lo}, lo={lo}")
+    if interpret is None:
+        interpret = _interpret_default()
+    final = next_lo == lo
+    ns = lo - next_lo
+    kernel = functools.partial(
+        _dq_kernel_keep_only if final else _dq_kernel_keep_send,
+        op=op, nb=nb, next_lo=next_lo, lo=lo, g=g)
+    out_shape: object = jax.ShapeDtypeStruct((next_lo, cols), jnp.float32)
+    if not final:
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((ns, cols), jnp.int8),
+                     jax.ShapeDtypeStruct((ns, ng), jnp.float32)]
+    kw: dict = {"interpret": True}
+    if not interpret:
+        # Compiled (TPU): column tiles aligned to whole quantization
+        # groups so each grid step owns its scales slice.
+        ct = DEFAULT_COL_TILE if col_tile is None else col_tile
+        ct = min(cols, max(g, (ct // g) * g))
+        out_specs: object = pl.BlockSpec((next_lo, ct), lambda j: (0, j))
+        if not final:
+            out_specs = [out_specs,
+                         pl.BlockSpec((ns, ct), lambda j: (0, j)),
+                         pl.BlockSpec((ns, ct // g), lambda j: (0, j))]
+        kw = {
+            "grid": (pl.cdiv(cols, ct),),
+            "in_specs": [
+                pl.BlockSpec((lo, ct), lambda j: (0, j)),
+                pl.BlockSpec((nb, ct), lambda j: (0, j)),
+                pl.BlockSpec((nb, ct // g), lambda j: (0, j)),
+            ],
+            "out_specs": out_specs,
+        }
+    res = pl.pallas_call(kernel, out_shape=out_shape, **kw)(
+        live, codes, scales)
+    if final:
+        return res, None
+    return res[0], (res[1], res[2])
+
+
+def quantize_rows(x: jax.Array, *, group: int = _qz.DEFAULT_GROUP,
+                  interpret: bool | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Pallas group-quantize with the fused-round interpret default — the
+    round-0 send quantization of the compressed collectives."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _qz.quantize(x, group=group, row_tile=1, interpret=interpret)
 
 
 def _permute_kernel(x_ref, o_ref, *, perm: tuple[int, ...]):

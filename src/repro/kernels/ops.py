@@ -58,13 +58,12 @@ def fused_block_reduce(a: jax.Array, b: jax.Array, *, op: str = "add",
 def quantize_blocks(x: jax.Array, *, group: int = _qz.DEFAULT_GROUP,
                     backend: str = "pallas"):
     """int8-quantize a payload; returns {'codes', 'scales'} pytree whose
-    leaves ppermute independently (the compressed-round payload)."""
+    leaves ppermute independently (the compressed-round payload).  Ragged
+    shapes are handled inside the kernel (pad-and-slice), so ``codes``
+    has exactly the flattened input shape."""
     x2, orig_shape = _to2d(x)
-    rows, cols = x2.shape
+    cols = x2.shape[1]
     g = min(group, cols)
-    pc = (-cols) % g
-    if pc:
-        x2 = jnp.pad(x2, ((0, 0), (0, pc)))
     if backend == "jnp":
         codes, scales = _ref.quantize_ref(x2, group=g)
     else:
@@ -78,7 +77,7 @@ def dequantize_blocks(payload, *, backend: str = "pallas") -> jax.Array:
     """Inverse of quantize_blocks (unfused; for tests/serving)."""
     orig_shape, cols, g = payload["meta"]
     x = _ref.dequant_ref(payload["codes"], payload["scales"], group=g)
-    return x[:, :cols].reshape(orig_shape)
+    return x.reshape(orig_shape)
 
 
 def dequant_accumulate(acc: jax.Array, payload, *,
@@ -86,16 +85,14 @@ def dequant_accumulate(acc: jax.Array, payload, *,
     """Fused ``acc + dequant(payload)`` — the compressed-round ⊕."""
     orig_shape, cols, g = payload["meta"]
     acc2, _ = _to2d(acc)
-    pc = (-cols) % g
-    accp = jnp.pad(acc2, ((0, 0), (0, pc))) if pc else acc2
     if backend == "jnp":
-        out = _ref.dequant_add_ref(accp, payload["codes"], payload["scales"],
+        out = _ref.dequant_add_ref(acc2, payload["codes"], payload["scales"],
                                    group=g)
     else:
-        out = _qz.dequant_add(accp, payload["codes"], payload["scales"],
+        out = _qz.dequant_add(acc2, payload["codes"], payload["scales"],
                               group=g, row_tile=1,
                               interpret=_interpret_default())
-    return out[:, :cols].reshape(orig_shape)
+    return out.reshape(orig_shape)
 
 
 def make_compressors(group: int = _qz.DEFAULT_GROUP, backend: str = "pallas"):

@@ -9,24 +9,62 @@ communication rounds (β-term reducer, DESIGN §3).
                   never materialized as f32 in HBM).
 
 Group layout: scales[i, g] covers codes[i, g*G:(g+1)*G].  G = col_tile.
+Ragged shapes (rows not divisible by ``row_tile``, cols not divisible by
+``group``) are zero-padded internally and sliced back — the last group of
+a row may cover fewer than G real elements; its scale is the amax of the
+real elements (zero padding never raises an amax).
+
+The int8 WIRE FORMAT for compressed collective rounds is also defined
+here: one contiguous int8 buffer per round, ``[codes | scale bytes]``
+along the column axis, so a compressed round still ppermutes exactly ONE
+array — the lowered HLO keeps one collective-permute per round and the
+bytes on the wire are exactly ``cols + 4*ceil(cols/G)`` per row.
+``pack_wire`` / ``unpack_wire`` convert between (codes, scales) and the
+wire buffer via same-width bitcasts (f32 ↔ u32 ↔ 4×u8), which every
+supported JAX lowers on every backend.
+
 Target: TPU; validated on CPU via interpret=True.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 
 DEFAULT_GROUP = 512  # elements per quantization group (one scale each)
 _EPS = 1e-30
+# Explicit reciprocal: a literal ``amax / 127.0`` is rewritten to a
+# reciprocal-multiply by XLA in some contexts but not others (jit vs pallas
+# interpret), producing 1-ulp scale drift between the kernel and the jnp
+# reference.  A constant multiply is the same single IEEE op everywhere.
+_INV127 = 1.0 / 127.0
+
+
+def wire_ngroups(cols: int, group: int = DEFAULT_GROUP) -> int:
+    """Number of (per-row) quantization groups covering ``cols`` columns."""
+    g = min(group, cols)
+    return -(-cols // g)
+
+
+def wire_width(cols: int, group: int = DEFAULT_GROUP) -> int:
+    """int8 wire-buffer columns for ``cols`` payload columns: codes plus
+    four scale bytes per group (the compressed round's β-term bytes/row)."""
+    return cols + 4 * wire_ngroups(cols, group)
+
+
+def _pad2(x, rt: int, g: int):
+    rows, cols = x.shape
+    pr, pc = (-rows) % rt, (-cols) % g
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
 
 
 def _quantize_kernel(x_ref, codes_ref, scale_ref):
     x = x_ref[...].astype(jnp.float32)          # (rt, G)
     amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)  # (rt, 1)
-    scale = amax / 127.0 + _EPS
+    scale = amax * _INV127 + _EPS
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     codes_ref[...] = q
     scale_ref[...] = scale
@@ -39,16 +77,21 @@ def quantize(
     row_tile: int = 8,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Symmetric int8 quantization with per-(row, group) scales."""
+    """Symmetric int8 quantization with per-(row, group) scales.
+
+    Any 2-D shape: ragged rows/cols are zero-padded to the (row_tile,
+    group) grid internally and sliced back.  Returns ``codes`` of
+    ``x.shape`` and ``scales`` of ``(rows, ceil(cols / min(group, cols)))``.
+    """
     if x.ndim != 2:
         raise ValueError(f"need 2-D input, got {x.shape}")
     rows, cols = x.shape
     g = min(group, cols)
     rt = min(row_tile, rows)
-    if rows % rt or cols % g:
-        raise ValueError(f"shape {x.shape} not divisible by ({rt},{g})")
-    grid = (rows // rt, cols // g)
-    return pl.pallas_call(
+    xp = _pad2(x, rt, g)
+    rp, cp = xp.shape
+    grid = (rp // rt, cp // g)
+    codes, scales = pl.pallas_call(
         _quantize_kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((rt, g), lambda i, j: (i, j))],
@@ -57,11 +100,15 @@ def quantize(
             pl.BlockSpec((rt, 1), lambda i, j: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((rows, cols), jnp.int8),
-            jax.ShapeDtypeStruct((rows, cols // g), jnp.float32),
+            jax.ShapeDtypeStruct((rp, cp), jnp.int8),
+            jax.ShapeDtypeStruct((rp, cp // g), jnp.float32),
         ],
         interpret=interpret,
-    )(x)
+    )(xp)
+    if (rp, cp) != (rows, cols):
+        codes = codes[:rows, :cols]
+        scales = scales[:rows]
+    return codes, scales
 
 
 def _dequant_add_kernel(acc_ref, codes_ref, scale_ref, o_ref):
@@ -80,18 +127,26 @@ def dequant_add(
     row_tile: int = 8,
     interpret: bool = False,
 ) -> jax.Array:
-    """Fused ``acc + dequant(codes, scales)`` (the compressed-round ⊕)."""
+    """Fused ``acc + dequant(codes, scales)`` (the compressed-round ⊕).
+
+    Ragged shapes are zero-padded internally (zero codes dequantize to 0,
+    so padding never perturbs the accumulator) and sliced back.
+    """
     rows, cols = codes.shape
     g = min(group, cols)
     rt = min(row_tile, rows)
+    ng = wire_ngroups(cols, g)
     if acc.shape != codes.shape:
         raise ValueError(f"acc {acc.shape} vs codes {codes.shape}")
-    if scales.shape != (rows, cols // g):
-        raise ValueError(f"scales {scales.shape}, want {(rows, cols // g)}")
-    if rows % rt or cols % g:
-        raise ValueError(f"shape {codes.shape} not divisible by ({rt},{g})")
-    grid = (rows // rt, cols // g)
-    return pl.pallas_call(
+    if scales.shape != (rows, ng):
+        raise ValueError(f"scales {scales.shape}, want {(rows, ng)}")
+    accp = _pad2(acc, rt, g)
+    codesp = _pad2(codes, rt, g)
+    rp, cp = codesp.shape
+    scalesp = scales if rp == rows else jnp.pad(scales, ((0, rp - rows),
+                                                         (0, 0)))
+    grid = (rp // rt, cp // g)
+    out = pl.pallas_call(
         _dequant_add_kernel,
         grid=grid,
         in_specs=[
@@ -100,6 +155,42 @@ def dequant_add(
             pl.BlockSpec((rt, 1), lambda i, j: (i, j)),
         ],
         out_specs=pl.BlockSpec((rt, g), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct(acc.shape, acc.dtype),
+        out_shape=jax.ShapeDtypeStruct((rp, cp), acc.dtype),
         interpret=interpret,
-    )(acc, codes, scales)
+    )(accp, codesp, scalesp)
+    if (rp, cp) != (rows, cols):
+        out = out[:rows, :cols]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# int8 wire format: [codes | scale bytes] in ONE int8 buffer per round
+# ---------------------------------------------------------------------------
+
+def pack_wire(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    """Pack int8 codes (rows, cols) + f32 scales (rows, ng) into one
+    contiguous int8 buffer (rows, cols + 4*ng) — the compressed round's
+    single ppermute payload."""
+    rows, ng = scales.shape
+    u = lax.bitcast_convert_type(scales, jnp.uint32)          # (rows, ng)
+    sb = jnp.stack([(u >> (8 * k)) & 0xFF for k in range(4)],
+                   axis=-1).astype(jnp.uint8)                 # (rows, ng, 4)
+    sb = lax.bitcast_convert_type(sb.reshape(rows, 4 * ng), jnp.int8)
+    return jnp.concatenate([codes, sb], axis=1)
+
+
+def unpack_wire(wire: jax.Array, cols: int, *,
+                group: int = DEFAULT_GROUP) -> tuple[jax.Array, jax.Array]:
+    """Inverse of ``pack_wire``: split a (rows, wire_width(cols, group))
+    int8 buffer back into codes (rows, cols) and f32 scales (rows, ng)."""
+    rows = wire.shape[0]
+    ng = wire_ngroups(cols, group)
+    if wire.shape[1] != cols + 4 * ng:
+        raise ValueError(
+            f"wire has {wire.shape[1]} cols, want {cols + 4 * ng} "
+            f"(cols={cols}, group={group})")
+    codes = wire[:, :cols]
+    sb = lax.bitcast_convert_type(wire[:, cols:], jnp.uint8)
+    sb = sb.reshape(rows, ng, 4).astype(jnp.uint32)
+    u = sum(sb[..., k] << (8 * k) for k in range(4)).astype(jnp.uint32)
+    return codes, lax.bitcast_convert_type(u, jnp.float32)

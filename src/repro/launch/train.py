@@ -48,7 +48,14 @@ def main(argv=None):
     ap.add_argument("--grad-sync", default="circulant",
                     choices=["circulant", "ring", "xla", "allreduce"])
     ap.add_argument("--schedule", default="halving")
-    ap.add_argument("--compress", default=None, choices=[None, "int8"])
+    ap.add_argument("--wire-dtype", default=None, choices=[None, "int8"],
+                    help="compressed int8 wire format for the circulant "
+                         "gradient sync (quantize-on-send, fused "
+                         "dequant-reduce rounds, error feedback)")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="disable the EF-SGD residual for compressed sync")
+    ap.add_argument("--compress", default=None, choices=[None, "int8"],
+                    help="legacy alias for --wire-dtype")
     ap.add_argument("--fused-kernel", default="auto",
                     choices=["auto", "on", "off"],
                     help="fused Pallas round kernel for the circulant "
@@ -84,7 +91,8 @@ def main(argv=None):
         recipe = ShardingRecipe(data_axes=("data",), model_axis="model")
     model = build(cfg, recipe=recipe)
     sync = GradSyncConfig(impl=args.grad_sync, schedule=args.schedule,
-                          compress=args.compress,
+                          wire_dtype=args.wire_dtype or args.compress,
+                          error_feedback=not args.no_error_feedback,
                           use_fused_kernel={"auto": None, "on": True,
                                             "off": False}[args.fused_kernel])
     built = build_step(mode, model, opt_cfg, mesh=mesh, recipe=recipe,

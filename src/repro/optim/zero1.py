@@ -25,9 +25,12 @@ Grad-sync implementations are pluggable (--grad-sync):
   xla                   lax.psum_scatter + lax.all_gather
   allreduce             plain replicated allreduce + full optimizer
                         (no ZeRO; memory baseline)
-Optional int8 compressed rounds (quantize kernels) via compress='int8';
-``use_fused_kernel`` routes the circulant rounds' local fold + send
-assembly through the fused Pallas round kernel (kernels.fused_round).
+Optional compressed gradient sync via wire_dtype='int8' (the circulant
+collectives' packed int8 wire format: per-round quantize-on-send + fused
+dequant-⊕ rounds) with an EF-SGD error-feedback residual carried in the
+optimizer state so convergence is preserved; ``use_fused_kernel`` routes
+the circulant rounds' local fold + send assembly through the fused Pallas
+round kernel (kernels.fused_round).
 
 Shard layout per leaf: axis-major blocks over ``axis_names`` order —
 rank (r0, r1) holds rows [lin * ld_pad/P, (lin+1) * ld_pad/P) with
@@ -46,7 +49,7 @@ from jax import lax
 
 from repro import compat
 from repro.core import collectives as C
-from repro.kernels import make_compressors
+from repro.kernels import dequantize_blocks, quantize_blocks
 from . import adamw
 
 
@@ -54,7 +57,14 @@ from . import adamw
 class GradSyncConfig:
     impl: str = "circulant"       # circulant | ring | xla | allreduce
     schedule: str = "halving"     # Corollary-2 schedule for circulant
-    compress: str | None = None   # None | 'int8'
+    wire_dtype: str | None = None  # None | 'int8': compressed circulant
+    #                               rounds (int8 codes + f32 group scales
+    #                               packed on the wire; ~4x fewer β bytes)
+    compress: str | None = None   # legacy alias for wire_dtype
+    error_feedback: bool = True   # EF-SGD residual for compressed sync:
+    #                               each rank keeps its local quantization
+    #                               error and adds it back into the next
+    #                               step's gradient before quantizing
     quant_group: int = 512
     min_shard_numel: int = 1024   # leaves smaller than this stay replicated
     rs_dtype: str = "float32"     # reduce-scatter payload dtype; 'bfloat16'
@@ -62,11 +72,29 @@ class GradSyncConfig:
     use_fused_kernel: bool | None = None  # fused Pallas round kernel for the
     #                               circulant RS/AG; None = auto (TPU only)
 
+    @property
+    def wire(self) -> str | None:
+        """Effective wire dtype (``wire_dtype`` wins over the legacy
+        ``compress`` spelling)."""
+        return self.wire_dtype or self.compress
+
+    @property
+    def uses_error_feedback(self) -> bool:
+        """EF is meaningful only when the sync is actually lossy: the
+        circulant impl is the one that honors ``wire_dtype`` (ring/xla
+        transmit exactly; allreduce has no sharded RS to compensate)."""
+        return (self.error_feedback and self.wire == "int8"
+                and self.impl == "circulant")
+
 
 class Zero1State(NamedTuple):
     m: object        # pytree: sharded fp32 (zero leaves) / full (tiny)
     v: object
     step: jax.Array
+    ef: object = None  # error-feedback residuals: per-rank quantization
+    #                    error, (world, *leaf) sharded over the data axes
+    #                    (zero leaves) / (1, *leaf) replicated (tiny
+    #                    leaves, unused); None when EF is off
 
 
 def data_parallel_world_static(mesh_shape: dict, axis_names) -> int:
@@ -117,10 +145,9 @@ def _rs_kwargs(sync: GradSyncConfig):
     if sync.impl == "circulant":
         kw["schedule"] = sync.schedule
         kw["use_fused_kernel"] = sync.use_fused_kernel
-        if sync.compress == "int8":
-            comp, decomp = make_compressors(group=sync.quant_group,
-                                            backend="jnp")
-            kw["compress"], kw["decompress"] = comp, decomp
+        if sync.wire == "int8":
+            kw["wire_dtype"] = "int8"
+            kw["wire_group"] = sync.quant_group
     return kw
 
 
@@ -155,6 +182,22 @@ def allreduce_leaf(g, axis_names, sync: GradSyncConfig, world: int):
     return out / world
 
 
+def ef_quantize(g, residual, group: int):
+    """EF-SGD compensation step (per rank, per leaf): add the carried
+    residual into the raw gradient, round the sum onto the int8 grid the
+    wire will use, and keep the new rounding error as the next step's
+    residual.  The quantized gradient is what enters the compressed
+    reduce-scatter, so round 0 of the wire re-derives (near-)identical
+    codes and the dominant compression error is fed back instead of
+    lost.  Per-round requantization error of partial sums is NOT
+    recoverable per rank (it mixes contributions) and stays uncompensated
+    — standard EF-SGD scope."""
+    comp = g.astype(jnp.float32) + residual
+    q = dequantize_blocks(quantize_blocks(comp, group=group, backend="jnp"),
+                          backend="jnp")
+    return q, comp - q
+
+
 def zero1_step(loss_and_grad: Callable, params, opt: Zero1State, batch, *,
                axis_names: Sequence[str], opt_cfg: adamw.AdamWConfig,
                sync: GradSyncConfig):
@@ -171,6 +214,7 @@ def zero1_step(loss_and_grad: Callable, params, opt: Zero1State, batch, *,
 
     # --- reduce: shard big leaves (Algorithm 1), psum tiny ones ---
     rs_dt = jnp.dtype(sync.rs_dtype)
+    use_ef = sync.uses_error_feedback and opt.ef is not None
 
     def reduce_one(g, flag):
         if flag and use_zero:
@@ -179,7 +223,27 @@ def zero1_step(loss_and_grad: Callable, params, opt: Zero1State, batch, *,
             return out.astype(jnp.float32)
         return allreduce_leaf(g.astype(jnp.float32), axis_names, sync, world)
 
-    g_red = jax.tree.map(reduce_one, grads, flags)
+    if use_ef:
+        # Compressed sync with error feedback: compensate, quantize, and
+        # carry the rounding error (see ef_quantize).  ``e`` arrives as
+        # this rank's (1, *leaf) shard of the (world, *leaf) state.
+        def reduce_one_ef(g, flag, e):
+            if flag and use_zero:
+                q, err = ef_quantize(g, e[0], sync.quant_group)
+                out = reduce_scatter_leaf(q.astype(rs_dt), axis_names,
+                                          sync, world)
+                return out.astype(jnp.float32), err[None]
+            return (allreduce_leaf(g.astype(jnp.float32), axis_names,
+                                   sync, world), e)
+
+        pairs = jax.tree.map(reduce_one_ef, grads, flags, opt.ef)
+        ispair = lambda x: (isinstance(x, tuple) and len(x) == 2
+                            and not isinstance(x, jax.Array))
+        g_red = jax.tree.map(lambda o: o[0], pairs, is_leaf=ispair)
+        new_ef = jax.tree.map(lambda o: o[1], pairs, is_leaf=ispair)
+    else:
+        g_red = jax.tree.map(reduce_one, grads, flags)
+        new_ef = opt.ef
 
     # --- global grad norm: shards partition the reduced grad exactly, so
     # one psum of the summed shard sq-norms + the (replicated) tiny-leaf
@@ -236,7 +300,8 @@ def zero1_step(loss_and_grad: Callable, params, opt: Zero1State, batch, *,
         mloss = lax.pmean(mloss, ax)
     metrics = {"loss": mloss, "grad_norm": gnorm,
                "lr": adamw.lr_at(opt_cfg, step)}
-    return new_params, Zero1State(m=new_m, v=new_v, step=step), metrics
+    return (new_params,
+            Zero1State(m=new_m, v=new_v, step=step, ef=new_ef), metrics)
 
 
 # ---------------------------------------------------------------------------
@@ -245,7 +310,11 @@ def zero1_step(loss_and_grad: Callable, params, opt: Zero1State, batch, *,
 
 def init_zero1_state(params, world: int, sync: GradSyncConfig) -> Zero1State:
     """GLOBAL optimizer state arrays: zero leaves get (ld_pad, *rest) fp32
-    (to be sharded over the data axes), tiny leaves full fp32 replicas."""
+    (to be sharded over the data axes), tiny leaves full fp32 replicas.
+    With compressed sync + error feedback, every leaf also gets an EF
+    residual: (world, *leaf) for zero leaves — one full-leaf residual PER
+    DATA RANK, sharded so each rank keeps exactly its own — and a dummy
+    (1, *leaf) replica for tiny leaves (psum'd exactly; never read)."""
     use_zero = sync.impl != "allreduce"
 
     def mk(l):
@@ -255,14 +324,23 @@ def init_zero1_state(params, world: int, sync: GradSyncConfig) -> Zero1State:
         return jnp.zeros(l.shape, jnp.float32)
 
     zeros = jax.tree.map(mk, params)
+    ef = None
+    if sync.uses_error_feedback:
+        def mk_ef(l):
+            n = world if is_zero_leaf(l.shape, world,
+                                      sync.min_shard_numel) else 1
+            return jnp.zeros((n, *l.shape), jnp.float32)
+
+        ef = jax.tree.map(mk_ef, params)
     return Zero1State(m=zeros, v=jax.tree.map(jnp.copy, zeros),
-                      step=jnp.zeros((), jnp.int32))
+                      step=jnp.zeros((), jnp.int32), ef=ef)
 
 
 def zero1_state_specs(params, world: int, sync: GradSyncConfig,
                       collective_axes):
     """Manual-axis PartitionSpecs for the optimizer state (dim 0 over the
-    data axes for zero leaves; replicated otherwise)."""
+    data axes for zero leaves; replicated otherwise).  EF residuals are
+    sharded on their per-rank leading axis."""
     from jax.sharding import PartitionSpec as P
     use_zero = sync.impl != "allreduce"
 
@@ -272,5 +350,8 @@ def zero1_state_specs(params, world: int, sync: GradSyncConfig,
         return P()
 
     m_specs = jax.tree.map(spec, params)
+    ef_specs = None
+    if sync.uses_error_feedback:
+        ef_specs = jax.tree.map(spec, params)
     return Zero1State(m=m_specs, v=jax.tree.map(lambda s: s, m_specs),
-                      step=P())
+                      step=P(), ef=ef_specs)

@@ -51,8 +51,12 @@ COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                   "collective-permute")
 
 
-def _shape_bytes(type_str: str) -> int:
+def _shape_bytes(type_str: str) -> tuple[int, dict]:
+    """(total bytes, per-dtype byte breakdown) of an HLO type string.
+    The breakdown is what makes a compressed (s8-wire) collective visible
+    next to its uncompressed (f32/bf16) peer in the roofline report."""
     total = 0
+    by_dtype: dict[str, int] = {}
     for dtype, dims in _SHAPE_RE.findall(type_str):
         if dtype not in _DTYPE_BYTES:
             continue
@@ -60,8 +64,10 @@ def _shape_bytes(type_str: str) -> int:
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
+        nbytes = n * _DTYPE_BYTES[dtype]
+        total += nbytes
+        by_dtype[dtype] = by_dtype.get(dtype, 0) + nbytes
+    return total, by_dtype
 
 
 def _group_size(line: str) -> int:
@@ -79,6 +85,8 @@ class CollectiveStats:
     ops: dict = field(default_factory=dict)        # op -> count
     bytes_by_op: dict = field(default_factory=dict)  # op -> effective bytes
     raw_bytes_by_op: dict = field(default_factory=dict)
+    raw_bytes_by_dtype: dict = field(default_factory=dict)  # s8/f32/... ->
+    #                               raw payload bytes (compressed-wire audit)
 
     @property
     def total_bytes(self) -> float:
@@ -102,7 +110,7 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
         base = opname.replace("-start", "")
         if base.endswith("-done") or base not in COLLECTIVE_OPS:
             continue
-        size = _shape_bytes(type_str)
+        size, size_by_dtype = _shape_bytes(type_str)
         g = _group_size(line)
         if base == "collective-permute":
             eff = size
@@ -118,6 +126,9 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
         stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + eff
         stats.raw_bytes_by_op[base] = (stats.raw_bytes_by_op.get(base, 0)
                                        + size)
+        for dt, nb in size_by_dtype.items():
+            stats.raw_bytes_by_dtype[dt] = (
+                stats.raw_bytes_by_dtype.get(dt, 0) + nb)
     return stats
 
 
@@ -178,6 +189,8 @@ class Roofline:
         if self.collectives:
             d["collective_ops"] = self.collectives.ops
             d["collective_bytes_by_op"] = self.collectives.bytes_by_op
+            d["collective_bytes_by_dtype"] = \
+                self.collectives.raw_bytes_by_dtype
         return d
 
 

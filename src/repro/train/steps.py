@@ -103,7 +103,12 @@ def build_zero1(model: ModelApi, mesh: Mesh, recipe: ShardingRecipe,
     # Manual-axis specs: params replicated over data axes (model axis is
     # auto — rides on the arrays' NamedShardings); batch sharded over data;
     # opt m/v PER-LEAF sharded over dim 0 (zero leaves) or replicated
-    # (tiny leaves / the no-ZeRO allreduce baseline).
+    # (tiny leaves / the no-ZeRO allreduce baseline).  With compressed
+    # gradient sync (sync.wire == 'int8') + error feedback, the opt state
+    # additionally carries per-rank EF residuals (Zero1State.ef) whose
+    # leading axis is sharded one-row-per-rank over the data axes —
+    # zero1_state_specs emits the matching specs, so the shard_map
+    # in/out_specs below pick them up with no special-casing here.
     pspec = P()
     batch_spec = P(recipe.data_axes)
 

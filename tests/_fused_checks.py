@@ -101,6 +101,39 @@ for dtype in (jnp.float32, jnp.int32):
     check(f"AR fused==unfused bitwise [{jnp.dtype(dtype).name}]",
           np.array_equal(a, b))
 
+# --- int8 wire format: fused vs unfused compressed rounds must agree
+# BITWISE (identical arithmetic, both jitted — the Pallas dq-round kernel
+# and its jnp oracle trace to the same XLA graph shapes), and the
+# compressed result must sit within the quantization error of the exact
+# jnp reduce-scatter ---
+for blk in (4, 515):  # 515: ragged quantization group (515 % 512 != 0)
+    x = make((p, p * blk), jnp.float32)
+    a, b = both(lambda v, f: C.circulant_reduce_scatter(
+        v, "x", wire_dtype="int8", use_fused_kernel=f), x)
+    check(f"RS int8-wire fused==unfused bitwise [blk={blk}]",
+          np.array_equal(a, b))
+    exact = run1(lambda v: C.circulant_reduce_scatter(v, "x"), x)
+    err = np.abs(a.astype(np.float64) - exact.astype(np.float64)).max()
+    check(f"RS int8-wire within quantization error of exact "
+          f"[blk={blk}] (max err {err:.3f})", err < 0.05 * p + 0.1)
+
+x = make((p, p * 7), jnp.float32)
+a, b = both(lambda v, f: C.circulant_allreduce(
+    v, "x", wire_dtype="int8", use_fused_kernel=f), x)
+check("AR int8-wire fused==unfused bitwise", np.array_equal(a, b))
+for r in range(p):
+    np.testing.assert_array_equal(a[r], a[0])
+check("AR int8-wire output bitwise-replicated across ranks")
+
+blocks = make((p, 515), jnp.float32)
+a, b = both(lambda v, f: C.circulant_allgather(
+    v, "x", wire_dtype="int8", use_fused_kernel=f), blocks)
+check("AG int8-wire fused==unfused bitwise", np.array_equal(a, b))
+err = np.abs(a.reshape(p, p, 515).astype(np.float64)
+             - np.asarray(blocks, np.float64)[None]).max()
+check(f"AG int8-wire one-quantization error bound (max err {err:.4f})",
+      err < 0.05)
+
 # --- alltoall (⊕ = concatenation; fused uses stacked slots + Pallas
 # row-permutation for the final source ordering) ---
 a2a = make((p, p, 7), jnp.float32)

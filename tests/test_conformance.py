@@ -7,10 +7,16 @@ jax init, so every p needs its own process).  Per p the worker asserts:
     against a host numpy reference and the native-XLA baseline,
   * every Corollary-2 schedule (halving, power2, fully_connected, sqrt,
     two_level), ops add/max/min, dtypes f32/bf16/i32,
+  * every float circulant case additionally on the int8 wire format
+    (tolerance-based — compressed rounds are lossy by design),
   * lowered-HLO collective-permute counts: exactly rounds(schedule) for
     RS and 2*rounds(schedule) for AR, with rounds == ceil(log2 p) for the
     halving/power2 schedules — Theorem 1/2 at every tested p, including
-    the non-powers-of-two the paper exists for.
+    the non-powers-of-two the paper exists for; the int8 wire path must
+    keep the exact same counts (the packed [codes | scale bytes] buffer
+    is ONE ppermute payload per round),
+  * for composite p, the hierarchical two-axis sweep: nested RS/AG/AR
+    over a (p//g, g) mesh vs the host reference, uncompressed and int8.
 """
 import os
 import subprocess
@@ -19,7 +25,8 @@ import sys
 import pytest
 
 from repro.core.conformance import (
-    DEFAULT_PS, OPS, SCHEDULES, sweep_cases, two_level_group)
+    DEFAULT_PS, OPS, SCHEDULES, hierarchical_factors, sweep_cases,
+    two_level_group)
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 WORKER = os.path.join(HERE, "..", "src", "repro", "core", "conformance.py")
@@ -53,11 +60,35 @@ def test_sweep_covers_required_space():
     assert not any(c.impl == "recursive_halving" for c in sweep_cases(6))
     # every circulant case is mirrored on the fused Pallas round path
     plain = {(c.collective, c.schedule, c.op, c.dtype) for c in cases
-             if c.impl == "circulant" and not c.fused}
+             if c.impl == "circulant" and not c.fused and c.wire is None}
     fused = {(c.collective, c.schedule, c.op, c.dtype) for c in cases
-             if c.impl == "circulant" and c.fused}
+             if c.impl == "circulant" and c.fused and c.wire is None}
     assert fused == plain and fused
     assert not any(c.fused for c in cases if c.impl != "circulant")
+    # ... and every FLOAT circulant case (fused or not) is additionally
+    # mirrored on the int8 wire format; int32 and non-circulant impls
+    # never get wire cases (quantization needs float payloads).
+    for fl in (False, True):
+        base = {(c.collective, c.schedule, c.op, c.dtype) for c in cases
+                if c.impl == "circulant" and c.fused is fl
+                and c.wire is None and c.dtype != "int32"}
+        wired = {(c.collective, c.schedule, c.op, c.dtype) for c in cases
+                 if c.impl == "circulant" and c.fused is fl
+                 and c.wire == "int8"}
+        assert wired == base and wired
+    assert not any(c.wire for c in cases
+                   if c.impl != "circulant" or c.dtype == "int32")
+
+
+def test_hierarchical_factors():
+    """Composite p gets a (p//g, g) two-axis mesh; primes are skipped."""
+    assert hierarchical_factors(12) == (4, 3)
+    assert hierarchical_factors(16) == (4, 4)
+    assert hierarchical_factors(6) == (3, 2)
+    for prime in (2, 3, 5, 7):
+        assert hierarchical_factors(prime) is None
+    covered = [p for p in DEFAULT_PS if hierarchical_factors(p)]
+    assert len(covered) >= 4, "two-axis sweep must cover several p"
 
 
 def test_default_ps_mostly_non_pow2():

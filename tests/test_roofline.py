@@ -30,6 +30,18 @@ def test_parse_collectives_explicit_groups():
     assert st.bytes_by_op["reduce-scatter"] == pytest.approx(16 * 16 * 2 * 1)
 
 
+def test_parse_collectives_dtype_breakdown():
+    """Compressed (s8-wire) collective traffic is reported per dtype so
+    it is visible next to uncompressed traffic in the roofline output."""
+    hlo = """
+  %cp.1 = s8[7,33024]{1,0} collective-permute(%wire), source_target_pairs=...
+  %cp.2 = f32[7,32768]{1,0} collective-permute(%raw), source_target_pairs=...
+"""
+    st = A.parse_collectives(hlo)
+    assert st.raw_bytes_by_dtype == {"s8": 7 * 33024, "f32": 7 * 32768 * 4}
+    assert st.ops == {"collective-permute": 2}
+
+
 def test_parse_start_done_counted_once():
     hlo = """
   %cps = f32[8]{0} collective-permute-start(%x), source_target_pairs=...

@@ -1,0 +1,253 @@
+"""Compressed int8 wire format: pack/unpack, the fused dequant-⊕-requant
+round kernel vs its jnp oracle, the quantize kernels on ragged shapes and
+bf16, per-group scale correctness, and the wire-aware cost model.
+
+Kernel-vs-oracle comparisons run BOTH sides under jit: the arithmetic is
+identical, and under jit XLA makes the same contraction (FMA) choices for
+both graphs, so equality is bitwise.  (Eager dispatch may differ from the
+jitted kernel by ~1 ulp — that is XLA's choice, not the kernel's.)
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import cost_model as cm
+from repro.kernels import (DEFAULT_GROUP, fused_round_dq, pack_wire,
+                           quantize_rows, unpack_wire, wire_ngroups,
+                           wire_width)
+from repro.kernels import ref as R
+from repro.kernels.quantize import _EPS, _INV127, dequant_add, quantize
+
+RNG = np.random.default_rng(31)
+
+# Ragged geometries the conformance harness hits: 7 and 515 columns,
+# rows not divisible by the row tile, single elements.
+RAGGED_SHAPES = [(3, 7), (130, 515), (5, 130), (7, 515), (1, 1), (9, 4)]
+
+
+def _rand(shape, dtype=jnp.float32, scale=2.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequant_add on ragged shapes (pad-and-slice inside the kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", RAGGED_SHAPES)
+@pytest.mark.parametrize("group", [4, 128, 512])
+def test_quantize_kernel_ragged_matches_ref(shape, group):
+    x = _rand(shape)
+    codes, scales = quantize(x, group=group, interpret=True)
+    codes_r, scales_r = R.quantize_ref(x, group=group)
+    assert codes.shape == x.shape
+    assert scales.shape == (shape[0], wire_ngroups(shape[1], group))
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes_r))
+    np.testing.assert_array_equal(np.asarray(scales), np.asarray(scales_r))
+
+
+@pytest.mark.parametrize("shape", RAGGED_SHAPES)
+def test_dequant_add_ragged_matches_ref(shape):
+    g = 64
+    x, acc = _rand(shape), _rand(shape)
+    codes, scales = R.quantize_ref(x, group=g)
+    got = jax.jit(functools.partial(dequant_add, group=g, interpret=True))(
+        acc, codes, scales)
+    want = jax.jit(functools.partial(R.dequant_add_ref, group=g))(
+        acc, codes, scales)
+    assert got.shape == shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_kernel_bf16_and_scale_correctness(dtype):
+    """Per-group scales must equal amax/127 (+eps) of the f32 view of the
+    group, and codes must round-trip within scale/2 per element."""
+    x = _rand((6, 96), dtype, scale=3.0)
+    g = 32
+    codes, scales = quantize(x, group=g, interpret=True)
+    xg = np.asarray(x, np.float32).reshape(6, -1, g)
+    amax = np.abs(xg).max(axis=2)
+    np.testing.assert_allclose(np.asarray(scales),
+                               amax * np.float32(_INV127) + _EPS,
+                               rtol=1e-7)
+    back = np.asarray(codes, np.float32).reshape(6, -1, g) \
+        * np.asarray(scales)[..., None]
+    assert (np.abs(back - xg) <= np.asarray(scales)[..., None] / 2
+            + 1e-6).all()
+
+
+def test_quantize_zero_group_is_exact():
+    """An all-zero group quantizes to zero codes with the eps floor scale
+    (no NaN/inf from the amax=0 corner)."""
+    x = jnp.zeros((2, 64), jnp.float32)
+    codes, scales = quantize(x, group=32, interpret=True)
+    assert not np.isnan(np.asarray(scales)).any()
+    np.testing.assert_array_equal(np.asarray(codes), 0)
+
+
+# ---------------------------------------------------------------------------
+# wire pack/unpack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,group", [((4, 16), 4), ((3, 7), 4),
+                                         ((2, 515), 128), ((1, 1), 512),
+                                         ((8, 512), 512)])
+def test_wire_roundtrip_exact(shape, group):
+    """pack_wire|unpack_wire is lossless: codes bitwise, scales bitwise
+    (f32 bits survive the u8 transport)."""
+    codes, scales = R.quantize_ref(_rand(shape), group=group)
+    wire = pack_wire(codes, scales)
+    assert wire.dtype == jnp.int8
+    assert wire.shape == (shape[0], wire_width(shape[1], group))
+    codes2, scales2 = unpack_wire(wire, shape[1], group=group)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes2))
+    np.testing.assert_array_equal(np.asarray(scales), np.asarray(scales2))
+
+
+def test_wire_roundtrip_extreme_scales():
+    """Denormal / huge / eps-floor scales survive the byte transport."""
+    codes = jnp.zeros((1, 8), jnp.int8)
+    for val in (1e-30, 1e-38, 3.4e38, 1.0):
+        scales = jnp.full((1, 1), val, jnp.float32)
+        _, s2 = unpack_wire(pack_wire(codes, scales), 8, group=8)
+        np.testing.assert_array_equal(np.asarray(scales), np.asarray(s2))
+
+
+def test_wire_width_accounting():
+    assert wire_width(4096, 512) == 4096 + 4 * 8
+    assert wire_width(7, 512) == 7 + 4          # one ragged group
+    assert wire_width(515, 128) == 515 + 4 * 5  # 4 full + 1 ragged group
+    # compression vs f32: 4x cols vs cols + 4*ng
+    assert 4 * 4096 / wire_width(4096, 512) > 3.9
+
+
+def test_unpack_wire_rejects_wrong_width():
+    with pytest.raises(ValueError, match="wire has"):
+        unpack_wire(jnp.zeros((2, 10), jnp.int8), 8, group=8)
+
+
+# ---------------------------------------------------------------------------
+# fused_round_dq vs oracle
+# ---------------------------------------------------------------------------
+
+GEOMETRIES = [(8, 4, 4), (8, 4, 2), (7, 3, 2), (5, 1, 4), (6, 2, 4),
+              (2, 1, 1), (4, 4, 4)]
+
+
+def _dq_pair(lo, nb, next_lo, cols, g, op):
+    live = _rand((lo, cols), scale=1.0)
+    codes, scales = R.quantize_ref(_rand((nb, cols), scale=3.0), group=g)
+    fk = jax.jit(functools.partial(fused_round_dq, nb=nb, next_lo=next_lo,
+                                   op=op, group=g, interpret=True))
+    fr = jax.jit(functools.partial(R.fused_round_dq_ref, nb=nb,
+                                   next_lo=next_lo, op=op, group=g))
+    return fk(live, codes, scales), fr(live, codes, scales)
+
+
+@pytest.mark.parametrize("cols,g", [(16, 4), (128, 128), (512, 128)])
+@pytest.mark.parametrize("geometry", GEOMETRIES)
+def test_fused_round_dq_geometries(geometry, cols, g):
+    lo, nb, next_lo = geometry
+    (keep, send), (keep_r, send_r) = _dq_pair(lo, nb, next_lo, cols, g,
+                                              "add")
+    assert keep.dtype == jnp.float32 and keep.shape == (next_lo, cols)
+    np.testing.assert_array_equal(np.asarray(keep), np.asarray(keep_r))
+    assert (send is None) == (send_r is None) == (next_lo == lo)
+    if send is not None:
+        assert send[0].dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(send[0]),
+                                      np.asarray(send_r[0]))
+        np.testing.assert_array_equal(np.asarray(send[1]),
+                                      np.asarray(send_r[1]))
+
+
+@pytest.mark.parametrize("op", ["add", "max", "min"])
+def test_fused_round_dq_ops(op):
+    (keep, send), (keep_r, send_r) = _dq_pair(8, 4, 2, 64, 16, op)
+    np.testing.assert_array_equal(np.asarray(keep), np.asarray(keep_r))
+    np.testing.assert_array_equal(np.asarray(send[0]),
+                                  np.asarray(send_r[0]))
+
+
+def test_fused_round_dq_rejects_bad_shapes():
+    live = _rand((4, 16))
+    codes, scales = R.quantize_ref(_rand((2, 16)), group=4)
+    with pytest.raises(ValueError, match="not divisible by group"):
+        fused_round_dq(_rand((4, 15)), codes, scales, nb=2, next_lo=2,
+                       group=4, interpret=True)
+    with pytest.raises(ValueError, match="codes shape"):
+        fused_round_dq(live, codes, scales, nb=3, next_lo=2, group=4,
+                       interpret=True)
+    with pytest.raises(ValueError, match="scales shape"):
+        fused_round_dq(live, codes, scales[:, :2], nb=2, next_lo=2,
+                       group=4, interpret=True)
+    with pytest.raises(ValueError, match="invalid round"):
+        fused_round_dq(live, R.quantize_ref(_rand((5, 16)), group=4)[0],
+                       R.quantize_ref(_rand((5, 16)), group=4)[1],
+                       nb=5, next_lo=2, group=4, interpret=True)
+
+
+@given(st.integers(1, 10), st.integers(1, 8), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_fused_round_dq_property(lo, ngroups, seed):
+    g = 8
+    cols = ngroups * g
+    nb = 1 + seed % lo
+    next_lo = 1 + (seed // 7) % lo
+    (keep, send), (keep_r, send_r) = _dq_pair(lo, nb, next_lo, cols, g,
+                                              "add")
+    np.testing.assert_array_equal(np.asarray(keep), np.asarray(keep_r))
+    if send is not None:
+        np.testing.assert_array_equal(np.asarray(send[0]),
+                                      np.asarray(send_r[0]))
+
+
+def test_quantize_rows_wrapper():
+    c, s = quantize_rows(_rand((3, 12)), group=4, interpret=True)
+    assert c.shape == (3, 12) and s.shape == (3, 3)
+    cr, sr = R.quantize_ref(_rand((3, 12)), group=4)
+    assert cr.shape == c.shape and sr.shape == s.shape
+
+
+# ---------------------------------------------------------------------------
+# wire-aware cost model
+# ---------------------------------------------------------------------------
+
+def test_wire_bytes_per_elem():
+    assert cm.wire_bytes_per_elem(4.0) == 4.0
+    assert cm.wire_bytes_per_elem(4.0, "int8", 512) == 1.0 + 4.0 / 512
+    assert 4.0 / cm.wire_bytes_per_elem(4.0, "int8", 512) > 3.9
+    with pytest.raises(ValueError):
+        cm.wire_bytes_per_elem(4.0, "fp4")
+
+
+def test_cost_model_wire_scales_beta_only():
+    """int8 wire shrinks the β term ~4x and leaves α (rounds) and γ
+    (every element still reduced) untouched."""
+    model = cm.CommModel(alpha=1e-6, beta=1e-9, gamma=2.5e-10,
+                         elem_bytes=4.0)
+    p, m = 22, 1 << 24
+    plain = cm.t_allreduce(m, p, model)
+    wired = cm.t_allreduce(m, p, model, wire_dtype="int8", wire_group=512)
+    assert wired < plain
+    # β-dominated regime: the saving approaches the byte ratio
+    beta_plain = 2 * model.beta * (p - 1) / p * m
+    beta_wired = beta_plain * cm.wire_bytes_per_elem(4.0, "int8", 512) / 4.0
+    assert abs((plain - wired) - (beta_plain - beta_wired)) < 1e-12
+    # α-dominated regime: compression buys ~nothing
+    small = 16
+    assert abs(cm.t_allreduce(small, p, model, wire_dtype="int8")
+               - cm.t_allreduce(small, p, model)) < model.beta * small * 4
+
+
+def test_cost_model_wire_group_tradeoff():
+    """Smaller groups = more scales on the wire = more β bytes."""
+    model = cm.CommModel.tpu_v5e(4)
+    p, m = 16, 1 << 26
+    t = [cm.t_reduce_scatter(m, p, model, wire_dtype="int8", wire_group=g)
+         for g in (64, 512)]
+    assert t[0] > t[1]
