@@ -13,6 +13,7 @@ import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import compat  # noqa: E402
+from repro.core import CollectiveSpec  # noqa: E402
 from repro.core import collectives as C  # noqa: E402
 
 NDEV = 8
@@ -53,7 +54,23 @@ for n_elem in [1 << 12, 1 << 18, 1 << 22]:
             v, "x", wire_dtype="int8"),
         "ring_ar": lambda v: C.ring_allreduce(v, "x"),
         "xla_psum": lambda v: C.xla_allreduce(v, "x"),
+        # plan/execute API rows: same collectives through CollectiveSpec
+        # dispatch (overhead must be invisible — plans are cached).
+        "spec_rs": lambda v: C.reduce_scatter(
+            v, "x", spec=CollectiveSpec()),
+        "spec_ar_int8": lambda v: C.allreduce(
+            v, "x", spec=CollectiveSpec(wire_dtype="int8")),
     }
     for name, fn in rows.items():
         us = timed(fn, x)
         print(f"collectives/{name}_n{n_elem},{us:.3f},ndev={NDEV}")
+
+# Non-uniform (Corollary 3) reduce-scatter: worst case, one column holds
+# the whole vector — every round ships ~n_elem rows from one rank.
+for n_elem in [1 << 12, 1 << 18]:
+    counts = [0] * NDEV
+    counts[NDEV // 2] = n_elem
+    spec = CollectiveSpec(counts=tuple(counts))
+    x = rng.standard_normal((NDEV, n_elem)).astype(np.float32)
+    us = timed(lambda v: C.reduce_scatter(v, "x", spec=spec), x)
+    print(f"collectives/spec_rs_onecol_n{n_elem},{us:.3f},ndev={NDEV}")

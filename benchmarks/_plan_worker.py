@@ -1,0 +1,90 @@
+"""Subprocess worker for bench_plans: the plan/execute API's trace-free
+and zero-overhead guarantees, measured end-to-end on 8 fake CPU devices.
+
+Per spec it emits one CSV row with:
+
+  retraces       extra jit traces across repeated calls with the SAME
+                 spec after the first (want 0 — CollectiveSpec is frozen/
+                 hashable and plan() is lru-cached, so spec-driven
+                 dispatch must never retrace);
+  plan_rebuilds  plan-cache misses beyond the first compile (want 0);
+  cp / theory    lowered-HLO collective-permute count vs the schedule's
+                 round count (x2 for allreduce) — plan-based dispatch
+                 must add ZERO collectives over the pre-redesign kwarg
+                 baseline, whose count equalled theory exactly (asserted
+                 by the conformance harness since PR 1);
+  cp_delta       cp - theory (want 0).
+
+Emits CSV rows on stdout; the gate logic lives in benchmarks/ci_gate.py.
+"""
+import os
+import sys
+import time
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro import compat  # noqa: E402
+from repro.core import CollectiveSpec, plan_cache_info  # noqa: E402
+from repro.core import collectives as C  # noqa: E402
+from repro.core.schedule import ceil_log2, get_skips  # noqa: E402
+
+NDEV = 8
+mesh = compat.make_mesh((NDEV,), ("x",))
+rng = np.random.default_rng(7)
+
+NONUNIFORM = tuple((i * 5 + 3) % 7 for i in range(NDEV))
+
+CASES = [
+    # (name, spec, collective, rounds multiplier)
+    ("rs_halving", CollectiveSpec(), "reduce_scatter", 1),
+    ("rs_power2", CollectiveSpec(schedule="power2"), "reduce_scatter", 1),
+    ("ar_halving", CollectiveSpec(), "allreduce", 2),
+    ("rs_int8", CollectiveSpec(wire_dtype="int8"), "reduce_scatter", 1),
+    ("rs_nonuniform", CollectiveSpec(counts=NONUNIFORM),
+     "reduce_scatter", 1),
+    ("ar_nonuniform", CollectiveSpec(counts=NONUNIFORM), "allreduce", 2),
+]
+
+
+def payload_for(spec: CollectiveSpec) -> np.ndarray:
+    n = sum(spec.counts) if spec.counts else NDEV * 512
+    return rng.standard_normal((NDEV, n)).astype(np.float32)
+
+
+for name, spec, coll, mult in CASES:
+    traces = 0
+    entry = getattr(C, coll)
+
+    def body(v, _spec=spec, _entry=entry):
+        global traces
+        traces += 1
+        return _entry(v[0], "x", spec=_spec)[None]
+
+    f = jax.jit(compat.shard_map(body, mesh=mesh,
+                                 in_specs=(P("x"),), out_specs=P("x")))
+    x = jnp.asarray(payload_for(spec))
+    misses0 = plan_cache_info().misses
+    f(x).block_until_ready()          # first call: the one allowed trace
+    t0 = time.perf_counter()
+    iters = 10
+    for _ in range(iters):
+        out = f(x)
+    out.block_until_ready()
+    us = (time.perf_counter() - t0) / iters * 1e6
+    retraces = traces - 1
+    rebuilds = max(plan_cache_info().misses - misses0 - 1, 0)
+
+    theory = mult * len(get_skips(NDEV, spec.schedule))
+    txt = f.lower(jax.ShapeDtypeStruct(x.shape, jnp.float32)).as_text()
+    cp = txt.count("collective_permute")
+    print(f"plans/{name},{us:.3f},"
+          f"retraces={retraces};plan_rebuilds={rebuilds};"
+          f"cp={cp};theory={theory};cp_delta={cp - theory};"
+          f"rounds_opt={ceil_log2(NDEV) * mult};backend-registry=ok")

@@ -14,7 +14,11 @@ budget violation, which this gate surfaces as failures), parses the CSV into ``B
   fused pass wins);
 * compressed-wire rows: every asserted row is ``within_budget`` (measured collective-permute
   bytes <= the analytic codes+scales budget), int8 rows show >= ``WIRE_REDUCTION_MIN`` payload
-  reduction vs f32, and the collective-permute count equals the Theorem 1/2 round count.
+  reduction vs f32, and the collective-permute count equals the Theorem 1/2 round count;
+* plan/execute rows (``plans/``): spec-driven dispatch is trace-free (zero jit retraces and
+  zero plan-cache rebuilds across repeated calls with the same ``CollectiveSpec``) and adds
+  zero collective-permutes over the schedule's round count — including the non-uniform
+  (Corollary 3) specs.
 
 Usage:  PYTHONPATH=src python -m benchmarks.ci_gate [--out BENCH_ci.json]
 Exit code 0 iff every check passes.
@@ -36,7 +40,7 @@ FUSED_RATIO_MAX = 2.0
 # 3.0 leaves room for smaller groups without letting a scales-bloat or
 # padding regression through.
 WIRE_REDUCTION_MIN = 3.0
-ONLY = "rounds,kernels,wire"
+ONLY = "rounds,kernels,wire,plans"
 
 
 def parse_csv(text: str) -> list[dict]:
@@ -89,6 +93,26 @@ def check(rows: list[dict]) -> list[str]:
                     failures.append(
                         f"{row['name']}: payload reduction {red:.2f}x < {WIRE_REDUCTION_MIN}x"
                     )
+        if row["name"].startswith("plans/"):
+            f = row["fields"]
+            if f.get("retraces") != "0":
+                failures.append(
+                    f"{row['name']}: {f.get('retraces')} retraces across "
+                    f"repeated calls with the same CollectiveSpec (plan "
+                    f"construction must be trace-free)"
+                )
+            if f.get("plan_rebuilds") != "0":
+                failures.append(
+                    f"{row['name']}: plan cache rebuilt "
+                    f"{f.get('plan_rebuilds')}x for one spec (lru cache "
+                    f"must hit)"
+                )
+            if f.get("cp_delta") != "0":
+                failures.append(
+                    f"{row['name']}: spec-driven dispatch emits "
+                    f"{f.get('cp')} collective-permutes, want "
+                    f"{f.get('theory')} (plan layer must add zero)"
+                )
     names = {row["name"] for row in rows}
     if not any(n.startswith("rounds/") for n in names):
         failures.append("no rounds/ benchmark rows produced")
@@ -96,6 +120,10 @@ def check(rows: list[dict]) -> list[str]:
         failures.append("no kernels/fused_round rows produced")
     if not any(n.startswith("wire/") and n.endswith("_int8") for n in names):
         failures.append("no wire/*_int8 compressed-payload rows produced")
+    if not any(n.startswith("plans/") for n in names):
+        failures.append("no plans/ trace-free dispatch rows produced")
+    if "plans/rs_nonuniform" not in names:
+        failures.append("no plans/rs_nonuniform (Corollary 3) row produced")
     return failures
 
 

@@ -13,6 +13,10 @@ and the Corollary-2 schedule family.  Benchmarks:
   wire         measured bytes-on-wire per (collective × wire format) from
                compiled HLO vs the analytic codes+scales budget — the
                int8 wire format's ~3.9x β-term reduction, machine-checked
+  plans        plan/execute API overhead: spec-driven dispatch retraces
+               (want 0; frozen spec + cached plan) and collective-permute
+               delta vs the schedule round count (want 0), incl. the
+               non-uniform Corollary-3 specs
   roofline     re-emit the dry-run roofline table (reads reports/dryrun)
 
 Output: ``name,us_per_call,derived`` CSV rows.
@@ -93,6 +97,24 @@ def bench_collectives():
                           text=True, timeout=900, env=env)
     if proc.returncode != 0:
         emit("collectives/ERROR", 0.0, proc.stderr[-200:].replace("\n", " "))
+        return
+    print(proc.stdout, end="")
+
+
+# ---------------------------------------------------------------------------
+def bench_plans():
+    """Plan/execute API overhead gate: spec-driven dispatch must be
+    trace-free across repeated calls (frozen spec + lru-cached plan) and
+    must add zero collective-permutes over the schedule's round count —
+    the pre-redesign kwarg baseline.  Subprocess (needs fake devices)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    worker = os.path.join(here, "_plan_worker.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, worker], capture_output=True,
+                          text=True, timeout=900, env=env)
+    if proc.returncode != 0:
+        emit("plans/ERROR", 0.0, proc.stderr[-200:].replace("\n", " "))
         return
     print(proc.stdout, end="")
 
@@ -267,6 +289,7 @@ BENCHES = {
     "collectives": bench_collectives,
     "kernels": bench_kernels,
     "wire": bench_wire,
+    "plans": bench_plans,
     "roofline": bench_roofline,
 }
 

@@ -1,6 +1,26 @@
 """Core implementation of Träff 2024: optimal, non-pipelined reduce-scatter
 and allreduce on circulant graphs, plus schedules, simulator, cost model and
-the JAX shard_map collectives."""
+the JAX shard_map collectives.
+
+The collective API is plan/execute: declare a :class:`CollectiveSpec`,
+compile it once with :func:`plan`, run ``plan.reduce_scatter(x)`` etc.
+(see ``core/spec.py`` and ``core/plan.py``; ``core/collectives.py`` keeps
+the backward-compatible kwarg wrappers)."""
+from .spec import (  # noqa: F401
+    DEFAULT_WIRE_GROUP,
+    KINDS,
+    WIRE_DTYPES,
+    CollectiveSpec,
+    as_spec,
+)
+from .plan import (  # noqa: F401
+    BACKENDS,
+    BlockLayout,
+    CollectivePlan,
+    plan,
+    plan_cache_clear,
+    plan_cache_info,
+)
 from .schedule import (  # noqa: F401
     allgather_plan,
     ceil_log2,

@@ -10,6 +10,22 @@ time (``p`` is static under SPMD), so the lowered HLO contains
 ``2*ceil(log2 p)`` for allreduce — Theorem 1/2 made visible in the IR
 (asserted by tests and consumed by the roofline analysis).
 
+Since the plan/execute redesign this module is the THIN WRAPPER layer:
+the round loops live in ``core.plan`` as backends of a compiled
+:class:`~repro.core.plan.CollectivePlan`, and every function here just
+assembles a :class:`~repro.core.spec.CollectiveSpec` and executes its
+cached plan.  New code should hold a spec and call ``plan()`` directly::
+
+    from repro.core import CollectiveSpec, plan
+    spec = CollectiveSpec(schedule="power2", wire_dtype="int8")
+    out = plan(spec, axis_name="x").reduce_scatter(x)
+
+— that is the seam where per-rank block counts (``counts=``, paper
+Corollary 3), wire formats, and the fused Pallas backends all plug in.
+The ``circulant_*`` kwarg signatures below are kept backward-compatible;
+the raw ``impl=`` string dispatch on ``reduce_scatter`` / ``allreduce`` /
+``allgather`` is deprecated in favor of ``spec=``.
+
 All functions MUST be called inside a ``shard_map`` (or ``shard_map``-like)
 context that binds ``axis_name``.  Baselines implemented alongside:
 
@@ -17,30 +33,10 @@ context that binds ``axis_name``.  Baselines implemented alongside:
   round (bandwidth-optimal on a torus; the paper's [10,11,15] family).
 * ``recursive_halving_reduce_scatter`` — power-of-two butterfly.
 * ``xla_*`` — XLA's built-in psum / psum_scatter / all_gather for A/B tests.
-
-Payload hooks (``compress``/``decompress``) implement per-round gradient
-compression (beyond-paper, §Perf).  The first-class compressed path is
-``wire_dtype="int8"``: each round's send payload becomes int8 codes +
-per-group f32 scales packed into ONE int8 wire buffer (still exactly one
-collective-permute per round), folded on receive by a single fused
-dequantize-⊕(-requantize) pass — see the README's compressed wire format
-section.
-
-Every circulant collective takes ``use_fused_kernel`` (default ``None`` =
-auto): ``True`` routes each round's local buffer work through the fused
-Pallas round kernel (``kernels.fused_round``) — fold + next-round send
-layout in one HBM pass instead of the slice → jnp-op → concat chain; the
-lowered HLO keeps the exact same collective-permute count and the results
-are bitwise-identical (the kernel body is static slicing around the same
-⊕).  Auto enables Pallas on TPU under a native (post-0.4.x) shard_map
-and keeps the jnp path everywhere else: on CPU the kernel would run in
-interpret mode (validation, not speed), and the legacy 0.4.x shard_map
-needs ``check_vma=False`` for pallas_call, so auto must not flip default
-call sites onto it.
 """
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import Any, Callable, Sequence
 
 import jax
@@ -48,85 +44,33 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import compat
-from repro.kernels import (DEFAULT_GROUP, fused_round, fused_round_dq,
-                           pack_wire, permute_rows, quantize_rows,
-                           resolve_fused, unpack_wire)
-from repro.kernels import ref as _kref
-from .schedule import (allgather_plan, ceil_log2, reduce_scatter_plan)
+from .plan import BlockLayout, _fwd_perm, plan, resolve_op
+from .spec import DEFAULT_WIRE_GROUP as DEFAULT_GROUP
+from .spec import WIRE_DTYPES, CollectiveSpec  # noqa: F401  (re-exports)
 
 Array = jax.Array
 ReduceFn = Callable[[Array, Array], Array]
 
-_REDUCERS: dict[str, ReduceFn] = {
-    "add": lambda a, b: a + b,
-    "max": jnp.maximum,
-    "min": jnp.minimum,
-}
-
-
-def _resolve_op(op) -> ReduceFn:
-    if callable(op):
-        return op
-    try:
-        return _REDUCERS[op]
-    except KeyError:
-        raise ValueError(f"unknown reduce op {op!r}") from None
+_resolve_op = resolve_op  # kwarg-era alias (callers should use plan/spec)
 
 
 def _as_blocks(x: Array, p: int) -> Array:
     """Reshape leading axis into (p, n/p, *rest). Requires divisibility."""
-    n = x.shape[0]
-    if n % p != 0:
-        raise ValueError(
-            f"leading dim {n} not divisible by axis size {p}; pad first "
-            f"(see pad_to_multiple)")
-    return x.reshape(p, n // p, *x.shape[1:])
+    return BlockLayout.uniform(p, x.shape[0]).as_blocks(x)
 
 
 def pad_to_multiple(x: Array, p: int) -> tuple[Array, int]:
-    """Zero-pad the leading axis of ``x`` to a multiple of ``p``."""
-    n = x.shape[0]
-    pad = (-n) % p
-    if pad:
-        x = jnp.concatenate(
-            [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], axis=0)
-    return x, pad
+    """Zero-pad the leading axis of ``x`` to a multiple of ``p`` — the
+    uniform case of the plan's :class:`~repro.core.plan.BlockLayout`
+    (non-uniform counts use ``layout.pad`` with their counts table)."""
+    return BlockLayout.uniform(p, x.shape[0]).pad(x)
 
 
-def _fwd_perm(p: int, s: int) -> list[tuple[int, int]]:
-    """Data on rank i goes to rank (i + s) mod p  (paper's to-processor)."""
-    return [(i, (i + s) % p) for i in range(p)]
-
-
-WIRE_DTYPES = (None, "int8")
-
-
-def _check_wire(wire_dtype, x: Array, op, compress, decompress=None) -> bool:
-    """Validate the ``wire_dtype`` kwarg; returns True iff compression is
-    requested.  int8 wire needs float payloads and a named ⊕ (the fused
-    dequant-fold kernel has no callable-op form), and is mutually
-    exclusive with the generic compress/decompress hooks."""
-    if wire_dtype is None:
-        return False
-    if wire_dtype not in WIRE_DTYPES:
-        raise ValueError(
-            f"unknown wire_dtype {wire_dtype!r}; have {WIRE_DTYPES}")
-    if compress is not None or decompress is not None:
-        raise ValueError(
-            "wire_dtype and compress/decompress hooks are mutually "
-            "exclusive")
-    if op is not None and not isinstance(op, str):
-        raise ValueError(
-            f"wire_dtype needs a named op ('add'/'max'/'min'), got {op!r}")
-    if not jnp.issubdtype(x.dtype, jnp.floating):
-        raise ValueError(
-            f"wire_dtype='int8' needs a float payload, got {x.dtype}")
-    return True
-
-
-def _bwd_perm(p: int, s: int) -> list[tuple[int, int]]:
-    """Data on rank i goes to rank (i - s) mod p  (allgather phase)."""
-    return [(i, (i - s) % p) for i in range(p)]
+def _circulant_spec(**kw) -> CollectiveSpec:
+    counts = kw.pop("counts", None)
+    if counts is not None:
+        counts = tuple(int(c) for c in counts)
+    return CollectiveSpec(kind="circulant", counts=counts, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +89,7 @@ def circulant_reduce_scatter(
     use_fused_kernel: bool | None = None,
     wire_dtype: str | None = None,
     wire_group: int = DEFAULT_GROUP,
+    counts: Sequence[int] | None = None,
 ) -> Array:
     """Paper Algorithm 1.  ``x``: per-rank input vector, leading dim n
     divisible by p.  Returns rank r's reduced block  (n/p, *rest):
@@ -157,131 +102,21 @@ def circulant_reduce_scatter(
     sent/received/reduced per rank (Theorem 1).  ``group`` parameterizes
     the two_level schedule (intra-group size; ignored otherwise).
 
-    With ``use_fused_kernel`` the per-round fold + next-send assembly runs
-    as one Pallas kernel pass (see module docstring); the round structure
-    and every ppermute are unchanged.
-
-    ``wire_dtype="int8"`` (default ``None`` = off) compresses every
-    round's send payload to int8 codes + per-group f32 scales packed into
-    ONE int8 wire buffer (``wire_group`` elements per scale), cutting the
-    β-term bytes ~4x at a bounded quantization error; accumulation stays
-    f32 and the round/ppermute structure is unchanged.  Lossy — see the
-    README's compressed-wire-format section.
+    ``use_fused_kernel`` routes each round's fold + next-send assembly
+    through one Pallas kernel pass; ``wire_dtype="int8"`` compresses every
+    round's send payload onto the packed int8 wire format (~4x fewer β
+    bytes, lossy); ``counts`` enables the paper's Corollary 3 non-uniform
+    variant — per-rank block row sizes, input ``sum(counts)`` rows, output
+    ``max(counts)`` rows with rows past this rank's count zeroed.  All
+    knobs and their interactions are resolved once by ``plan()`` — this
+    wrapper only assembles the :class:`CollectiveSpec`.
     """
-    wired = _check_wire(wire_dtype, x, op, compress, decompress)
-    reduce_fn = _resolve_op(op)
-    p = compat.axis_size(axis_name)
-    if p == 1:
-        return x
-    r = lax.axis_index(axis_name)
-    R = _as_blocks(x, p)
-    # Rotated initial copy: R[i] = V[(r + i) mod p]   (paper: the gamma*m copy)
-    R = jnp.roll(R, -r, axis=0)
-    if wired:
-        return _compressed_reduce_scatter_rounds(
-            R, axis_name, p, schedule, group, op, wire_group,
-            fused=resolve_fused(use_fused_kernel))
-    if resolve_fused(use_fused_kernel) and isinstance(op, str):
-        return _fused_reduce_scatter_rounds(
-            R, axis_name, p, schedule, group, op, compress, decompress)
-    if use_fused_kernel and not isinstance(op, str):
-        # Explicit request only — auto silently keeps the jnp path.
-        raise ValueError(
-            "use_fused_kernel needs a named op ('add'/'max'/'min'), "
-            f"got callable {op!r}")
-    for pl in reduce_scatter_plan(p, schedule, group):
-        payload = R[pl.lo:pl.hi]
-        if compress is not None:
-            payload = compress(payload)
-        T = compat.ppermute(payload, axis_name, _fwd_perm(p, pl.skip))
-        if decompress is not None:
-            T = decompress(T)
-        nb = pl.nblocks
-        head = reduce_fn(R[:nb], T)
-        R = head if nb == pl.lo else jnp.concatenate([head, R[nb:pl.lo]], axis=0)
-    return R[0]
-
-
-def _fused_reduce_scatter_rounds(R: Array, axis_name: str, p: int,
-                                 schedule: str, group: int | None, op: str,
-                                 compress, decompress) -> Array:
-    """Algorithm 1's round loop on the fused Pallas kernel.
-
-    The rotated block buffer is viewed as 2-D ``(blocks, block_numel)``;
-    after the prologue slice every round is ppermute → fused_round, with
-    the kernel emitting both the shrunken live buffer and the next
-    round's contiguous payload.  Identical values and ppermute sequence
-    to the jnp path — only the local data movement is fused.
-    """
-    blk_shape = R.shape[1:]
-    R2 = R.reshape(p, -1)
-    plans = reduce_scatter_plan(p, schedule, group)
-    live = R2[: plans[0].lo]
-    send = R2[plans[0].lo : plans[0].hi]
-    for k, pl in enumerate(plans):
-        payload = send if compress is None else compress(send)
-        T = compat.ppermute(payload, axis_name, _fwd_perm(p, pl.skip))
-        if decompress is not None:
-            T = decompress(T)
-        if T.dtype != live.dtype:
-            # Match the jnp path, whose concatenate promotes the buffer
-            # (e.g. bf16 live vs f32 decompressed payload).
-            dt = jnp.result_type(live.dtype, T.dtype)
-            live, T = live.astype(dt), T.astype(dt)
-        next_lo = plans[k + 1].lo if k + 1 < len(plans) else pl.lo
-        live, send = fused_round(live, T, nb=pl.nblocks, next_lo=next_lo,
-                                 op=op)
-    return live[0].reshape(blk_shape)
-
-
-def _compressed_reduce_scatter_rounds(R: Array, axis_name: str, p: int,
-                                      schedule: str, group: int | None,
-                                      op: str, wire_group: int,
-                                      fused: bool) -> Array:
-    """Algorithm 1's round loop on the int8 wire format.
-
-    The rotated block buffer is promoted to an f32 (blocks, block_numel)
-    accumulation buffer whose columns are padded to a whole number of
-    quantization groups.  Every round then ppermutes ONE packed int8
-    buffer ([codes | scale bytes], see kernels.quantize) and runs a
-    single dequantize + ⊕-fold + requantize-next-send pass — the Pallas
-    ``fused_round_dq`` kernel when ``fused``, its jnp oracle otherwise
-    (bitwise-identical arithmetic; both jitted).  Round count and
-    ppermute sequence match the uncompressed path exactly.
-    """
-    blk_shape, out_dtype = R.shape[1:], R.dtype
-    R2 = R.reshape(p, -1).astype(jnp.float32)
-    cols = R2.shape[1]
-    g = min(wire_group, cols)
-    pc = (-cols) % g
-    if pc:
-        R2 = jnp.pad(R2, ((0, 0), (0, pc)))
-    plans = reduce_scatter_plan(p, schedule, group)
-    live = R2[: plans[0].lo]
-    first = R2[plans[0].lo : plans[0].hi]
-    if fused:
-        codes, scales = quantize_rows(first, group=g)
-    else:
-        codes, scales = _kref.quantize_ref(first, group=g)
-    wire = pack_wire(codes, scales)
-    for k, pl in enumerate(plans):
-        Tw = compat.ppermute(wire, axis_name, _fwd_perm(p, pl.skip))
-        rc, rs = unpack_wire(Tw, live.shape[1], group=g)
-        next_lo = plans[k + 1].lo if k + 1 < len(plans) else pl.lo
-        if fused:
-            live, send = fused_round_dq(live, rc, rs, nb=pl.nblocks,
-                                        next_lo=next_lo, op=op, group=g)
-        else:
-            live, send = _kref.fused_round_dq_ref(live, rc, rs,
-                                                  nb=pl.nblocks,
-                                                  next_lo=next_lo, op=op,
-                                                  group=g)
-        if send is not None:
-            wire = pack_wire(*send)
-    out = live[0]
-    if pc:
-        out = out[:cols]
-    return out.reshape(blk_shape).astype(out_dtype)
+    spec = _circulant_spec(schedule=schedule, op=op, group=group,
+                           use_fused_kernel=use_fused_kernel,
+                           wire_dtype=wire_dtype, wire_group=wire_group,
+                           counts=counts)
+    return plan(spec, axis_name=axis_name).reduce_scatter(
+        x, compress=compress, decompress=decompress)
 
 
 # ---------------------------------------------------------------------------
@@ -297,6 +132,7 @@ def circulant_allgather(
     use_fused_kernel: bool | None = None,
     wire_dtype: str | None = None,
     wire_group: int = DEFAULT_GROUP,
+    counts: Sequence[int] | None = None,
 ) -> Array:
     """Gather rank blocks in rank order.  ``x``: rank r's block
     (blk, *rest); returns (p*blk, *rest) identical on all ranks.
@@ -304,88 +140,16 @@ def circulant_allgather(
     Replays the reduce-scatter skips in reverse (the paper's stack): with
     previous bound s' and skip s, send R[0 : s'-s] toward (r - s) and
     receive into R[s : s'] from (r + s).  The buffer grows from 1 block to
-    p; p-1 blocks communicated per rank.
-
-    Allgather has no ⊕, so its fused form needs no Pallas: the growing
-    concat chain (which recopies the whole buffer every round — O(p log p)
-    block traffic) becomes static in-place updates of one preallocated
-    (p, blk) buffer (O(p) traffic; XLA turns the static-index
-    dynamic-update-slice into an in-place write under jit).  Send payloads
-    are buffer prefixes, already contiguous.
+    p; p-1 blocks communicated per rank.  With ``counts`` (Corollary 3
+    layout) the input is the non-uniform reduce-scatter's
+    ``(max(counts), *rest)`` block and the output is ``(sum(counts),
+    *rest)`` in rank order, replicated.
     """
-    wired = _check_wire(wire_dtype, x, None, None)
-    p = compat.axis_size(axis_name)
-    if p == 1:
-        return x
-    r = lax.axis_index(axis_name)
-    if wired:
-        return _compressed_allgather_rounds(
-            x, axis_name, p, r, schedule, group, wire_group,
-            fused=resolve_fused(use_fused_kernel))
-    if resolve_fused(use_fused_kernel):
-        buf = jnp.zeros((p, *x.shape), x.dtype)
-        buf = lax.dynamic_update_slice_in_dim(buf, x[None], 0, axis=0)
-        for pl in allgather_plan(p, schedule, group):
-            payload = lax.slice_in_dim(buf, 0, pl.nblocks, axis=0)
-            T = compat.ppermute(payload, axis_name, _bwd_perm(p, pl.skip))
-            # Received blocks land at rows [lo, hi) = [skip, prev bound).
-            buf = lax.dynamic_update_slice_in_dim(buf, T, pl.lo, axis=0)
-        out = jnp.roll(buf, r, axis=0)
-        return out.reshape(p * x.shape[0], *x.shape[1:])
-    R = x[None]  # (1, blk, *rest) — rotated coords: R[i] = block of (r+i)
-    for pl in allgather_plan(p, schedule, group):
-        payload = R[:pl.nblocks]
-        T = compat.ppermute(payload, axis_name, _bwd_perm(p, pl.skip))
-        R = jnp.concatenate([R, T], axis=0)
-    out = jnp.roll(R, r, axis=0)  # un-rotate: out[j] = block of rank j
-    return out.reshape(p * x.shape[0], *x.shape[1:])
-
-
-def _compressed_allgather_rounds(x: Array, axis_name: str, p: int, r,
-                                 schedule: str, group: int | None,
-                                 wire_group: int, fused: bool) -> Array:
-    """Allgather on the int8 wire format.
-
-    Allgather has no ⊕, so each rank quantizes its own block ONCE; the
-    rounds then move the packed int8 wire rows unmodified (every element
-    is quantized exactly once — the error is a single quantization step).
-    ``fused`` selects the preallocated-buffer round structure (static
-    in-place updates) vs the concat chain — both move identical bytes and
-    one ppermute per round.  All ranks dequantize the same codes, so the
-    gathered result is bitwise-replicated (Theorem 2's invariant
-    survives compression).
-    """
-    x2 = x.reshape(1, -1).astype(jnp.float32)
-    cols = x2.shape[1]
-    g = min(wire_group, cols)
-    pc = (-cols) % g
-    if pc:
-        x2 = jnp.pad(x2, ((0, 0), (0, pc)))
-    if fused:
-        codes, scales = quantize_rows(x2, group=g)
-    else:
-        codes, scales = _kref.quantize_ref(x2, group=g)
-    row = pack_wire(codes, scales)                 # (1, wc) int8
-    wc = row.shape[1]
-    if fused:
-        buf = jnp.zeros((p, wc), jnp.int8)
-        buf = lax.dynamic_update_slice_in_dim(buf, row, 0, axis=0)
-        for pl in allgather_plan(p, schedule, group):
-            payload = lax.slice_in_dim(buf, 0, pl.nblocks, axis=0)
-            T = compat.ppermute(payload, axis_name, _bwd_perm(p, pl.skip))
-            buf = lax.dynamic_update_slice_in_dim(buf, T, pl.lo, axis=0)
-    else:
-        buf = row
-        for pl in allgather_plan(p, schedule, group):
-            payload = buf[:pl.nblocks]
-            T = compat.ppermute(payload, axis_name, _bwd_perm(p, pl.skip))
-            buf = jnp.concatenate([buf, T], axis=0)
-    codes, scales = unpack_wire(buf, x2.shape[1], group=g)
-    vals = _kref.dequant_ref(codes, scales, group=g)   # (p, cols_pad) f32
-    if pc:
-        vals = vals[:, :cols]
-    out = jnp.roll(vals, r, axis=0)  # un-rotate: out[j] = block of rank j
-    return out.reshape(p * x.shape[0], *x.shape[1:]).astype(x.dtype)
+    spec = _circulant_spec(schedule=schedule, group=group,
+                           use_fused_kernel=use_fused_kernel,
+                           wire_dtype=wire_dtype, wire_group=wire_group,
+                           counts=counts)
+    return plan(spec, axis_name=axis_name).allgather(x)
 
 
 # ---------------------------------------------------------------------------
@@ -404,19 +168,18 @@ def circulant_allreduce(
     use_fused_kernel: bool | None = None,
     wire_dtype: str | None = None,
     wire_group: int = DEFAULT_GROUP,
+    counts: Sequence[int] | None = None,
 ) -> Array:
     """Paper Algorithm 2: reduce-scatter + reversed allgather.
     2*ceil(log2 p) ppermutes, 2(p-1) blocks moved, p-1 reductions/rank.
     ``wire_dtype="int8"`` compresses both phases (RS partial sums are
     requantized per round; AG blocks are quantized once)."""
-    w = circulant_reduce_scatter(
-        x, axis_name, schedule=schedule, op=op, group=group,
-        compress=compress, decompress=decompress,
-        use_fused_kernel=use_fused_kernel, wire_dtype=wire_dtype,
-        wire_group=wire_group)
-    return circulant_allgather(w, axis_name, schedule=schedule, group=group,
-                               use_fused_kernel=use_fused_kernel,
-                               wire_dtype=wire_dtype, wire_group=wire_group)
+    spec = _circulant_spec(schedule=schedule, op=op, group=group,
+                           use_fused_kernel=use_fused_kernel,
+                           wire_dtype=wire_dtype, wire_group=wire_group,
+                           counts=counts)
+    return plan(spec, axis_name=axis_name).allreduce(
+        x, compress=compress, decompress=decompress)
 
 
 # ---------------------------------------------------------------------------
@@ -434,82 +197,14 @@ def circulant_alltoall(
     concatenation.  ``x``: (p, blk, *rest); row j is rank r's payload for
     rank j.  Returns (p, blk, *rest); row j is rank j's payload for rank r.
 
-    Trace-time bookkeeping keeps, per live slot, the list of (source-offset,
-    array) pairs — the concatenation operator materialized as Python lists
-    of same-shaped arrays, so every round is still a single fused ppermute
-    over a stacked payload.  Volume is (p/2)*ceil(log2 p) blocks per rank
-    (the classic Bruck trade-off: round-optimal, not volume-optimal).
-
-    The fused form keeps each slot as ONE stacked (count, blk) array —
-    per-round send assembly concatenates a few contiguous slot buffers
-    instead of restacking individual blocks — and lays the final slot into
-    source order with one Pallas row-permutation pass (the permutation is
-    trace-time metadata).
+    Volume is (p/2)*ceil(log2 p) blocks per rank (the classic Bruck
+    trade-off: round-optimal, not volume-optimal).  The fused form keeps
+    each slot as ONE stacked buffer and lays the final slot into source
+    order with one Pallas row-permutation pass.
     """
-    p = compat.axis_size(axis_name)
-    if p == 1:
-        return x
-    r = lax.axis_index(axis_name)
-    rot = jnp.roll(x, -r, axis=0)  # rot[i] = payload for dest (r+i)
-    if resolve_fused(use_fused_kernel):
-        return _fused_alltoall_rounds(rot, axis_name, p, schedule, r,
-                                      x.shape[1:])
-    # slots[i]: list of (offset o, payload) — payload originated at (r+o).
-    slots: list[list[tuple[int, Array]]] = [[(0, rot[i])] for i in range(p)]
-    for pl in reduce_scatter_plan(p, schedule):
-        s = pl.skip
-        # Stack every array sent this round into ONE ppermute payload.
-        send_entries = [e for i in range(pl.lo, pl.hi) for e in slots[i]]
-        stacked = jnp.stack([a for (_, a) in send_entries], axis=0)
-        T = compat.ppermute(stacked, axis_name, _fwd_perm(p, s))
-        # Unstack with shifted source offsets; ⊕ = list concatenation.
-        idx = 0
-        for j in range(pl.nblocks):
-            src_slot = pl.lo + j
-            for (o, _) in slots[src_slot]:
-                slots[j].append((((o - s) % p), T[idx]))
-                idx += 1
-        assert idx == len(send_entries)
-        del slots[pl.lo:]  # slots [lo, hi) were sent; live = [0, s)
-    entries = slots[0]
-    assert len(entries) == p, f"expected {p} payloads, got {len(entries)}"
-    ordered = [a for (_, a) in sorted(entries, key=lambda e: e[0])]
-    stacked = jnp.stack(ordered, axis=0)  # stacked[o] = payload from (r+o)
-    return jnp.roll(stacked, r, axis=0)   # row j = payload from rank j
-
-
-def _fused_alltoall_rounds(rot: Array, axis_name: str, p: int, schedule: str,
-                           r, blk_shape: tuple) -> Array:
-    """Bruck-style rounds over stacked slot buffers (fused alltoall).
-
-    slots[i] is one (count_i, blk) array; offs[i] is the parallel Python
-    list of source offsets.  Entry order inside each slot matches the
-    unfused list-of-arrays path exactly, so results are bitwise-equal.
-    """
-    rot2 = rot.reshape(p, -1)
-    slots = [lax.slice_in_dim(rot2, i, i + 1, axis=0) for i in range(p)]
-    offs: list[list[int]] = [[0] for _ in range(p)]
-    for pl in reduce_scatter_plan(p, schedule):
-        s = pl.skip
-        send = (slots[pl.lo] if pl.nblocks == 1 else
-                jnp.concatenate(slots[pl.lo:pl.hi], axis=0))
-        T = compat.ppermute(send, axis_name, _fwd_perm(p, s))
-        idx = 0
-        for j in range(pl.nblocks):
-            src_slot = pl.lo + j
-            cnt = len(offs[src_slot])
-            piece = lax.slice_in_dim(T, idx, idx + cnt, axis=0)
-            slots[j] = jnp.concatenate([slots[j], piece], axis=0)
-            offs[j] = offs[j] + [(o - s) % p for o in offs[src_slot]]
-            idx += cnt
-        assert idx == T.shape[0]
-        del slots[pl.lo:], offs[pl.lo:]
-    assert slots[0].shape[0] == p, \
-        f"expected {p} payloads, got {slots[0].shape[0]}"
-    order = sorted(range(p), key=lambda i: offs[0][i])
-    ordered = permute_rows(slots[0], order)  # ordered[o] = from (r+o)
-    out = jnp.roll(ordered, r, axis=0)       # row j = payload from rank j
-    return out.reshape(p, *blk_shape)
+    spec = _circulant_spec(schedule=schedule,
+                           use_fused_kernel=use_fused_kernel)
+    return plan(spec, axis_name=axis_name).alltoall(x)
 
 
 # ---------------------------------------------------------------------------
@@ -523,7 +218,7 @@ def ring_reduce_scatter(x: Array, axis_name: str, *,
 
     In rotated coordinates the schedule is static: at step t, send
     R[p-1-t] to rank r+1, receive the peer's partial for our R[p-2-t]."""
-    reduce_fn = _resolve_op(op)
+    reduce_fn = resolve_op(op)
     p = compat.axis_size(axis_name)
     if p == 1:
         return x
@@ -562,7 +257,7 @@ def recursive_halving_reduce_scatter(x: Array, axis_name: str, *,
                                      op: str | ReduceFn = "add", **_ignored) -> Array:
     """Hypercube/butterfly reduce-scatter — power-of-two p ONLY (the
     classic algorithm whose non-pow2 awkwardness motivates the paper)."""
-    reduce_fn = _resolve_op(op)
+    reduce_fn = resolve_op(op)
     p = compat.axis_size(axis_name)
     if p == 1:
         return x
@@ -618,40 +313,81 @@ AG_IMPLS = {
 }
 
 
-def reduce_scatter(x, axis_name, impl="circulant", **kw):
-    return RS_IMPLS[impl](x, axis_name, **kw)
+def _warn_impl_string(impl: str, fn: str) -> None:
+    warnings.warn(
+        f"{fn}(impl={impl!r}) string dispatch is deprecated; build a "
+        f"CollectiveSpec(kind={impl!r}, ...) and pass spec= (or call "
+        f"repro.core.plan() directly)",
+        DeprecationWarning, stacklevel=4)  # _warn -> _dispatch -> wrapper -> caller
 
 
-def allreduce(x, axis_name, impl="circulant", **kw):
-    return AR_IMPLS[impl](x, axis_name, **kw)
+def _dispatch(x, axis_name, impl, spec, table, fn_name, method, kw):
+    if spec is not None:
+        if impl is not None:
+            raise TypeError(f"{fn_name}() takes either spec= or impl=, "
+                            f"not both")
+        if kw:
+            raise TypeError(
+                f"{fn_name}(spec=...) does not accept extra kwargs "
+                f"{sorted(kw)}; fold them into the CollectiveSpec "
+                f"(compress/decompress hooks go to the plan method)")
+        return getattr(plan(spec, axis_name=axis_name), method)(x)
+    if impl is not None:
+        _warn_impl_string(impl, fn_name)
+    return table[impl or "circulant"](x, axis_name, **kw)
 
 
-def allgather(x, axis_name, impl="circulant", **kw):
-    return AG_IMPLS[impl](x, axis_name, **kw)
+def reduce_scatter(x, axis_name, impl=None, *,
+                   spec: CollectiveSpec | None = None, **kw):
+    """Reduce-scatter dispatcher.  Preferred: ``spec=CollectiveSpec(...)``
+    (plan/execute API).  Passing a raw ``impl=`` string is deprecated."""
+    return _dispatch(x, axis_name, impl, spec, RS_IMPLS, "reduce_scatter",
+                     "reduce_scatter", kw)
+
+
+def allreduce(x, axis_name, impl=None, *,
+              spec: CollectiveSpec | None = None, **kw):
+    """Allreduce dispatcher — see :func:`reduce_scatter`."""
+    return _dispatch(x, axis_name, impl, spec, AR_IMPLS, "allreduce",
+                     "allreduce", kw)
+
+
+def allgather(x, axis_name, impl=None, *,
+              spec: CollectiveSpec | None = None, **kw):
+    """Allgather dispatcher — see :func:`reduce_scatter`."""
+    return _dispatch(x, axis_name, impl, spec, AG_IMPLS, "allgather",
+                     "allgather", kw)
 
 
 def hierarchical_reduce_scatter(x, axis_names: Sequence[str],
-                                impl="circulant", **kw):
+                                impl=None, *,
+                                spec: CollectiveSpec | None = None, **kw):
     """Nested RS over multiple mesh axes (e.g. ('data', 'pod')): RS over the
     fastest axis first, then the slower axis on the surviving 1/p_0 shard —
     large skips never cross the slow interconnect with more than m/p_0
-    payload (multilane decomposition; DESIGN §2 assumption 2)."""
+    payload (multilane decomposition; DESIGN §2 assumption 2).
+
+    A two-axis plan is just two nested plans: with ``spec=`` each axis
+    compiles and caches its own :class:`CollectivePlan` for the same spec.
+    """
     out = x
     for ax in axis_names:
-        out = reduce_scatter(out, ax, impl=impl, **kw)
+        out = reduce_scatter(out, ax, impl, spec=spec, **kw)
     return out
 
 
 def hierarchical_allgather(x, axis_names: Sequence[str],
-                           impl="circulant", **kw):
+                           impl=None, *,
+                           spec: CollectiveSpec | None = None, **kw):
     """Inverse of hierarchical_reduce_scatter (reverse axis order)."""
     out = x
     for ax in reversed(list(axis_names)):
-        out = allgather(out, ax, impl=impl, **kw)
+        out = allgather(out, ax, impl, spec=spec, **kw)
     return out
 
 
 def hierarchical_allreduce(x, axis_names: Sequence[str],
-                           impl="circulant", **kw):
-    out = hierarchical_reduce_scatter(x, axis_names, impl=impl, **kw)
-    return hierarchical_allgather(out, axis_names, impl=impl, **kw)
+                           impl=None, *,
+                           spec: CollectiveSpec | None = None, **kw):
+    out = hierarchical_reduce_scatter(x, axis_names, impl, spec=spec, **kw)
+    return hierarchical_allgather(out, axis_names, impl, spec=spec, **kw)

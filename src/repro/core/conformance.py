@@ -52,7 +52,9 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import compat  # noqa: E402
 from repro.core import collectives as C  # noqa: E402
+from repro.core import simulator as sim  # noqa: E402
 from repro.core.schedule import ceil_log2, get_skips  # noqa: E402
+from repro.core.spec import CollectiveSpec  # noqa: E402
 
 # Non-powers-of-two dominate by design — power-of-two p is the case the
 # classic algorithms already handle; the paper's claim is the general one.
@@ -149,18 +151,22 @@ def _shmap1(mesh, fn, check_vma: bool | None = None):
         in_specs=(P(AXIS),), out_specs=P(AXIS), check_vma=check_vma))
 
 
+def case_spec(case: Case, p: int) -> CollectiveSpec:
+    """The CollectiveSpec a sweep case means — every case executes
+    through the plan/execute API (the component under test)."""
+    if case.impl != "circulant":
+        return CollectiveSpec(kind=case.impl, op=case.op)
+    return CollectiveSpec(
+        kind="circulant", schedule=case.schedule, op=case.op,
+        use_fused_kernel=case.fused, wire_dtype=case.wire,
+        group=two_level_group(p) if case.schedule == "two_level" else None)
+
+
 def _impl_fn(case: Case, p: int):
-    kw = {"op": case.op}
-    if case.impl == "circulant":
-        kw["schedule"] = case.schedule
-        kw["use_fused_kernel"] = case.fused
-        if case.wire:
-            kw["wire_dtype"] = case.wire
-        if case.schedule == "two_level":
-            kw["group"] = two_level_group(p)
+    spec = case_spec(case, p)
     if case.collective == "reduce_scatter":
-        return lambda v: C.reduce_scatter(v, AXIS, impl=case.impl, **kw)
-    return lambda v: C.allreduce(v, AXIS, impl=case.impl, **kw)
+        return lambda v: C.reduce_scatter(v, AXIS, spec=spec)
+    return lambda v: C.allreduce(v, AXIS, spec=spec)
 
 
 def _xla_baseline_fn(case: Case):
@@ -314,6 +320,131 @@ def check_round_counts(mesh, p: int) -> dict[str, tuple[int, int]]:
 
 
 # ---------------------------------------------------------------------------
+# Non-uniform counts (paper Corollary 3) — spec(counts=...) vs simulator
+# ---------------------------------------------------------------------------
+
+NONUNIFORM_SCHEDULES = ("halving", "power2", "fully_connected")
+
+
+def nonuniform_counts_cases(p: int) -> dict[str, tuple[int, ...]]:
+    """Per-rank block-size patterns for the Corollary 3 sweep.
+
+    ``one_column`` is the paper's worst case (every element concentrated
+    in a single column — each round one rank ships the whole vector);
+    ``zero_ranks`` exercises empty blocks; ``ragged`` is a deterministic
+    mixed pattern; ``uniform`` must agree with the uniform path.
+    """
+    ragged = tuple((i * 5 + 3) % 7 for i in range(p))
+    if sum(ragged) == 0:
+        ragged = (1,) * p
+    one_col = [0] * p
+    one_col[p // 2] = 4 * p + 3
+    zero_ranks = tuple(0 if i % 2 else i + 2 for i in range(p))
+    if sum(zero_ranks) == 0:
+        zero_ranks = (2,) + (0,) * (p - 1)
+    return {
+        "ragged": ragged,
+        "one_column": tuple(one_col),
+        "zero_ranks": zero_ranks,
+        "uniform": (BLK,) * p,
+    }
+
+
+def run_nonuniform(p: int, mesh, verbose: bool = False) -> dict:
+    """Corollary 3 conformance: ``CollectiveSpec(counts=...)`` reduce-
+    scatter (and allreduce) under shard_map vs the numpy simulator (which
+    asserts the Theorem 1 counters) AND the host reference, across
+    schedules × ops × counts patterns, plus lowered-HLO collective-
+    permute counts — still exactly ``rounds(schedule)`` (= ceil(log2 p)
+    for halving/power2): ragged counts must not change the communication
+    structure."""
+    rng = np.random.default_rng(4242 + p)
+    n_cases = 0
+    rounds: dict[str, tuple[int, int]] = {}
+    for name, counts in nonuniform_counts_cases(p).items():
+        N, bmax = sum(counts), max(counts)
+        offs = np.concatenate([[0], np.cumsum(counts)])
+        xg = rng.standard_normal((p, N)).astype(np.float32)
+        inputs = [[xg[r, offs[i]:offs[i + 1]] for i in range(p)]
+                  for r in range(p)]
+        for sched in NONUNIFORM_SCHEDULES:
+            for op in ("add", "max"):
+                spec = CollectiveSpec(schedule=sched, op=op, counts=counts)
+                tag = f"counts[{name}:{sched}:{op}]"
+                W, stats = sim.simulate_reduce_scatter(
+                    inputs, op=_NP_OPS[op], schedule=sched)
+                if sched in OPTIMAL_SCHEDULES:
+                    stats.assert_theorem1(p)
+                else:
+                    assert stats.rounds == schedule_rounds(p, sched)
+                    assert all(b == p - 1 for b in stats.blocks_sent)
+                out = np.asarray(_shmap1(
+                    mesh, lambda v, s=spec: C.reduce_scatter(
+                        v, AXIS, spec=s))(jnp.asarray(xg)))
+                ref = _ref_nonuniform(xg, op)
+                tol = ({"rtol": 0, "atol": 0} if op != "add"
+                       else {"rtol": 2e-5, "atol": 2e-5})
+                for r in range(p):
+                    c = counts[r]
+                    np.testing.assert_allclose(
+                        out[r, :c].astype(np.float64), W[r], **tol,
+                        err_msg=f"{tag} vs simulator (p={p}, rank {r})")
+                    np.testing.assert_allclose(
+                        out[r, :c].astype(np.float64),
+                        ref[offs[r]:offs[r] + c], **tol,
+                        err_msg=f"{tag} vs host reference (p={p}, rank {r})")
+                    assert (out[r, c:] == 0).all(), \
+                        f"{tag}: rows past counts[{r}] must be zero"
+                n_cases += 1
+        # Allreduce (RS + non-uniform allgather) on the default schedule:
+        # replicated full vector, bitwise across ranks.
+        spec = CollectiveSpec(counts=counts)
+        ar = np.asarray(_shmap1(
+            mesh, lambda v, s=spec: C.allreduce(v, AXIS, spec=s))(
+            jnp.asarray(xg)))
+        ref = _ref_nonuniform(xg, "add")
+        for r in range(p):
+            np.testing.assert_allclose(
+                ar[r].astype(np.float64), ref, rtol=2e-5, atol=2e-5,
+                err_msg=f"counts[{name}] allreduce (p={p})")
+            np.testing.assert_array_equal(ar[r], ar[0])
+        n_cases += 1
+        # HLO structure: ragged counts keep one collective-permute per
+        # round — ceil(log2 p) for the optimal schedules (Theorem 1 /
+        # Corollary 3).
+        for sched in NONUNIFORM_SCHEDULES:
+            spec = CollectiveSpec(schedule=sched, counts=counts)
+            want = schedule_rounds(p, sched)
+            n_rs = _n_collective_permutes(_shmap1(
+                mesh, lambda v, s=spec: C.reduce_scatter(v, AXIS, spec=s)),
+                (p, N))
+            n_ar = _n_collective_permutes(_shmap1(
+                mesh, lambda v, s=spec: C.allreduce(v, AXIS, spec=s)),
+                (p, N))
+            if sched in OPTIMAL_SCHEDULES:
+                assert want == ceil_log2(p)
+            assert n_rs == want, \
+                (f"counts[{name}:{sched}] p={p}: {n_rs} collective-"
+                 f"permutes, want {want} (Corollary 3 keeps Theorem 1's "
+                 f"rounds)")
+            assert n_ar == 2 * want, \
+                (f"counts[{name}:{sched}] AR p={p}: {n_ar} collective-"
+                 f"permutes, want {2 * want}")
+            rounds[f"{name}:{sched}"] = (n_rs, n_ar)
+        if verbose:
+            print(f"ok: counts[{name}] p={p} (sum={N}, bmax={bmax})")
+    return {"n_cases": n_cases, "rounds": rounds}
+
+
+def _ref_nonuniform(xg: np.ndarray, op: str) -> np.ndarray:
+    npop = _NP_OPS[op]
+    red = xg[0].astype(np.float64)
+    for r in range(1, xg.shape[0]):
+        red = npop(red, xg[r].astype(np.float64))
+    return red
+
+
+# ---------------------------------------------------------------------------
 # Hierarchical (multi-axis) sweep — nested RS/AG/AR over a 2-D mesh
 # ---------------------------------------------------------------------------
 
@@ -439,9 +570,10 @@ def run_sweep(p: int, mesh=None, verbose: bool = False) -> dict:
         for sched, (n_rs, n_ar) in rounds.items():
             print(f"ok: HLO rounds p={p} {sched}: RS={n_rs} AR={n_ar} "
                   f"(ceil_log2={ceil_log2(p)})")
+    nonuni = run_nonuniform(p, mesh, verbose=verbose)
     hier = run_hierarchical(p, verbose=verbose)
     return {"p": p, "n_cases": len(cases), "rounds": rounds,
-            "hierarchical": hier}
+            "nonuniform": nonuni, "hierarchical": hier}
 
 
 def main(argv=None) -> int:
@@ -455,8 +587,10 @@ def main(argv=None) -> int:
     hier = report.get("hierarchical")
     hier_note = (f", hierarchical {hier['mesh'][0]}x{hier['mesh'][1]}: "
                  f"{hier['n_cases']} cases" if hier else "")
+    nonuni = report["nonuniform"]
     print(f"CONFORMANCE OK (p={p}, {report['n_cases']} cases, "
-          f"{len(report['rounds'])} schedules{hier_note})")
+          f"{len(report['rounds'])} schedules, "
+          f"{nonuni['n_cases']} non-uniform cases{hier_note})")
     return 0
 
 

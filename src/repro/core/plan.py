@@ -1,0 +1,834 @@
+"""``plan()`` — compile a :class:`CollectiveSpec` into an executable plan.
+
+This is the execute half of the plan/execute API (see ``core.spec``).  A
+``CollectivePlan`` is everything Algorithm 1/2 precomputes before any data
+moves, resolved ONCE per ``(spec, p, axis_name)`` and memoized:
+
+* the resolved Corollary-2 skip sequence and per-round
+  :class:`~repro.core.schedule.RoundPlan`s for both phases;
+* per-round send/recv BLOCK INDEX TABLES — for every round, exactly which
+  rotated block indices leave and arrive (Theorem 1's partition of the
+  p-1 non-resident blocks, property-tested across all schedules);
+* for non-uniform ``counts`` (paper Corollary 3), per-round ROW index
+  tables: the per-rank gather/scatter row sets that pack each round's
+  ragged send window into one fixed-width wire buffer (SPMD needs static
+  shapes, so the wire width is the worst windowed count sum — exactly the
+  quantity Corollary 3's bound maximizes over);
+* the wire-format layout (int8 codes + packed scale bytes) and a backend
+  from a small registry (``jnp``, ``fused``, ``jnp+int8``, ``fused+int8``,
+  ``nonuniform``, plus the baseline kinds).
+
+Execution (``plan.reduce_scatter(x)`` etc.) then just replays the tables:
+one ``collective-permute`` per round, same HLO structure as the original
+kwarg API (asserted by the conformance harness and the CI ``plans`` gate).
+
+Plans are cached with ``functools.lru_cache`` — repeated calls with the
+same spec are trace-time dict hits, so spec-driven dispatch adds zero
+retraces and zero extra collectives.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro import compat
+from repro.kernels import (fused_round, fused_round_dq, pack_wire, pad2d,
+                           permute_rows, quantize_rows, resolve_fused,
+                           unpack_wire)
+from repro.kernels import ref as _kref
+from .schedule import RoundPlan, allgather_plan, reduce_scatter_plan
+from .spec import CollectiveSpec, as_spec
+
+Array = jax.Array
+ReduceFn = Callable[[Array, Array], Array]
+
+_REDUCERS: dict[str, ReduceFn] = {
+    "add": lambda a, b: a + b,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+#: ops the scatter-fold (non-uniform) and fused/wire backends support.
+NAMED_OPS = tuple(_REDUCERS)
+
+
+def resolve_op(op) -> ReduceFn:
+    """Named-or-callable ⊕ resolution (the single kwarg-era helper left;
+    every backend goes through it)."""
+    if callable(op):
+        return op
+    try:
+        return _REDUCERS[op]
+    except KeyError:
+        raise ValueError(f"unknown reduce op {op!r}") from None
+
+
+def _fwd_perm(p: int, s: int) -> list[tuple[int, int]]:
+    """Data on rank i goes to rank (i + s) mod p  (paper's to-processor)."""
+    return [(i, (i + s) % p) for i in range(p)]
+
+
+def _bwd_perm(p: int, s: int) -> list[tuple[int, int]]:
+    """Data on rank i goes to rank (i - s) mod p  (allgather phase)."""
+    return [(i, (i - s) % p) for i in range(p)]
+
+
+# ---------------------------------------------------------------------------
+# Block layout — THE padding path (uniform and non-uniform share it)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BlockLayout:
+    """Per-rank block row counts along the leading axis.
+
+    The one place block geometry is derived from: ``pad_to_multiple`` /
+    ``_as_blocks`` (uniform), the non-uniform row tables (Corollary 3),
+    and the ZeRO-1 leaf padding all consume a layout instead of
+    re-deriving ``ceil(n/p)`` locally.
+    """
+
+    counts: tuple[int, ...]
+
+    @classmethod
+    def uniform(cls, p: int, n: int) -> "BlockLayout":
+        """Equal blocks of ``ceil(n/p)`` rows (zero-pad to fit)."""
+        if p < 1:
+            raise ValueError(f"p must be >= 1, got {p}")
+        b = -(-n // p) if n else 0
+        return cls(counts=(b,) * p)
+
+    @property
+    def p(self) -> int:
+        return len(self.counts)
+
+    @property
+    def total(self) -> int:
+        return sum(self.counts)
+
+    @property
+    def bmax(self) -> int:
+        return max(self.counts)
+
+    @property
+    def offsets(self) -> tuple[int, ...]:
+        """Row offset of each block (plus the total as a sentinel)."""
+        off, acc = [], 0
+        for c in self.counts:
+            off.append(acc)
+            acc += c
+        off.append(acc)
+        return tuple(off)
+
+    @property
+    def is_uniform(self) -> bool:
+        return len(set(self.counts)) <= 1
+
+    def pad(self, x: Array) -> tuple[Array, int]:
+        """Zero-pad the leading axis of ``x`` up to ``total`` rows."""
+        n = x.shape[0]
+        pad = self.total - n
+        if pad < 0:
+            raise ValueError(
+                f"input has {n} rows, layout holds only {self.total}")
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], axis=0)
+        return x, pad
+
+    def as_blocks(self, x: Array) -> Array:
+        """Reshape the leading axis into (p, bmax, *rest) — uniform only."""
+        if not self.is_uniform:
+            raise ValueError(
+                f"non-uniform layout {self.counts} cannot reshape to "
+                f"equal blocks; use the row tables")
+        n, p = x.shape[0], self.p
+        if n != self.total:
+            raise ValueError(
+                f"leading dim {n} not divisible by axis size {p}; pad first "
+                f"(see pad_to_multiple)")
+        return x.reshape(p, self.bmax, *x.shape[1:])
+
+    def window_rows(self, window: Sequence[int]) -> np.ndarray:
+        """Per-rank row index table for a rotated block window.
+
+        Row ``r`` lists, in block order, the absolute row indices of
+        blocks ``(r + i) mod p`` for ``i`` in ``window``, padded with the
+        sentinel ``total`` (a dummy row) to the worst-case window width —
+        the quantity Corollary 3's round bound maximizes over.
+        """
+        p, off, total = self.p, self.offsets, self.total
+        widths = [sum(self.counts[(r + i) % p] for i in window)
+                  for r in range(p)]
+        W = max(widths) if widths else 0
+        tab = np.full((p, max(W, 1)), total, dtype=np.int32)
+        for r in range(p):
+            j = 0
+            for i in window:
+                c = (r + i) % p
+                tab[r, j:j + self.counts[c]] = np.arange(
+                    off[c], off[c] + self.counts[c], dtype=np.int32)
+                j += self.counts[c]
+        return tab
+
+
+# ---------------------------------------------------------------------------
+# The compiled plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True, eq=False)
+class CollectivePlan:
+    """Compiled, cached form of a :class:`CollectiveSpec` at axis size p.
+
+    ``rs_send_blocks[k]`` / ``rs_recv_blocks[k]`` are the rotated block
+    indices moved in reduce-scatter round k (``ag_*`` likewise for the
+    reversed allgather phase); over all rounds the send sets partition
+    ``{1, .., p-1}`` exactly (Theorem 1, property-tested).  For
+    non-uniform counts, ``rs_row_tables[k]`` is the per-rank
+    ``(p, W_k)`` absolute-row gather/scatter table realizing those block
+    sets at row granularity.
+    """
+
+    spec: CollectiveSpec
+    p: int
+    axis_name: str
+    backend: str
+    skips: tuple[int, ...]
+    rs_rounds: tuple[RoundPlan, ...]
+    ag_rounds: tuple[RoundPlan, ...]
+    rs_send_blocks: tuple[tuple[int, ...], ...]
+    rs_recv_blocks: tuple[tuple[int, ...], ...]
+    ag_send_blocks: tuple[tuple[int, ...], ...]
+    ag_recv_blocks: tuple[tuple[int, ...], ...]
+    layout: BlockLayout | None          # non-None iff spec.counts given
+    rs_row_tables: tuple[np.ndarray, ...] | None
+    ag_row_tables: tuple[np.ndarray, ...] | None
+
+    # -- layout funnel -----------------------------------------------------
+
+    def layout_for(self, n: int) -> BlockLayout:
+        """The layout governing an ``n``-row payload under this plan."""
+        if self.layout is not None:
+            return self.layout
+        return BlockLayout.uniform(self.p, n)
+
+    # -- execution ---------------------------------------------------------
+
+    def reduce_scatter(self, x: Array, *, compress=None,
+                       decompress=None) -> Array:
+        """Paper Algorithm 1 under this plan (one ppermute per round)."""
+        self._check_hooks(compress, decompress)
+        if self.backend in _BASELINE_RS:
+            return _BASELINE_RS[self.backend](self, x)
+        if self.p == 1:
+            return x
+        if self.backend == "nonuniform":
+            return _rs_nonuniform(self, x)
+        _check_wire_payload(self, x)
+        r = lax.axis_index(self.axis_name)
+        R = jnp.roll(self.layout_for(x.shape[0]).as_blocks(x), -r, axis=0)
+        if self.backend in ("jnp+int8", "fused+int8"):
+            return _rs_wire(self, R)
+        if self.backend == "fused":
+            return _rs_fused(self, R, compress, decompress)
+        return _rs_jnp(self, R, compress, decompress)
+
+    def allgather(self, x: Array) -> Array:
+        """Algorithm 2's second phase (reversed skip stack) standalone."""
+        if self.backend in _BASELINE_AG:
+            return _BASELINE_AG[self.backend](self, x)
+        if self.p == 1:
+            return x
+        if self.backend == "nonuniform":
+            return _ag_nonuniform(self, x)
+        _check_wire_payload(self, x)
+        if self.backend in ("jnp+int8", "fused+int8"):
+            return _ag_wire(self, x)
+        return _ag_plain(self, x)
+
+    def allreduce(self, x: Array, *, compress=None, decompress=None) -> Array:
+        """Paper Algorithm 2: reduce-scatter + reversed allgather."""
+        if self.backend in _BASELINE_AR:
+            return _BASELINE_AR[self.backend](self, x)
+        w = self.reduce_scatter(x, compress=compress, decompress=decompress)
+        return self.allgather(w)
+
+    def alltoall(self, x: Array) -> Array:
+        """All-to-all by concatenation (paper §4): Algorithm 1 with ⊕ =
+        concat.  Circulant kinds only; uniform blocks only."""
+        if self.spec.kind != "circulant":
+            raise ValueError(f"alltoall needs kind='circulant', "
+                             f"got {self.spec.kind!r}")
+        if self.spec.wired:
+            raise NotImplementedError(
+                "alltoall does not support wire_dtype (blocks hop through "
+                "intermediate ranks; requantizing per hop would compound "
+                "the error)")
+        if self.layout is not None:
+            raise NotImplementedError(
+                "alltoall does not support non-uniform counts")
+        if self.p == 1:
+            return x
+        if self.backend.startswith("fused"):
+            return _a2a_fused(self, x)
+        return _a2a_jnp(self, x)
+
+    # -- validation helpers ------------------------------------------------
+
+    def _check_hooks(self, compress, decompress) -> None:
+        if compress is None and decompress is None:
+            return
+        if self.spec.wired:
+            raise ValueError(
+                "wire_dtype and compress/decompress hooks are mutually "
+                "exclusive")
+        if self.backend == "nonuniform":
+            raise ValueError(
+                "compress/decompress hooks do not support non-uniform "
+                "counts")
+        if self.spec.kind != "circulant":
+            raise ValueError(
+                f"compress/decompress hooks need kind='circulant' "
+                f"(per-round payloads), got {self.spec.kind!r}")
+
+
+def _check_wire_payload(plan: CollectivePlan, x: Array) -> None:
+    """int8 wire needs float payloads (quantization grid); checked at
+    execution because the spec is payload-agnostic."""
+    if plan.spec.wired and not jnp.issubdtype(x.dtype, jnp.floating):
+        raise ValueError(
+            f"wire_dtype='int8' needs a float payload, got {x.dtype}")
+
+
+# ---------------------------------------------------------------------------
+# plan(): spec -> CollectivePlan, memoized
+# ---------------------------------------------------------------------------
+
+_BASELINE_KINDS = ("ring", "recursive_halving", "xla")
+
+
+def _resolve_backend(spec: CollectiveSpec) -> str:
+    """Backend registry key for a spec (the one place the kwarg-era
+    ``_resolve_op``/``_check_wire`` decision tables live on)."""
+    if spec.kind in _BASELINE_KINDS:
+        return spec.kind
+    if spec.counts is not None:
+        if spec.wire_dtype is not None:
+            raise ValueError(
+                "non-uniform counts and wire_dtype cannot be combined yet "
+                "(quantization groups would straddle ragged blocks)")
+        if spec.use_fused_kernel is True:
+            raise ValueError(
+                "use_fused_kernel does not support non-uniform counts "
+                "(the fused round kernel assumes equal blocks)")
+        if spec.op not in NAMED_OPS:
+            raise ValueError(
+                f"non-uniform counts need a named op {NAMED_OPS}, "
+                f"got {spec.op!r}")
+        return "nonuniform"
+    if spec.wire_dtype is not None:
+        if not isinstance(spec.op, str):
+            raise ValueError(
+                f"wire_dtype needs a named op ('add'/'max'/'min'), "
+                f"got {spec.op!r}")
+        return ("fused+int8" if resolve_fused(spec.use_fused_kernel)
+                else "jnp+int8")
+    if resolve_fused(spec.use_fused_kernel):
+        if not isinstance(spec.op, str):
+            if spec.use_fused_kernel:
+                # Explicit request only — auto silently keeps the jnp path.
+                raise ValueError(
+                    "use_fused_kernel needs a named op ('add'/'max'/'min'), "
+                    f"got callable {spec.op!r}")
+            return "jnp"
+        return "fused"
+    return "jnp"
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_cached(spec: CollectiveSpec, p: int, axis_name: str
+                 ) -> CollectivePlan:
+    backend = _resolve_backend(spec)
+    if spec.kind in _BASELINE_KINDS:
+        return CollectivePlan(
+            spec=spec, p=p, axis_name=axis_name, backend=backend,
+            skips=(), rs_rounds=(), ag_rounds=(),
+            rs_send_blocks=(), rs_recv_blocks=(),
+            ag_send_blocks=(), ag_recv_blocks=(),
+            layout=None, rs_row_tables=None, ag_row_tables=None)
+
+    rs = reduce_scatter_plan(p, spec.schedule, spec.group)
+    ag = allgather_plan(p, spec.schedule, spec.group)
+    rs_send = tuple(tuple(range(pl.lo, pl.hi)) for pl in rs)
+    rs_recv = tuple(tuple(range(0, pl.nblocks)) for pl in rs)
+    ag_send = tuple(tuple(range(0, pl.nblocks)) for pl in ag)
+    ag_recv = tuple(tuple(range(pl.lo, pl.hi)) for pl in ag)
+
+    layout = rs_tables = ag_tables = None
+    if spec.counts is not None:
+        if len(spec.counts) != p:
+            raise ValueError(
+                f"counts has {len(spec.counts)} entries for axis size {p}")
+        layout = BlockLayout(counts=spec.counts)
+        rs_tables = tuple(layout.window_rows(w) for w in rs_send)
+        ag_tables = tuple(layout.window_rows(w) for w in ag_send)
+
+    return CollectivePlan(
+        spec=spec, p=p, axis_name=axis_name, backend=backend,
+        skips=tuple(pl.skip for pl in rs), rs_rounds=rs, ag_rounds=ag,
+        rs_send_blocks=rs_send, rs_recv_blocks=rs_recv,
+        ag_send_blocks=ag_send, ag_recv_blocks=ag_recv,
+        layout=layout, rs_row_tables=rs_tables, ag_row_tables=ag_tables)
+
+
+def plan(spec: CollectiveSpec | None = None, p: int | None = None,
+         axis_name: str | None = None, **kw) -> CollectivePlan:
+    """Compile ``spec`` for axis ``axis_name`` of size ``p`` (cached).
+
+    ``p`` may be omitted inside a shard_map region (resolved from the
+    axis).  Bare kwargs build the spec in place::
+
+        plan(p=8, axis_name="x", schedule="power2").reduce_scatter(x)
+    """
+    spec = as_spec(spec, **kw)
+    if axis_name is None:
+        raise ValueError("plan() needs an axis_name")
+    if p is None:
+        p = compat.axis_size(axis_name)
+    return _plan_cached(spec, int(p), axis_name)
+
+
+def plan_cache_info():
+    return _plan_cached.cache_info()
+
+
+def plan_cache_clear() -> None:
+    _plan_cached.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Uniform circulant backends (ported verbatim from the kwarg-era loops —
+# identical round structure, ppermute sequence and arithmetic)
+# ---------------------------------------------------------------------------
+
+def _rs_jnp(plan: CollectivePlan, R: Array, compress, decompress) -> Array:
+    """Algorithm 1's round loop, plain jnp ops (always available)."""
+    reduce_fn = resolve_op(plan.spec.op)
+    p = plan.p
+    for pl in plan.rs_rounds:
+        payload = R[pl.lo:pl.hi]
+        if compress is not None:
+            payload = compress(payload)
+        T = compat.ppermute(payload, plan.axis_name, _fwd_perm(p, pl.skip))
+        if decompress is not None:
+            T = decompress(T)
+        nb = pl.nblocks
+        head = reduce_fn(R[:nb], T)
+        R = head if nb == pl.lo else jnp.concatenate([head, R[nb:pl.lo]],
+                                                     axis=0)
+    return R[0]
+
+
+def _rs_fused(plan: CollectivePlan, R: Array, compress, decompress) -> Array:
+    """Algorithm 1's round loop on the fused Pallas kernel.
+
+    The rotated block buffer is viewed as 2-D ``(blocks, block_numel)``;
+    after the prologue slice every round is ppermute → fused_round, with
+    the kernel emitting both the shrunken live buffer and the next
+    round's contiguous payload.  Identical values and ppermute sequence
+    to the jnp path — only the local data movement is fused.
+    """
+    p, op = plan.p, plan.spec.op
+    blk_shape = R.shape[1:]
+    R2 = R.reshape(p, -1)
+    plans = plan.rs_rounds
+    live = R2[: plans[0].lo]
+    send = R2[plans[0].lo : plans[0].hi]
+    for k, pl in enumerate(plans):
+        payload = send if compress is None else compress(send)
+        T = compat.ppermute(payload, plan.axis_name, _fwd_perm(p, pl.skip))
+        if decompress is not None:
+            T = decompress(T)
+        if T.dtype != live.dtype:
+            # Match the jnp path, whose concatenate promotes the buffer
+            # (e.g. bf16 live vs f32 decompressed payload).
+            dt = jnp.result_type(live.dtype, T.dtype)
+            live, T = live.astype(dt), T.astype(dt)
+        next_lo = plans[k + 1].lo if k + 1 < len(plans) else pl.lo
+        live, send = fused_round(live, T, nb=pl.nblocks, next_lo=next_lo,
+                                 op=op)
+    return live[0].reshape(blk_shape)
+
+
+def _rs_wire(plan: CollectivePlan, R: Array) -> Array:
+    """Algorithm 1's round loop on the int8 wire format.
+
+    The rotated block buffer is promoted to an f32 (blocks, block_numel)
+    accumulation buffer whose columns are padded to a whole number of
+    quantization groups.  Every round then ppermutes ONE packed int8
+    buffer ([codes | scale bytes], see kernels.quantize) and runs a
+    single dequantize + ⊕-fold + requantize-next-send pass — the Pallas
+    ``fused_round_dq`` kernel on the fused backend, its jnp oracle
+    otherwise (bitwise-identical arithmetic; both jitted).  Round count
+    and ppermute sequence match the uncompressed path exactly.
+    """
+    p, op = plan.p, plan.spec.op
+    fused = plan.backend == "fused+int8"
+    blk_shape, out_dtype = R.shape[1:], R.dtype
+    R2 = R.reshape(p, -1).astype(jnp.float32)
+    cols = R2.shape[1]
+    g = min(plan.spec.wire_group, cols)
+    R2 = pad2d(R2, 1, g)
+    plans = plan.rs_rounds
+    live = R2[: plans[0].lo]
+    first = R2[plans[0].lo : plans[0].hi]
+    if fused:
+        codes, scales = quantize_rows(first, group=g)
+    else:
+        codes, scales = _kref.quantize_ref(first, group=g)
+    wire = pack_wire(codes, scales)
+    for k, pl in enumerate(plans):
+        Tw = compat.ppermute(wire, plan.axis_name, _fwd_perm(p, pl.skip))
+        rc, rs = unpack_wire(Tw, live.shape[1], group=g)
+        next_lo = plans[k + 1].lo if k + 1 < len(plans) else pl.lo
+        if fused:
+            live, send = fused_round_dq(live, rc, rs, nb=pl.nblocks,
+                                        next_lo=next_lo, op=op, group=g)
+        else:
+            live, send = _kref.fused_round_dq_ref(live, rc, rs,
+                                                  nb=pl.nblocks,
+                                                  next_lo=next_lo, op=op,
+                                                  group=g)
+        if send is not None:
+            wire = pack_wire(*send)
+    out = live[0]
+    if cols != R2.shape[1]:
+        out = out[:cols]
+    return out.reshape(blk_shape).astype(out_dtype)
+
+
+def _ag_plain(plan: CollectivePlan, x: Array) -> Array:
+    """Allgather rounds, uncompressed.
+
+    Allgather has no ⊕, so its fused form needs no Pallas: the growing
+    concat chain (which recopies the whole buffer every round — O(p log p)
+    block traffic) becomes static in-place updates of one preallocated
+    (p, blk) buffer (O(p) traffic; XLA turns the static-index
+    dynamic-update-slice into an in-place write under jit).  Send payloads
+    are buffer prefixes, already contiguous.
+    """
+    p = plan.p
+    r = lax.axis_index(plan.axis_name)
+    if plan.backend == "fused":
+        buf = jnp.zeros((p, *x.shape), x.dtype)
+        buf = lax.dynamic_update_slice_in_dim(buf, x[None], 0, axis=0)
+        for pl in plan.ag_rounds:
+            payload = lax.slice_in_dim(buf, 0, pl.nblocks, axis=0)
+            T = compat.ppermute(payload, plan.axis_name,
+                                _bwd_perm(p, pl.skip))
+            # Received blocks land at rows [lo, hi) = [skip, prev bound).
+            buf = lax.dynamic_update_slice_in_dim(buf, T, pl.lo, axis=0)
+        out = jnp.roll(buf, r, axis=0)
+        return out.reshape(p * x.shape[0], *x.shape[1:])
+    R = x[None]  # (1, blk, *rest) — rotated coords: R[i] = block of (r+i)
+    for pl in plan.ag_rounds:
+        payload = R[:pl.nblocks]
+        T = compat.ppermute(payload, plan.axis_name, _bwd_perm(p, pl.skip))
+        R = jnp.concatenate([R, T], axis=0)
+    out = jnp.roll(R, r, axis=0)  # un-rotate: out[j] = block of rank j
+    return out.reshape(p * x.shape[0], *x.shape[1:])
+
+
+def _ag_wire(plan: CollectivePlan, x: Array) -> Array:
+    """Allgather on the int8 wire format.
+
+    Allgather has no ⊕, so each rank quantizes its own block ONCE; the
+    rounds then move the packed int8 wire rows unmodified (every element
+    is quantized exactly once — the error is a single quantization step).
+    The fused backend selects the preallocated-buffer round structure
+    (static in-place updates) vs the concat chain — both move identical
+    bytes and one ppermute per round.  All ranks dequantize the same
+    codes, so the gathered result is bitwise-replicated (Theorem 2's
+    invariant survives compression).
+    """
+    p = plan.p
+    fused = plan.backend == "fused+int8"
+    r = lax.axis_index(plan.axis_name)
+    x2 = x.reshape(1, -1).astype(jnp.float32)
+    cols = x2.shape[1]
+    g = min(plan.spec.wire_group, cols)
+    x2 = pad2d(x2, 1, g)
+    if fused:
+        codes, scales = quantize_rows(x2, group=g)
+    else:
+        codes, scales = _kref.quantize_ref(x2, group=g)
+    row = pack_wire(codes, scales)                 # (1, wc) int8
+    wc = row.shape[1]
+    if fused:
+        buf = jnp.zeros((p, wc), jnp.int8)
+        buf = lax.dynamic_update_slice_in_dim(buf, row, 0, axis=0)
+        for pl in plan.ag_rounds:
+            payload = lax.slice_in_dim(buf, 0, pl.nblocks, axis=0)
+            T = compat.ppermute(payload, plan.axis_name,
+                                _bwd_perm(p, pl.skip))
+            buf = lax.dynamic_update_slice_in_dim(buf, T, pl.lo, axis=0)
+    else:
+        buf = row
+        for pl in plan.ag_rounds:
+            payload = buf[:pl.nblocks]
+            T = compat.ppermute(payload, plan.axis_name,
+                                _bwd_perm(p, pl.skip))
+            buf = jnp.concatenate([buf, T], axis=0)
+    codes, scales = unpack_wire(buf, x2.shape[1], group=g)
+    vals = _kref.dequant_ref(codes, scales, group=g)   # (p, cols_pad) f32
+    if cols != x2.shape[1]:
+        vals = vals[:, :cols]
+    out = jnp.roll(vals, r, axis=0)  # un-rotate: out[j] = block of rank j
+    return out.reshape(p * x.shape[0], *x.shape[1:]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# All-to-all by concatenation (paper §4)
+# ---------------------------------------------------------------------------
+
+def _a2a_jnp(plan: CollectivePlan, x: Array) -> Array:
+    """Bruck-style rounds: trace-time bookkeeping keeps, per live slot,
+    the list of (source-offset, array) pairs — the concatenation operator
+    materialized as Python lists of same-shaped arrays, so every round is
+    still a single fused ppermute over a stacked payload.  Volume is
+    (p/2)*ceil(log2 p) blocks per rank (the classic Bruck trade-off:
+    round-optimal, not volume-optimal)."""
+    p = plan.p
+    r = lax.axis_index(plan.axis_name)
+    rot = jnp.roll(x, -r, axis=0)  # rot[i] = payload for dest (r+i)
+    # slots[i]: list of (offset o, payload) — payload originated at (r+o).
+    slots: list[list[tuple[int, Array]]] = [[(0, rot[i])] for i in range(p)]
+    for pl in plan.rs_rounds:
+        s = pl.skip
+        # Stack every array sent this round into ONE ppermute payload.
+        send_entries = [e for i in range(pl.lo, pl.hi) for e in slots[i]]
+        stacked = jnp.stack([a for (_, a) in send_entries], axis=0)
+        T = compat.ppermute(stacked, plan.axis_name, _fwd_perm(p, s))
+        # Unstack with shifted source offsets; ⊕ = list concatenation.
+        idx = 0
+        for j in range(pl.nblocks):
+            src_slot = pl.lo + j
+            for (o, _) in slots[src_slot]:
+                slots[j].append((((o - s) % p), T[idx]))
+                idx += 1
+        assert idx == len(send_entries)
+        del slots[pl.lo:]  # slots [lo, hi) were sent; live = [0, s)
+    entries = slots[0]
+    assert len(entries) == p, f"expected {p} payloads, got {len(entries)}"
+    ordered = [a for (_, a) in sorted(entries, key=lambda e: e[0])]
+    stacked = jnp.stack(ordered, axis=0)  # stacked[o] = payload from (r+o)
+    return jnp.roll(stacked, r, axis=0)   # row j = payload from rank j
+
+
+def _a2a_fused(plan: CollectivePlan, x: Array) -> Array:
+    """Bruck-style rounds over stacked slot buffers (fused alltoall).
+
+    slots[i] is one (count_i, blk) array; offs[i] is the parallel Python
+    list of source offsets.  Entry order inside each slot matches the
+    unfused list-of-arrays path exactly, so results are bitwise-equal.
+    """
+    p = plan.p
+    r = lax.axis_index(plan.axis_name)
+    blk_shape = x.shape[1:]
+    rot = jnp.roll(x, -r, axis=0)
+    rot2 = rot.reshape(p, -1)
+    slots = [lax.slice_in_dim(rot2, i, i + 1, axis=0) for i in range(p)]
+    offs: list[list[int]] = [[0] for _ in range(p)]
+    for pl in plan.rs_rounds:
+        s = pl.skip
+        send = (slots[pl.lo] if pl.nblocks == 1 else
+                jnp.concatenate(slots[pl.lo:pl.hi], axis=0))
+        T = compat.ppermute(send, plan.axis_name, _fwd_perm(p, s))
+        idx = 0
+        for j in range(pl.nblocks):
+            src_slot = pl.lo + j
+            cnt = len(offs[src_slot])
+            piece = lax.slice_in_dim(T, idx, idx + cnt, axis=0)
+            slots[j] = jnp.concatenate([slots[j], piece], axis=0)
+            offs[j] = offs[j] + [(o - s) % p for o in offs[src_slot]]
+            idx += cnt
+        assert idx == T.shape[0]
+        del slots[pl.lo:], offs[pl.lo:]
+    assert slots[0].shape[0] == p, \
+        f"expected {p} payloads, got {slots[0].shape[0]}"
+    order = sorted(range(p), key=lambda i: offs[0][i])
+    ordered = permute_rows(slots[0], order)  # ordered[o] = from (r+o)
+    out = jnp.roll(ordered, r, axis=0)       # row j = payload from rank j
+    return out.reshape(p, *blk_shape)
+
+
+# ---------------------------------------------------------------------------
+# Non-uniform counts (paper Corollary 3) — gather/scatter over row tables
+# ---------------------------------------------------------------------------
+
+def _take_row(table: np.ndarray, idx) -> Array:
+    """Row ``idx`` (traced rank expression) of a trace-time-constant
+    table — one dynamic-slice, no gather fan-out."""
+    return lax.dynamic_index_in_dim(jnp.asarray(table), idx, axis=0,
+                                    keepdims=False)
+
+
+def _scatter_fold(buf: Array, rows: Array, T: Array, op: str) -> Array:
+    """Fold received wire rows into the buffer at ``rows``.  Real indices
+    are unique within a round (each wire row is a distinct (column,
+    offset) pair); padding rows all target the dummy sentinel row, which
+    is never read back as data."""
+    if op == "add":
+        return buf.at[rows].add(T)
+    if op == "max":
+        return buf.at[rows].max(T)
+    if op == "min":
+        return buf.at[rows].min(T)
+    raise ValueError(f"non-uniform counts need a named op, got {op!r}")
+
+
+def _rs_nonuniform(plan: CollectivePlan, x: Array) -> Array:
+    """Corollary 3: reduce-scatter with per-rank block sizes.
+
+    The buffer stays in ABSOLUTE column order (no physical rotation —
+    blocks have different sizes, so rotation is encoded in the row
+    tables instead).  Round k gathers this rank's rows for the rotated
+    send window into a fixed-width wire buffer (width = the worst
+    windowed count sum over ranks — SPMD needs one static shape, and
+    that max is exactly the per-round quantity Corollary 3 bounds),
+    ppermutes it once, and scatter-⊕s the received rows through the
+    receiving rank's view of the same table.  Exactly one
+    collective-permute per round — Theorem 1's ceil(log2 p) rounds
+    survive ragged counts unchanged.
+
+    Input: ``(sum(counts), *rest)`` per rank.  Output:
+    ``(max(counts), *rest)`` — this rank's reduced block in rows
+    ``[0, counts[r])``, zero rows above (SPMD output shapes must be
+    rank-invariant; callers slice with their static count when they
+    know it).
+    """
+    layout, p, op = plan.layout, plan.p, plan.spec.op
+    N, bmax = layout.total, layout.bmax
+    if x.shape[0] != N:
+        raise ValueError(
+            f"input has {x.shape[0]} rows, counts {layout.counts} "
+            f"need {N}")
+    if p == 1:
+        return x
+    r = lax.axis_index(plan.axis_name)
+    blk_shape = x.shape[1:]
+    x2 = x.reshape(N, -1)
+    cols = x2.shape[1]
+    # Row N is the dummy sentinel: padding gathers read it, padding
+    # scatters accumulate into it; it is never read back as data.
+    buf = jnp.concatenate([x2, jnp.zeros((1, cols), x2.dtype)], axis=0)
+    for k, pl in enumerate(plan.rs_rounds):
+        table = plan.rs_row_tables[k]
+        send_rows = _take_row(table, r)
+        payload = jnp.take(buf, send_rows, axis=0)
+        T = compat.ppermute(payload, plan.axis_name, _fwd_perm(p, pl.skip))
+        # Sender (r - skip) packed exactly the columns this rank must
+        # fold — and both store column c at the same absolute rows, so
+        # the receive table IS the sender's row of the send table.
+        recv_rows = _take_row(table, (r - pl.skip) % p)
+        buf = _scatter_fold(buf, recv_rows, T, op)
+    # Extract rows [off_r, off_r + counts[r]), padded to bmax and masked.
+    ext = jnp.concatenate(
+        [buf[:N], jnp.zeros((bmax, cols), x2.dtype)], axis=0)
+    start = _take_row(np.asarray(layout.offsets[:p], np.int32), r)
+    out = lax.dynamic_slice_in_dim(ext, start, bmax, axis=0)
+    cnt = _take_row(np.asarray(layout.counts, np.int32), r)
+    mask = jnp.arange(bmax) < cnt
+    out = jnp.where(mask.reshape(bmax, *([1] * (out.ndim - 1))), out, 0)
+    return out.reshape(bmax, *blk_shape)
+
+
+def _ag_nonuniform(plan: CollectivePlan, x: Array) -> Array:
+    """Allgather(v): inverse layout of :func:`_rs_nonuniform`.
+
+    Input: ``(max(counts), *rest)`` — this rank's block in rows
+    ``[0, counts[r])``.  Output: ``(sum(counts), *rest)``, all blocks in
+    rank order, identical on every rank (no ⊕ — blocks move verbatim, so
+    replication is bitwise).
+    """
+    layout, p = plan.layout, plan.p
+    N, bmax = layout.total, layout.bmax
+    if x.shape[0] != bmax:
+        raise ValueError(
+            f"input has {x.shape[0]} rows, counts {layout.counts} "
+            f"need max(counts) = {bmax}")
+    if p == 1:
+        return x
+    r = lax.axis_index(plan.axis_name)
+    blk_shape = x.shape[1:]
+    x2 = x.reshape(bmax, -1)
+    cols = x2.shape[1]
+    counts, offs = layout.counts, layout.offsets
+    # Seed the (N + sentinel) buffer with this rank's own rows.
+    src = np.full((p, bmax), bmax, dtype=np.int32)      # x2 row (or dummy)
+    dst = np.full((p, bmax), N, dtype=np.int32)         # buf row (or dummy)
+    for rr in range(p):
+        src[rr, : counts[rr]] = np.arange(counts[rr], dtype=np.int32)
+        dst[rr, : counts[rr]] = np.arange(
+            offs[rr], offs[rr] + counts[rr], dtype=np.int32)
+    xpad = jnp.concatenate([x2, jnp.zeros((1, cols), x2.dtype)], axis=0)
+    buf = jnp.zeros((N + 1, cols), x2.dtype)
+    buf = buf.at[_take_row(dst, r)].set(jnp.take(xpad, _take_row(src, r),
+                                                 axis=0))
+    for k, pl in enumerate(plan.ag_rounds):
+        table = plan.ag_row_tables[k]
+        send_rows = _take_row(table, r)
+        payload = jnp.take(buf, send_rows, axis=0)
+        T = compat.ppermute(payload, plan.axis_name, _bwd_perm(p, pl.skip))
+        # Received from (r + skip): its send window covers exactly the
+        # columns this rank is missing at rotated [skip, prev) — same
+        # absolute rows, so the receive table is the sender's row.
+        recv_rows = _take_row(table, (r + pl.skip) % p)
+        buf = buf.at[recv_rows].set(T)
+    return buf[:N].reshape(N, *blk_shape)
+
+
+# ---------------------------------------------------------------------------
+# Baseline backends (ring / recursive_halving / xla) — lazy import of the
+# implementations in core.collectives (which imports this module)
+# ---------------------------------------------------------------------------
+
+def _baseline(fn_name: str):
+    def run(plan: CollectivePlan, x: Array) -> Array:
+        from repro.core import collectives as C
+        fn = getattr(C, fn_name)
+        return fn(x, plan.axis_name, op=plan.spec.op)
+    return run
+
+
+_BASELINE_RS = {
+    "ring": _baseline("ring_reduce_scatter"),
+    "recursive_halving": _baseline("recursive_halving_reduce_scatter"),
+    "xla": _baseline("xla_reduce_scatter"),
+}
+_BASELINE_AR = {
+    "ring": _baseline("ring_allreduce"),
+    "xla": _baseline("xla_allreduce"),
+}
+_BASELINE_AG = {
+    "xla": _baseline("xla_allgather"),
+}
+
+#: backend registry — what plan() can resolve a spec onto, and which
+#: collectives each backend implements (introspection for the CI gate
+#: and the docs; execution dispatches on the plan's ``backend`` field).
+BACKENDS: dict[str, tuple[str, ...]] = {
+    "jnp": ("reduce_scatter", "allgather", "allreduce", "alltoall"),
+    "fused": ("reduce_scatter", "allgather", "allreduce", "alltoall"),
+    "jnp+int8": ("reduce_scatter", "allgather", "allreduce"),
+    "fused+int8": ("reduce_scatter", "allgather", "allreduce"),
+    "nonuniform": ("reduce_scatter", "allgather", "allreduce"),
+    "ring": ("reduce_scatter", "allreduce"),
+    "recursive_halving": ("reduce_scatter",),
+    "xla": ("reduce_scatter", "allgather", "allreduce"),
+}

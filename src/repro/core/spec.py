@@ -1,0 +1,145 @@
+"""`CollectiveSpec` — the declarative half of the plan/execute collective API.
+
+The paper's algorithms are fundamentally *plan-then-execute*: the circulant
+skip schedule, the per-round send/recv block index sets, and the
+Corollary 3 non-uniform-count variant are all computable once from
+``(p, schedule, counts)`` before any data moves.  A ``CollectiveSpec``
+captures everything that planning needs — and nothing that execution
+provides (the payload, the axis size, trace-time hooks):
+
+    spec = CollectiveSpec(kind="circulant", schedule="halving",
+                          wire_dtype="int8")
+    pl = plan(spec, p, axis_name)        # cached; pure trace-time work
+    out = pl.reduce_scatter(x)           # one ppermute per round
+
+Specs are FROZEN and HASHABLE so ``plan()`` can memoize on them: calling a
+collective twice with the same spec never replans and never retraces (the
+CI ``plans`` gate asserts this).  ``counts`` is the new first-class
+citizen: per-rank block row counts for the paper's Corollary 3
+non-uniform reduce-scatter (``MPI_Reduce_scatter`` flavor), including the
+worst case with every element concentrated in one column and zero-count
+ranks.
+
+This module is dependency-light on purpose (no kernel imports): it is the
+vocabulary shared by collectives, the ZeRO-1 optimizer, the conformance
+harness, and the benchmark workers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Callable
+
+#: implementation families plan() knows how to compile.
+KINDS = ("circulant", "ring", "recursive_halving", "xla")
+
+#: wire formats understood by the circulant backends (None = uncompressed).
+WIRE_DTYPES = (None, "int8")
+
+#: default elements per quantization group (mirrors kernels.quantize
+#: without importing it — spec stays dependency-light).
+DEFAULT_WIRE_GROUP = 512
+
+
+@dataclass(frozen=True)
+class CollectiveSpec:
+    """Everything needed to *plan* a collective, nothing needed to run it.
+
+    kind:             implementation family (``circulant`` is the paper's;
+                      ``ring`` / ``recursive_halving`` / ``xla`` are the
+                      A/B baselines).
+    schedule:         Corollary-2 skip schedule name (circulant only).
+    group:            intra-group size for the ``two_level`` schedule.
+    op:               reduction ⊕ — a name (``add``/``max``/``min``) or a
+                      callable (jnp backend only; named ops unlock the
+                      fused and wire backends).
+    wire_dtype:       ``None`` (uncompressed) or ``"int8"`` (packed
+                      [codes | scale bytes] wire buffer, ~4x fewer β
+                      bytes; see README).
+    wire_group:       elements per quantization group on the wire.
+    use_fused_kernel: ``None`` = auto (Pallas on TPU), ``True``/``False``
+                      explicit — same tri-state the kwarg API had.
+    counts:           per-rank block row counts for the non-uniform
+                      (Corollary 3) variant; ``None`` = uniform blocks.
+                      ``reduce_scatter`` consumes a ``sum(counts)``-row
+                      input and returns a ``max(counts)``-row block
+                      (rows past this rank's count zeroed); ``allgather``
+                      / ``allreduce`` invert that layout.
+    """
+
+    kind: str = "circulant"
+    schedule: str = "halving"
+    group: int | None = None
+    op: str | Callable = "add"
+    wire_dtype: str | None = None
+    wire_group: int = DEFAULT_WIRE_GROUP
+    use_fused_kernel: bool | None = None
+    counts: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown kind {self.kind!r}; have {KINDS}")
+        if self.wire_dtype not in WIRE_DTYPES:
+            raise ValueError(
+                f"unknown wire_dtype {self.wire_dtype!r}; have {WIRE_DTYPES}")
+        if self.wire_group < 1:
+            raise ValueError(f"wire_group must be >= 1, got {self.wire_group}")
+        if self.counts is not None:
+            if self.kind != "circulant":
+                raise ValueError(
+                    f"counts= (Corollary 3) needs kind='circulant', "
+                    f"got {self.kind!r}")
+            counts = tuple(int(c) for c in self.counts)
+            if any(c < 0 for c in counts):
+                raise ValueError(f"counts must be non-negative, got {counts}")
+            if sum(counts) == 0:
+                raise ValueError(
+                    f"counts must have at least one nonzero entry, "
+                    f"got {counts}")
+            # Normalize so specs hash/compare by value regardless of the
+            # caller's integer types (np.int64 vs int).
+            object.__setattr__(self, "counts", counts)
+
+    # -- convenience -------------------------------------------------------
+
+    def with_(self, **changes) -> "CollectiveSpec":
+        """``dataclasses.replace`` spelled as a method (fluent tweaks)."""
+        return replace(self, **changes)
+
+    @property
+    def wired(self) -> bool:
+        return self.wire_dtype is not None
+
+    @property
+    def label(self) -> str:
+        """Compact human tag (benchmark rows, conformance case names)."""
+        bits = [self.kind]
+        if self.kind == "circulant":
+            bits.append(self.schedule)
+            if isinstance(self.op, str):
+                bits.append(self.op)
+            if self.use_fused_kernel:
+                bits.append("fused")
+            if self.wire_dtype:
+                bits.append(f"wire={self.wire_dtype}")
+            if self.counts is not None:
+                bits.append(f"counts={len(self.counts)}")
+        return ":".join(bits)
+
+
+def as_spec(spec_or_kind: "CollectiveSpec | str | None" = None,
+            **kw) -> CollectiveSpec:
+    """Coerce loose inputs into a ``CollectiveSpec``.
+
+    Accepts an existing spec (returned as-is; kw must be empty), a kind
+    string, or bare kwargs.  The single funnel the legacy kwarg wrappers
+    use to enter the plan/execute world.
+    """
+    if isinstance(spec_or_kind, CollectiveSpec):
+        if kw:
+            raise TypeError(
+                f"cannot combine an existing CollectiveSpec with extra "
+                f"kwargs {sorted(kw)}")
+        return spec_or_kind
+    if isinstance(spec_or_kind, str):
+        kw = dict(kw, kind=spec_or_kind)
+    return CollectiveSpec(**kw)

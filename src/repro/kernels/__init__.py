@@ -33,6 +33,7 @@ from .ops import (  # noqa: F401
 from .quantize import (  # noqa: F401
     DEFAULT_GROUP,
     pack_wire,
+    pad2d,
     unpack_wire,
     wire_ngroups,
     wire_width,

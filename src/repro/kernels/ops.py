@@ -10,7 +10,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from . import block_reduce as _br
 from . import quantize as _qz
@@ -23,10 +22,7 @@ def _interpret_default() -> bool:
 
 def _pad2d(x, rt, ct):
     r, c = x.shape
-    pr, pc = (-r) % rt, (-c) % ct
-    if pr or pc:
-        x = jnp.pad(x, ((0, pr), (0, pc)))
-    return x, (r, c)
+    return _qz.pad2d(x, rt, ct), (r, c)
 
 
 def _to2d(x):

@@ -53,12 +53,22 @@ def wire_width(cols: int, group: int = DEFAULT_GROUP) -> int:
     return cols + 4 * wire_ngroups(cols, group)
 
 
-def _pad2(x, rt: int, g: int):
+def pad2d(x: jax.Array, row_mult: int, col_mult: int) -> jax.Array:
+    """Zero-pad a 2-D array so rows/cols are multiples of the tile grid.
+
+    THE shared ragged-shape padding helper: the quantize/dequant kernels,
+    the jitted kernel wrappers (``kernels.ops``) and the collective
+    plan's wire backends all pad through here instead of re-deriving the
+    ``(-n) % m`` arithmetic locally (leading-axis *block* padding is the
+    plan's ``BlockLayout.pad`` — driven by the counts table)."""
     rows, cols = x.shape
-    pr, pc = (-rows) % rt, (-cols) % g
+    pr, pc = (-rows) % row_mult, (-cols) % col_mult
     if pr or pc:
         x = jnp.pad(x, ((0, pr), (0, pc)))
     return x
+
+
+_pad2 = pad2d  # internal alias used by the kernels below
 
 
 def _quantize_kernel(x_ref, codes_ref, scale_ref):

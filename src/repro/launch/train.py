@@ -55,7 +55,9 @@ def main(argv=None):
     ap.add_argument("--no-error-feedback", action="store_true",
                     help="disable the EF-SGD residual for compressed sync")
     ap.add_argument("--compress", default=None, choices=[None, "int8"],
-                    help="legacy alias for --wire-dtype")
+                    help="DEPRECATED alias for --wire-dtype (emits a "
+                         "DeprecationWarning; the wire format is part of "
+                         "the grad-sync CollectiveSpec now)")
     ap.add_argument("--fused-kernel", default="auto",
                     choices=["auto", "on", "off"],
                     help="fused Pallas round kernel for the circulant "
@@ -91,7 +93,8 @@ def main(argv=None):
         recipe = ShardingRecipe(data_axes=("data",), model_axis="model")
     model = build(cfg, recipe=recipe)
     sync = GradSyncConfig(impl=args.grad_sync, schedule=args.schedule,
-                          wire_dtype=args.wire_dtype or args.compress,
+                          wire_dtype=args.wire_dtype,
+                          compress=args.compress,  # deprecated alias; warns
                           error_feedback=not args.no_error_feedback,
                           use_fused_kernel={"auto": None, "on": True,
                                             "off": False}[args.fused_kernel])

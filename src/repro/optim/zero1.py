@@ -25,6 +25,9 @@ Grad-sync implementations are pluggable (--grad-sync):
   xla                   lax.psum_scatter + lax.all_gather
   allreduce             plain replicated allreduce + full optimizer
                         (no ZeRO; memory baseline)
+The config compiles to CollectiveSpecs (``GradSyncConfig.rs_spec()`` /
+``.ag_spec()``); each data axis executes one cached CollectivePlan, so
+the grad sync rides the same plan/execute seam as every other consumer.
 Optional compressed gradient sync via wire_dtype='int8' (the circulant
 collectives' packed int8 wire format: per-round quantize-on-send + fused
 dequant-⊕ rounds) with an EF-SGD error-feedback residual carried in the
@@ -39,6 +42,7 @@ lin = r0 * p1 + r1; the matching hierarchical AG reassembles exactly.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import Callable, NamedTuple, Sequence
 
@@ -49,6 +53,7 @@ from jax import lax
 
 from repro import compat
 from repro.core import collectives as C
+from repro.core.spec import CollectiveSpec
 from repro.kernels import dequantize_blocks, quantize_blocks
 from . import adamw
 
@@ -60,7 +65,7 @@ class GradSyncConfig:
     wire_dtype: str | None = None  # None | 'int8': compressed circulant
     #                               rounds (int8 codes + f32 group scales
     #                               packed on the wire; ~4x fewer β bytes)
-    compress: str | None = None   # legacy alias for wire_dtype
+    compress: str | None = None   # DEPRECATED alias for wire_dtype
     error_feedback: bool = True   # EF-SGD residual for compressed sync:
     #                               each rank keeps its local quantization
     #                               error and adds it back into the next
@@ -72,11 +77,45 @@ class GradSyncConfig:
     use_fused_kernel: bool | None = None  # fused Pallas round kernel for the
     #                               circulant RS/AG; None = auto (TPU only)
 
+    def __post_init__(self):
+        if self.compress is not None:
+            warnings.warn(
+                "GradSyncConfig(compress=...) is deprecated; pass "
+                "wire_dtype=... — it feeds the CollectiveSpec the grad "
+                "sync plans are built from (see GradSyncConfig.rs_spec)",
+                DeprecationWarning, stacklevel=3)
+
     @property
     def wire(self) -> str | None:
         """Effective wire dtype (``wire_dtype`` wins over the legacy
         ``compress`` spelling)."""
         return self.wire_dtype or self.compress
+
+    def rs_spec(self) -> CollectiveSpec:
+        """The reduce-scatter :class:`CollectiveSpec` this config means.
+
+        ``impl='allreduce'`` (the no-ZeRO baseline) shards nothing, but
+        its tiny-leaf fallback still wants an xla spec.
+        """
+        kind = self.impl if self.impl != "allreduce" else "xla"
+        if kind != "circulant":
+            return CollectiveSpec(kind=kind)
+        return CollectiveSpec(
+            kind="circulant", schedule=self.schedule,
+            use_fused_kernel=self.use_fused_kernel,
+            wire_dtype=self.wire if self.wire == "int8" else None,
+            wire_group=self.quant_group)
+
+    def ag_spec(self) -> CollectiveSpec:
+        """Allgather spec: parameter shards must reassemble EXACTLY, so
+        the wire format never applies; ring has no allgather and falls
+        back to the circulant schedule (same reversed-skip structure)."""
+        kind = "circulant" if self.impl in ("circulant", "ring") else "xla"
+        if kind != "circulant":
+            return CollectiveSpec(kind=kind)
+        return CollectiveSpec(
+            kind="circulant", schedule=self.schedule,
+            use_fused_kernel=self.use_fused_kernel)
 
     @property
     def uses_error_feedback(self) -> bool:
@@ -140,36 +179,22 @@ def shard_offset(ld_pad: int, axis_names: Sequence[str]):
     return lin * rows, rows
 
 
-def _rs_kwargs(sync: GradSyncConfig):
-    kw = {}
-    if sync.impl == "circulant":
-        kw["schedule"] = sync.schedule
-        kw["use_fused_kernel"] = sync.use_fused_kernel
-        if sync.wire == "int8":
-            kw["wire_dtype"] = "int8"
-            kw["wire_group"] = sync.quant_group
-    return kw
-
-
 def reduce_scatter_leaf(g, axis_names, sync: GradSyncConfig, world: int):
-    """Hierarchical RS along dim 0; returns the averaged local shard."""
-    impl = sync.impl if sync.impl != "allreduce" else "xla"
-    kw = _rs_kwargs(sync)
+    """Hierarchical RS along dim 0; returns the averaged local shard.
+    One cached :class:`CollectivePlan` per axis (sync.rs_spec())."""
+    spec = sync.rs_spec()
     out = _pad_lead(g, world)
     for ax in axis_names:
-        out = C.reduce_scatter(out, ax, impl=impl, **kw)
+        out = C.reduce_scatter(out, ax, spec=spec)
     return out / world
 
 
 def allgather_leaf(shard, ld: int, axis_names, sync: GradSyncConfig):
     """Inverse: hierarchical AG along dim 0, then drop padding rows."""
-    impl = "circulant" if sync.impl in ("circulant", "ring") else "xla"
-    kw = ({"schedule": sync.schedule,
-           "use_fused_kernel": sync.use_fused_kernel}
-          if impl == "circulant" else {})
+    spec = sync.ag_spec()
     out = shard
     for ax in reversed(list(axis_names)):
-        out = C.allgather(out, ax, impl=impl, **kw)
+        out = C.allgather(out, ax, spec=spec)
     return out[:ld]
 
 

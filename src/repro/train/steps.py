@@ -78,6 +78,15 @@ def build_zero1(model: ModelApi, mesh: Mesh, recipe: ShardingRecipe,
     collective_axes = tuple(reversed(recipe.data_axes))
     world = int(np.prod([mesh.shape[a] for a in recipe.data_axes]))
 
+    # Compile the grad-sync CollectivePlans up front: a bad sync config
+    # (unknown schedule, wire×op conflict, ...) fails HERE with a config
+    # error instead of mid-trace, and the per-axis plans are warm in the
+    # cache before the first step traces.
+    from repro.core.plan import plan as _plan
+    for ax in collective_axes:
+        _plan(sync.rs_spec(), p=mesh.shape[ax], axis_name=ax)
+        _plan(sync.ag_spec(), p=mesh.shape[ax], axis_name=ax)
+
     # Inside the manual region the data axes are already per-shard: the
     # inner model must only constrain over the AUTO (model) axis.  On JAX
     # builds whose XLA cannot partition ppermutes inside a manual subgroup

@@ -74,12 +74,51 @@ for sched in scheds:
         np.testing.assert_allclose(out[r], W_oracle[r], rtol=2e-5, atol=2e-5)
     check(f"circulant_reduce_scatter[{sched}] == oracle (p={p})")
 
+from repro.core import CollectiveSpec  # noqa: E402
+
 impls = ["ring", "xla"] + (["recursive_halving"] if p & (p - 1) == 0 else [])
 for impl in impls:
-    out = run1(lambda v, i=impl: C.reduce_scatter(v, "x", impl=i), xg)
+    out = run1(lambda v, i=impl: C.reduce_scatter(
+        v, "x", spec=CollectiveSpec(kind=i)), xg)
     for r in range(p):
         np.testing.assert_allclose(out[r], W_oracle[r], rtol=2e-5, atol=2e-5)
-    check(f"reduce_scatter[{impl}] == oracle (p={p})")
+    check(f"reduce_scatter[spec kind={impl}] == oracle (p={p})")
+
+# legacy impl= string dispatch: still works, but warns DeprecationWarning
+import warnings  # noqa: E402
+
+with warnings.catch_warnings(record=True) as _rec:
+    warnings.simplefilter("always")
+    out = run1(lambda v: C.reduce_scatter(v, "x", impl="ring"), xg)
+for r in range(p):
+    np.testing.assert_allclose(out[r], W_oracle[r], rtol=2e-5, atol=2e-5)
+check("legacy impl= dispatch works and deprecates",
+      any(issubclass(w.category, DeprecationWarning) for w in _rec))
+
+# ---------------------------------------------------------------------------
+# Non-uniform counts (paper Corollary 3) via CollectiveSpec(counts=...)
+# ---------------------------------------------------------------------------
+counts = tuple((i * 5 + 3) % 7 for i in range(p))
+offs = np.concatenate([[0], np.cumsum(counts)])
+N, bmax = int(sum(counts)), int(max(counts))
+xnu = rng.standard_normal((p, N)).astype(np.float32)
+inputs_nu = [[xnu[r, offs[i]:offs[i + 1]] for i in range(p)]
+             for r in range(p)]
+W_nu, st_nu = sim.simulate_reduce_scatter(inputs_nu)
+st_nu.assert_theorem1(p)
+spec_nu = CollectiveSpec(counts=counts)
+out = run1(lambda v: C.reduce_scatter(v, "x", spec=spec_nu), xnu)
+for r in range(p):
+    np.testing.assert_allclose(out[r, :counts[r]], W_nu[r],
+                               rtol=2e-5, atol=2e-5)
+    assert (out[r, counts[r]:] == 0).all()
+check(f"non-uniform reduce_scatter counts={counts} == simulator (p={p})")
+out = run1(lambda v: C.allreduce(v, "x", spec=spec_nu), xnu)
+ref_nu = xnu.astype(np.float64).sum(axis=0)
+for r in range(p):
+    np.testing.assert_allclose(out[r], ref_nu, rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(out[r], out[0])
+check(f"non-uniform allreduce replicated (p={p})")
 
 # Higher-rank payloads (matrix blocks).
 xg2 = make_global(extra=(3,))

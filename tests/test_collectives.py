@@ -9,6 +9,9 @@ validates, per device count:
   * circulant RS/AG/AR for all four Corollary-2 schedules vs the numpy
     simulator oracle (which itself asserts Theorem 1/2 counts),
   * ring / recursive-halving / XLA-native baselines vs the same oracle,
+    dispatched through CollectiveSpec (plus the deprecated impl= string),
+  * non-uniform counts (paper Corollary 3) reduce-scatter/allreduce via
+    CollectiveSpec(counts=...) vs the simulator,
   * alltoall-by-concatenation (paper §4),
   * bit-determinism of the float reduction,
   * HLO structure: exactly ceil(log2 p) collective-permutes for RS and

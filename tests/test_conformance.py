@@ -25,7 +25,8 @@ import sys
 import pytest
 
 from repro.core.conformance import (
-    DEFAULT_PS, OPS, SCHEDULES, hierarchical_factors, sweep_cases,
+    DEFAULT_PS, NONUNIFORM_SCHEDULES, OPS, SCHEDULES, case_spec,
+    hierarchical_factors, nonuniform_counts_cases, sweep_cases,
     two_level_group)
 
 HERE = os.path.dirname(os.path.abspath(__file__))
@@ -78,6 +79,39 @@ def test_sweep_covers_required_space():
         assert wired == base and wired
     assert not any(c.wire for c in cases
                    if c.impl != "circulant" or c.dtype == "int32")
+
+
+def test_cases_route_through_collective_spec():
+    """Every sweep case compiles to a CollectiveSpec — the harness
+    exercises the plan/execute API, not the deprecated impl strings."""
+    from repro.core.spec import CollectiveSpec
+    for p in (6, 8):
+        for c in sweep_cases(p):
+            spec = case_spec(c, p)
+            assert isinstance(spec, CollectiveSpec)
+            assert spec.kind == c.impl
+            if c.impl == "circulant":
+                assert spec.schedule == c.schedule
+                assert spec.wire_dtype == c.wire
+                assert spec.use_fused_kernel is c.fused
+
+
+def test_nonuniform_cases_cover_required_space():
+    """The Corollary 3 sweep includes the paper's worst case (all blocks
+    in one column) and zero-count ranks, at every tested p, and always
+    sweeps the two optimal (ceil(log2 p)-round) schedules."""
+    assert set(NONUNIFORM_SCHEDULES) >= {"halving", "power2"}
+    for p in DEFAULT_PS:
+        cases = nonuniform_counts_cases(p)
+        assert {"ragged", "one_column", "zero_ranks", "uniform"} <= set(cases)
+        for counts in cases.values():
+            assert len(counts) == p and sum(counts) > 0
+        one_col = cases["one_column"]
+        assert sorted(one_col, reverse=True)[1:] == [0] * (p - 1), \
+            "one_column must concentrate every element in a single column"
+        if p >= 2:
+            assert 0 in cases["zero_ranks"], \
+                "zero_ranks must include an empty block"
 
 
 def test_hierarchical_factors():

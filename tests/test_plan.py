@@ -1,0 +1,304 @@
+"""Unit + property tests for the plan/execute collective API
+(``core/spec.py`` + ``core/plan.py``) — everything that needs NO devices:
+
+* Theorem 1 as a property of the plan's index tables: across ALL
+  schedules and axis sizes, the per-round send block sets partition
+  {1, .., p-1} exactly (every non-resident block leaves exactly once),
+  and the recv sets mirror them;
+* non-uniform (Corollary 3) row tables: per-rank row sets partition the
+  non-resident rows exactly, wire widths equal the worst windowed count
+  sum, padding entries use the sentinel row;
+* plan() caching: same spec -> same object, no rebuild (the trace-free
+  guarantee the CI ``plans`` gate measures end-to-end);
+* spec validation and the deprecation of the kwarg-era surfaces
+  (``impl=`` string dispatch, ``GradSyncConfig(compress=...)``);
+* the consolidated padding path (``pad_to_multiple`` / ``_as_blocks``
+  through ``BlockLayout``).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (BACKENDS, BlockLayout, CollectiveSpec, plan,
+                        plan_cache_info)
+from repro.core.schedule import ceil_log2, get_skips
+from repro.core.spec import as_spec
+from tests._hypothesis_compat import given, settings, st
+
+SCHEDULES = ("halving", "power2", "fully_connected", "sqrt")
+AX = "x"
+
+
+def _plan(p, **kw):
+    return plan(CollectiveSpec(**kw), p=p, axis_name=AX)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 as a property of the block index tables
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=2, max_value=64),
+       st.sampled_from(SCHEDULES))
+def test_send_blocks_partition_nonresident(p, schedule):
+    """Every plan's per-round send tables partition exactly the p-1
+    non-resident rotated blocks {1, .., p-1} — Theorem 1's 'each block
+    sent exactly once', for every schedule and p."""
+    pl = _plan(p, schedule=schedule)
+    sent = [i for window in pl.rs_send_blocks for i in window]
+    assert sorted(sent) == list(range(1, p))
+    # recv sets mirror the send sets shifted to the buffer head, same
+    # total count (p-1 receives + p-1 reductions per rank).
+    assert sum(len(w) for w in pl.rs_recv_blocks) == p - 1
+    for w_send, w_recv in zip(pl.rs_send_blocks, pl.rs_recv_blocks):
+        assert len(w_send) == len(w_recv)
+        assert w_recv == tuple(range(len(w_send)))
+    # allgather replays the same windows in reverse order.
+    assert sorted(i for w in pl.ag_recv_blocks for i in w) == \
+        list(range(1, p))
+    assert pl.ag_recv_blocks == tuple(reversed(pl.rs_send_blocks))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=2, max_value=48))
+def test_optimal_schedules_round_count(p):
+    for schedule in ("halving", "power2"):
+        pl = _plan(p, schedule=schedule)
+        assert len(pl.rs_rounds) == ceil_log2(p)
+        assert pl.skips == get_skips(p, schedule)
+
+
+# ---------------------------------------------------------------------------
+# Non-uniform (Corollary 3) row tables
+# ---------------------------------------------------------------------------
+
+def _counts_cases():
+    return [
+        (3, 1, 4, 1, 5),          # ragged
+        (0, 0, 17, 0),            # all in one column (paper's worst case)
+        (2, 0, 3, 0, 1, 0),       # zero-count ranks
+        (4, 4, 4, 4),             # uniform expressed as counts
+        (1, 7),                   # p=2
+    ]
+
+
+@pytest.mark.parametrize("counts", _counts_cases())
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_nonuniform_row_tables_partition(counts, schedule):
+    """Row-table Theorem 1: per rank, the union of the real (non-
+    sentinel) send rows over all rounds is exactly the rows of every
+    OTHER rank's block — each row leaves exactly once."""
+    p = len(counts)
+    pl = _plan(p, schedule=schedule, counts=counts)
+    layout = pl.layout
+    N = layout.total
+    offs = layout.offsets
+    for r in range(p):
+        rows = [int(v) for tab in pl.rs_row_tables
+                for v in tab[r] if v != N]
+        own = set(range(offs[r], offs[r] + counts[r]))
+        assert sorted(rows) == sorted(set(range(N)) - own), \
+            f"rank {r}: send rows must cover exactly the non-resident rows"
+        assert len(rows) == N - counts[r]  # no duplicates
+
+
+@pytest.mark.parametrize("counts", _counts_cases())
+def test_nonuniform_wire_width_is_worst_window(counts):
+    """Each round's wire width equals the worst windowed count sum over
+    ranks — the per-round quantity Corollary 3's bound maximizes."""
+    p = len(counts)
+    pl = _plan(p, counts=counts)
+    for rp, tab in zip(pl.rs_rounds, pl.rs_row_tables):
+        widths = [sum(counts[(r + i) % p] for i in range(rp.lo, rp.hi))
+                  for r in range(p)]
+        assert tab.shape == (p, max(max(widths), 1))
+        # padding entries are the sentinel row, trailing per rank
+        for r in range(p):
+            real = [v for v in tab[r] if v != pl.layout.total]
+            assert len(real) == widths[r]
+            assert list(tab[r][:len(real)]) == real
+
+
+def test_one_column_worst_case_width():
+    """Concentrated counts: every round's wire carries the full vector
+    (the Corollary 3 worst case the ISSUE singles out)."""
+    counts = (0, 0, 0, 21, 0, 0)
+    pl = _plan(6, counts=counts)
+    for tab in pl.rs_row_tables:
+        assert tab.shape[1] == 21
+
+
+# ---------------------------------------------------------------------------
+# plan() caching — the trace-free property
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_returns_same_object():
+    spec = CollectiveSpec(schedule="power2", counts=(2, 3, 1))
+    before = plan_cache_info().misses
+    a = plan(spec, p=3, axis_name=AX)
+    b = plan(spec, p=3, axis_name=AX)
+    c = plan(CollectiveSpec(schedule="power2", counts=(2, 3, 1)),
+             p=3, axis_name=AX)
+    assert a is b is c
+    assert plan_cache_info().misses <= before + 1
+    # a different axis name or p is a different plan
+    assert plan(spec, p=3, axis_name="y") is not a
+
+
+def test_spec_hashable_and_normalized():
+    s1 = CollectiveSpec(counts=(np.int64(2), np.int64(3)))
+    s2 = CollectiveSpec(counts=(2, 3))
+    assert s1 == s2 and hash(s1) == hash(s2)
+    assert s1.with_(schedule="power2").schedule == "power2"
+    assert as_spec(s1) is s1
+    assert as_spec("ring").kind == "ring"
+    assert as_spec(schedule="sqrt").schedule == "sqrt"
+
+
+# ---------------------------------------------------------------------------
+# Spec validation
+# ---------------------------------------------------------------------------
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="unknown kind"):
+        CollectiveSpec(kind="nccl")
+    with pytest.raises(ValueError, match="unknown wire_dtype"):
+        CollectiveSpec(wire_dtype="fp4")
+    with pytest.raises(ValueError, match="non-negative"):
+        CollectiveSpec(counts=(1, -1))
+    with pytest.raises(ValueError, match="at least one"):
+        CollectiveSpec(counts=(0, 0))
+    with pytest.raises(ValueError, match="circulant"):
+        CollectiveSpec(kind="ring", counts=(1, 2))
+
+
+def test_plan_validation_errors():
+    with pytest.raises(ValueError, match="wire_dtype"):
+        _plan(4, counts=(1, 2, 3, 4), wire_dtype="int8")
+    with pytest.raises(ValueError, match="fused"):
+        _plan(4, counts=(1, 2, 3, 4), use_fused_kernel=True)
+    with pytest.raises(ValueError, match="named op"):
+        _plan(4, counts=(1, 2, 3, 4), op=lambda a, b: a + b)
+    with pytest.raises(ValueError, match="named op"):
+        _plan(4, wire_dtype="int8", op=lambda a, b: a + b)
+    with pytest.raises(ValueError, match="counts has"):
+        _plan(5, counts=(1, 2, 3, 4))
+    # auto-fused + callable op silently keeps the jnp backend
+    assert _plan(4, op=lambda a, b: a + b).backend == "jnp"
+    # unsupported combinations fail loudly instead of silently degrading
+    import jax.numpy as jnp
+    with pytest.raises(NotImplementedError, match="wire_dtype"):
+        _plan(4, wire_dtype="int8").alltoall(jnp.ones((4, 2)))
+    with pytest.raises(NotImplementedError, match="counts"):
+        _plan(4, counts=(1, 2, 3, 4)).alltoall(jnp.ones((4, 2)))
+    hook = lambda x: x  # noqa: E731
+    with pytest.raises(ValueError, match="circulant"):
+        _plan(4, kind="ring").reduce_scatter(jnp.ones(8), compress=hook,
+                                             decompress=hook)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        _plan(4, wire_dtype="int8").reduce_scatter(
+            jnp.ones(8), compress=hook, decompress=hook)
+    with pytest.raises(ValueError, match="non-uniform"):
+        _plan(4, counts=(1, 2, 3, 4)).reduce_scatter(
+            jnp.ones(10), compress=hook, decompress=hook)
+
+
+def test_backend_registry():
+    assert _plan(4).backend in BACKENDS
+    assert _plan(4, wire_dtype="int8").backend in ("jnp+int8", "fused+int8")
+    assert _plan(4, counts=(1, 2, 3, 4)).backend == "nonuniform"
+    assert _plan(4, kind="ring").backend == "ring"
+    for backend, collectives in BACKENDS.items():
+        assert "reduce_scatter" in collectives
+
+
+# ---------------------------------------------------------------------------
+# Deprecations (kwarg-era surfaces name the CollectiveSpec replacement)
+# ---------------------------------------------------------------------------
+
+def test_impl_string_dispatch_deprecated():
+    from repro.core import collectives as C
+    # No tracing context needed: the warning fires before execution, so
+    # catch the axis-name error after asserting the warning.
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        with pytest.raises(Exception):
+            C.reduce_scatter(np.zeros(8), "nosuchaxis", impl="ring")
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert dep and "CollectiveSpec" in str(dep[0].message)
+
+    # default (no explicit impl) stays silent
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        with pytest.raises(Exception):
+            C.reduce_scatter(np.zeros(8), "nosuchaxis")
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+
+
+def test_gradsync_compress_alias_deprecated():
+    from repro.optim.zero1 import GradSyncConfig
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        cfg = GradSyncConfig(compress="int8")
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert dep and "wire_dtype" in str(dep[0].message)
+    assert cfg.wire == "int8"
+    assert cfg.rs_spec().wire_dtype == "int8"
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        clean = GradSyncConfig(wire_dtype="int8")
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert clean.rs_spec().wire_dtype == "int8"
+    assert clean.ag_spec().wire_dtype is None  # params reassemble exactly
+
+
+def test_spec_and_impl_are_exclusive():
+    from repro.core import collectives as C
+    with pytest.raises(TypeError, match="either spec= or impl="):
+        C.reduce_scatter(np.zeros(8), AX, "ring",
+                         spec=CollectiveSpec(kind="ring"))
+    with pytest.raises(TypeError, match="extra kwargs"):
+        C.reduce_scatter(np.zeros(8), AX, spec=CollectiveSpec(),
+                         schedule="power2")
+
+
+# ---------------------------------------------------------------------------
+# The consolidated padding path
+# ---------------------------------------------------------------------------
+
+def test_pad_to_multiple_via_layout():
+    import jax.numpy as jnp
+    from repro.core import collectives as C
+    x = jnp.ones((7, 3))
+    padded, pad = C.pad_to_multiple(x, 4)
+    assert padded.shape == (8, 3) and pad == 1
+    assert np.asarray(padded[7]).sum() == 0
+    same, pad0 = C.pad_to_multiple(jnp.ones((8, 3)), 4)
+    assert same.shape == (8, 3) and pad0 == 0
+
+
+def test_block_layout_uniform_and_counts():
+    lay = BlockLayout.uniform(4, 10)
+    assert lay.counts == (3, 3, 3, 3) and lay.total == 12 and lay.bmax == 3
+    assert lay.offsets == (0, 3, 6, 9, 12)
+    nl = BlockLayout(counts=(2, 0, 5))
+    assert nl.total == 7 and nl.bmax == 5 and not nl.is_uniform
+    assert nl.offsets == (0, 2, 2, 7)
+    with pytest.raises(ValueError, match="non-uniform"):
+        import jax.numpy as jnp
+        nl.as_blocks(jnp.ones((7,)))
+
+
+def test_as_blocks_requires_divisibility():
+    import jax.numpy as jnp
+    from repro.core import collectives as C
+    with pytest.raises(ValueError, match="not divisible"):
+        C._as_blocks(jnp.ones((7,)), 4)
+    assert C._as_blocks(jnp.ones((8, 2)), 4).shape == (4, 2, 2)
+
+
+def test_default_wire_group_matches_kernels():
+    from repro.core.spec import DEFAULT_WIRE_GROUP
+    from repro.kernels import DEFAULT_GROUP
+    assert DEFAULT_WIRE_GROUP == DEFAULT_GROUP
