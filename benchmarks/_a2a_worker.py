@@ -1,0 +1,159 @@
+"""Subprocess worker for bench_a2a: the alltoall(v) plan's structural
+guarantees, measured end-to-end on 8 fake CPU devices.
+
+Per case it emits one CSV row with (gated in benchmarks/ci_gate.py):
+
+  cp / theory / cp_delta   lowered-HLO collective-permute count vs
+                           ceil(log2 p) — alltoall(v) must keep exactly
+                           one ppermute per round, ragged counts and the
+                           fused path included (want cp_delta=0);
+  widths / bounds /        the alltoallv plan's per-round wire widths vs
+  width_ok                 the analytic worst-windowed-count-sum bound
+                           (cost_model.alltoallv_round_widths) — must be
+                           EQUAL (want width_ok=True);
+  ratio                    fused/jnp paired-median wall-clock ratio for
+                           the uniform alltoall (interpret-mode Pallas;
+                           gated at A2A_RATIO_MAX);
+  allclose                 for a2a/moe_ep_parity: moe_dispatch='ep' (2
+                           ranks, ragged 3-expert ownership) matches the
+                           'global' single-pool dispatch numerically.
+
+Emits CSV rows on stdout; the gate logic lives in benchmarks/ci_gate.py.
+"""
+import os
+import re
+import sys
+import time
+
+# Strip any inherited device-count flag: XLA keeps the LAST occurrence,
+# so a caller's exported count would silently override the 8 needed here.
+_inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                    os.environ.get("XLA_FLAGS", ""))
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 " + _inherited)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro import compat  # noqa: E402
+from repro.core import (CollectiveSpec, alltoallv_round_widths,  # noqa: E402
+                        ceil_log2, plan)
+from repro.core import collectives as C  # noqa: E402
+
+NDEV = 8
+mesh = compat.make_mesh((NDEV,), ("x",))
+rng = np.random.default_rng(17)
+BLK = 256
+
+
+def jitted(fn, check_vma=None):
+    return jax.jit(compat.shard_map(
+        lambda v: fn(v[0])[None], mesh=mesh, in_specs=(P("x"),),
+        out_specs=P("x"), check_vma=check_vma))
+
+
+def count_cp(f, shape):
+    txt = f.lower(jax.ShapeDtypeStruct(shape, jnp.float32)).as_text()
+    return txt.count("collective_permute")
+
+
+def timeit(f, x, iters=10):
+    f(x).block_until_ready()  # warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(x)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+theory = ceil_log2(NDEV)
+
+# --- uniform alltoall: jnp vs fused, cp counts, paired-median ratio -------
+x = jnp.asarray(rng.standard_normal((NDEV, NDEV, BLK)), jnp.float32)
+f_jnp = jitted(lambda v: C.circulant_alltoall(v, "x"))
+f_fused = jitted(lambda v: C.circulant_alltoall(v, "x",
+                                                use_fused_kernel=True),
+                 check_vma=False)
+cp_j = count_cp(f_jnp, (NDEV, NDEV, BLK))
+cp_f = count_cp(f_fused, (NDEV, NDEV, BLK))
+out_j, out_f = np.asarray(f_jnp(x)), np.asarray(f_fused(x))
+bitwise = bool((out_j == out_f).all())
+# Paired back-to-back reps: per-rep ratios cancel common-mode machine
+# load drift; report the median of the paired ratios.
+t_j, t_f, ratios = 1e30, 1e30, []
+for _ in range(7):
+    tf = timeit(f_fused, x)
+    tj = timeit(f_jnp, x)
+    ratios.append(tf / tj)
+    t_j, t_f = min(t_j, tj), min(t_f, tf)
+ratio = sorted(ratios)[len(ratios) // 2]
+print(f"a2a/alltoall_jnp,{t_j:.3f},"
+      f"cp={cp_j};theory={theory};cp_delta={cp_j - theory}")
+print(f"a2a/alltoall_fused,{t_f:.3f},"
+      f"cp={cp_f};theory={theory};cp_delta={cp_f - theory};"
+      f"bitwise={bitwise};ratio={ratio:.3f};unfused_us={t_j:.3f};"
+      f"interpret=True")
+
+# --- ragged alltoallv: cp counts + wire width == analytic bound ----------
+CASES = {
+    "ragged": tuple(tuple((i * 5 + j * 3 + 1) % 4 for j in range(NDEV))
+                    for i in range(NDEV)),
+    "one_rank": tuple(tuple((i + 1) * BLK if j == NDEV // 2 else 0
+                            for j in range(NDEV)) for i in range(NDEV)),
+}
+for name, counts in CASES.items():
+    spec = CollectiveSpec(counts=counts)
+    pl = plan(spec, p=NDEV, axis_name="x")
+    widths = pl.a2a.round_widths
+    bounds = alltoallv_round_widths(counts)
+    width_ok = widths == bounds
+    in_h = pl.a2a.in_height
+    xv = jnp.asarray(rng.standard_normal((NDEV, in_h, 4)), jnp.float32)
+    fv = jitted(lambda v, s=spec: C.alltoall(v, "x", spec=s))
+    cp = count_cp(fv, (NDEV, in_h, 4))
+    us = timeit(fv, xv)
+    print(f"a2a/alltoallv_{name},{us:.3f},"
+          f"cp={cp};theory={theory};cp_delta={cp - theory};"
+          f"widths={'/'.join(map(str, widths))};"
+          f"bounds={'/'.join(map(str, bounds))};width_ok={width_ok}")
+
+# --- MoE expert-parallel parity (ragged ownership over the mesh) ---------
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.models.moe import init_moe, moe_ffn  # noqa: E402
+
+pe, e = 2, 3
+mesh2 = compat.make_mesh((pe,), ("x",), devices=jax.devices()[:pe])
+cfg = ModelConfig(name="bench-moe", family="moe", n_layers=1, d_model=32,
+                  n_heads=4, n_kv_heads=4, d_ff=64, vocab_size=128,
+                  head_dim=8, n_experts=e, experts_per_token=2,
+                  capacity_factor=8.0, dtype="float32",
+                  moe_dispatch="ep", ep_axis="x")
+params = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+xm = jax.random.normal(jax.random.PRNGKey(1), (pe, 16, cfg.d_model),
+                       jnp.float32)
+fe = jax.jit(compat.shard_map(
+    lambda v: moe_ffn(params, cfg, v)[0], mesh=mesh2,
+    in_specs=(P("x"),), out_specs=P("x"), check_vma=False))
+t0 = time.perf_counter()
+out_ep = np.asarray(fe(xm))
+compile_plus = (time.perf_counter() - t0) * 1e6
+cfg_g = dataclasses.replace(cfg, moe_dispatch="global")
+out_g = np.concatenate(
+    [np.asarray(moe_ffn(params, cfg_g, xm[r:r + 1])[0])
+     for r in range(pe)], axis=0)
+ok = bool(np.allclose(out_ep, out_g, rtol=2e-5, atol=2e-5))
+us = timeit(fe, xm)
+txt = fe.lower(jax.ShapeDtypeStruct(xm.shape, jnp.float32)).as_text()
+cp = txt.count("collective_permute")
+# 3 exchanges per layer call (counts alltoallv + buffer out + buffer
+# back), ceil(log2 pe) ppermutes each.
+theory_ep = 3 * ceil_log2(pe)
+print(f"a2a/moe_ep_parity,{us:.3f},"
+      f"allclose={ok};cp={cp};theory={theory_ep};"
+      f"cp_delta={cp - theory_ep};ranks={pe};experts={e};"
+      f"compile_us={compile_plus:.0f}")

@@ -18,7 +18,12 @@ budget violation, which this gate surfaces as failures), parses the CSV into ``B
 * plan/execute rows (``plans/``): spec-driven dispatch is trace-free (zero jit retraces and
   zero plan-cache rebuilds across repeated calls with the same ``CollectiveSpec``) and adds
   zero collective-permutes over the schedule's round count — including the non-uniform
-  (Corollary 3) specs.
+  (Corollary 3) specs;
+* alltoall(v) rows (``a2a/``): HLO collective-permute count == ceil(log2 p) for the uniform,
+  fused AND ragged (per-pair counts) forms; the alltoallv wire widths equal the analytic
+  worst-windowed-count-sum bound exactly; the fused/jnp uniform alltoall stays within
+  ``A2A_RATIO_MAX``; and the MoE expert-parallel dispatch (``moe_dispatch='ep'``, ragged
+  expert ownership) matches the single-pool 'global' reference (``allclose=True``).
 
 Usage:  PYTHONPATH=src python -m benchmarks.ci_gate [--out BENCH_ci.json]
 Exit code 0 iff every check passes.
@@ -40,7 +45,12 @@ FUSED_RATIO_MAX = 2.0
 # 3.0 leaves room for smaller groups without letting a scales-bloat or
 # padding regression through.
 WIRE_REDUCTION_MIN = 3.0
-ONLY = "rounds,kernels,wire,plans"
+# The fused alltoall does the same ppermutes and only fuses the final
+# source-ordering pass, so its interpret-mode ratio sits near 1.0 (0.9
+# observed); 1.5 catches a structural regression (an extra buffer copy
+# per round lands well above it).
+A2A_RATIO_MAX = 1.5
+ONLY = "rounds,kernels,wire,plans,a2a"
 
 
 def parse_csv(text: str) -> list[dict]:
@@ -93,6 +103,26 @@ def check(rows: list[dict]) -> list[str]:
                     failures.append(
                         f"{row['name']}: payload reduction {red:.2f}x < {WIRE_REDUCTION_MIN}x"
                     )
+        if row["name"].startswith("a2a/"):
+            f = row["fields"]
+            if f.get("cp_delta") != "0":
+                failures.append(
+                    f"{row['name']}: {f.get('cp')} collective-permutes, "
+                    f"want {f.get('theory')} (alltoall(v) must keep one "
+                    f"ppermute per round)"
+                )
+            if "width_ok" in f and f["width_ok"] != "True":
+                failures.append(
+                    f"{row['name']}: alltoallv wire widths {f.get('widths')} "
+                    f"!= analytic worst-window bound {f.get('bounds')}"
+                )
+            if "ratio" in f and "fused" in row["name"]:
+                ratio = float(f["ratio"])
+                if ratio > A2A_RATIO_MAX:
+                    failures.append(
+                        f"{row['name']}: fused/jnp ratio {ratio:.3f} > "
+                        f"{A2A_RATIO_MAX} (interpret-mode noise backstop)"
+                    )
         if row["name"].startswith("plans/"):
             f = row["fields"]
             if f.get("retraces") != "0":
@@ -124,6 +154,11 @@ def check(rows: list[dict]) -> list[str]:
         failures.append("no plans/ trace-free dispatch rows produced")
     if "plans/rs_nonuniform" not in names:
         failures.append("no plans/rs_nonuniform (Corollary 3) row produced")
+    if not any(n.startswith("a2a/alltoallv") for n in names):
+        failures.append("no a2a/alltoallv ragged-counts rows produced")
+    if "a2a/moe_ep_parity" not in names:
+        failures.append("no a2a/moe_ep_parity (ep vs global dispatch) row "
+                        "produced")
     return failures
 
 

@@ -17,6 +17,10 @@ and the Corollary-2 schedule family.  Benchmarks:
                (want 0; frozen spec + cached plan) and collective-permute
                delta vs the schedule round count (want 0), incl. the
                non-uniform Corollary-3 specs
+  a2a          alltoall(v): HLO collective-permutes == ceil(log2 p) for
+               uniform, fused AND ragged per-pair counts; alltoallv wire
+               widths == the analytic worst-windowed-count-sum bound;
+               fused/jnp ratio; MoE ep-vs-global dispatch parity
   roofline     re-emit the dry-run roofline table (reads reports/dryrun)
 
 Output: ``name,us_per_call,derived`` CSV rows.
@@ -85,6 +89,13 @@ def bench_cost_model():
         x = cm.crossover_m(p, model)
         emit(f"cost_model/torus_crossover_p{p}", 0.0,
              f"ring_beats_circulant_above_m={x:.3g}")
+    # Alltoall: hop-through-intermediate-ranks β volume (Bruck trade-off).
+    for p in [16, 64, 256]:
+        m = 1 << 20
+        entries = cm.a2a_round_entries(p)
+        emit(f"cost_model/alltoall_p{p}_m{m}", cm.t_alltoall(m, p, model) * 1e6,
+             f"rounds={len(entries)};blocks_sent={sum(entries)};"
+             f"volume_amplification={sum(entries) / (p - 1):.2f}x")
 
 
 # ---------------------------------------------------------------------------
@@ -115,6 +126,23 @@ def bench_plans():
                           text=True, timeout=900, env=env)
     if proc.returncode != 0:
         emit("plans/ERROR", 0.0, proc.stderr[-200:].replace("\n", " "))
+        return
+    print(proc.stdout, end="")
+
+
+# ---------------------------------------------------------------------------
+def bench_a2a():
+    """Alltoall(v) structural gate: round counts, ragged wire widths vs
+    the analytic bound, fused ratio, MoE ep parity.  Subprocess (needs
+    fake devices)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    worker = os.path.join(here, "_a2a_worker.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, worker], capture_output=True,
+                          text=True, timeout=900, env=env)
+    if proc.returncode != 0:
+        emit("a2a/ERROR", 0.0, proc.stderr[-200:].replace("\n", " "))
         return
     print(proc.stdout, end="")
 
@@ -290,6 +318,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "wire": bench_wire,
     "plans": bench_plans,
+    "a2a": bench_a2a,
     "roofline": bench_roofline,
 }
 

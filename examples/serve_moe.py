@@ -1,20 +1,34 @@
 """Serve a (reduced) MoE model with batched requests — exercises the MoE
 dispatch path, KV caches, and temperature sampling.
 
+Since the alltoall refactor this drives the EXPERT-PARALLEL dispatch
+path: experts are sharded over 2 (fake-device) ranks and every layer's
+(E, C, d) dispatch buffer is exchanged with the circulant alltoall plan
+(``--moe-dispatch ep``; see examples/moe_alltoall.py for the API tour).
+
     PYTHONPATH=src python examples/serve_moe.py
 """
 import os
+import re
 import sys
 
+EP_DEVICES = 2
+# Strip any inherited device-count flag (XLA keeps the LAST occurrence).
+_inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                    os.environ.get("XLA_FLAGS", ""))
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={EP_DEVICES} " + _inherited)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch import serve as serve_mod
+from repro.launch import serve as serve_mod  # noqa: E402
 
 
 def main():
     serve_mod.main(["--arch", "phi3.5-moe-42b-a6.6b", "--scale-down",
                     "--batch", "4", "--prompt-len", "16", "--max-new", "12",
-                    "--temperature", "0.8"])
+                    "--temperature", "0.8",
+                    "--moe-dispatch", "ep",
+                    "--ep-devices", str(EP_DEVICES)])
 
 
 if __name__ == "__main__":

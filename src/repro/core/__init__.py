@@ -14,6 +14,7 @@ from .spec import (  # noqa: F401
     as_spec,
 )
 from .plan import (  # noqa: F401
+    A2APlan,
     BACKENDS,
     BlockLayout,
     CollectivePlan,
@@ -23,6 +24,7 @@ from .plan import (  # noqa: F401
 )
 from .schedule import (  # noqa: F401
     allgather_plan,
+    alltoall_moves,
     ceil_log2,
     decompose,
     fully_connected_skips,
@@ -40,8 +42,12 @@ from .schedule import (  # noqa: F401
 )
 from .cost_model import (  # noqa: F401
     CommModel,
+    a2a_round_entries,
+    alltoallv_round_widths,
     t_allgather,
     t_allreduce,
+    t_alltoall,
+    t_alltoallv,
     t_corollary1,
     t_corollary3_bound,
     t_reduce_scatter,

@@ -67,10 +67,8 @@ def pad_to_multiple(x: Array, p: int) -> tuple[Array, int]:
 
 
 def _circulant_spec(**kw) -> CollectiveSpec:
-    counts = kw.pop("counts", None)
-    if counts is not None:
-        counts = tuple(int(c) for c in counts)
-    return CollectiveSpec(kind="circulant", counts=counts, **kw)
+    # counts (flat tuple or p×p matrix) is normalized by the spec itself.
+    return CollectiveSpec(kind="circulant", **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -191,20 +189,45 @@ def circulant_alltoall(
     axis_name: str,
     *,
     schedule: str = "halving",
+    group: int | None = None,
     use_fused_kernel: bool | None = None,
+    counts: Sequence[Sequence[int]] | None = None,
 ) -> Array:
     """All-to-all in ceil(log2 p) rounds: Algorithm 1 with ⊕ =
     concatenation.  ``x``: (p, blk, *rest); row j is rank r's payload for
     rank j.  Returns (p, blk, *rest); row j is rank j's payload for rank r.
 
-    Volume is (p/2)*ceil(log2 p) blocks per rank (the classic Bruck
-    trade-off: round-optimal, not volume-optimal).  The fused form keeps
-    each slot as ONE stacked buffer and lays the final slot into source
-    order with one Pallas row-permutation pass.
+    Volume is amplified — blocks hop through intermediate ranks (the
+    classic Bruck trade-off: round-optimal, not volume-optimal; see
+    ``cost_model.t_alltoall``).  The fused form keeps each slot as ONE
+    stacked buffer and lays the final slot into source order with one
+    Pallas row-permutation pass.
+
+    ``counts`` enables the ragged alltoallv variant: a p×p matrix where
+    ``counts[src][dst]`` rows travel from src to dst (MPI_Alltoallv).
+    Input is then ``(max_r sum(counts[r]), *rest)`` — this rank's payload
+    rows in destination order — and the output ``(max_r recv_total_r,
+    *rest)`` holds the received rows in source order, zeroed past this
+    rank's receive total.  One collective-permute per round either way.
     """
-    spec = _circulant_spec(schedule=schedule,
-                           use_fused_kernel=use_fused_kernel)
+    spec = _circulant_spec(schedule=schedule, group=group,
+                           use_fused_kernel=use_fused_kernel,
+                           counts=counts)
     return plan(spec, axis_name=axis_name).alltoall(x)
+
+
+def circulant_alltoallv(
+    x: Array,
+    axis_name: str,
+    counts: Sequence[Sequence[int]],
+    *,
+    schedule: str = "halving",
+    group: int | None = None,
+) -> Array:
+    """Ragged alltoall (MPI_Alltoallv flavor) — :func:`circulant_alltoall`
+    with a required per-pair ``counts`` matrix."""
+    return circulant_alltoall(x, axis_name, schedule=schedule, group=group,
+                              counts=counts)
 
 
 # ---------------------------------------------------------------------------
@@ -292,6 +315,14 @@ def xla_allgather(x: Array, axis_name: str, **_) -> Array:
     return lax.all_gather(x, axis_name, axis=0, tiled=True)
 
 
+def xla_alltoall(x: Array, axis_name: str, **_) -> Array:
+    """XLA's native all-to-all baseline.  Same layout contract as
+    :func:`circulant_alltoall`: ``x`` is (p, blk, *rest) with row j the
+    payload for rank j; returns row j = payload from rank j."""
+    return lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
+                          tiled=True)
+
+
 # ---------------------------------------------------------------------------
 # Dispatchers + multi-axis (hierarchical) wrappers
 # ---------------------------------------------------------------------------
@@ -310,6 +341,10 @@ AR_IMPLS = {
 AG_IMPLS = {
     "circulant": circulant_allgather,
     "xla": xla_allgather,
+}
+A2A_IMPLS = {
+    "circulant": circulant_alltoall,
+    "xla": xla_alltoall,
 }
 
 
@@ -357,6 +392,14 @@ def allgather(x, axis_name, impl=None, *,
     """Allgather dispatcher — see :func:`reduce_scatter`."""
     return _dispatch(x, axis_name, impl, spec, AG_IMPLS, "allgather",
                      "allgather", kw)
+
+
+def alltoall(x, axis_name, impl=None, *,
+             spec: CollectiveSpec | None = None, **kw):
+    """Alltoall(v) dispatcher — see :func:`reduce_scatter`.  A spec with a
+    p×p ``counts`` matrix runs the ragged alltoallv table backend."""
+    return _dispatch(x, axis_name, impl, spec, A2A_IMPLS, "alltoall",
+                     "alltoall", kw)
 
 
 def hierarchical_reduce_scatter(x, axis_names: Sequence[str],

@@ -4,8 +4,11 @@ Sweeps every (collective × impl × schedule × op × dtype ×
 use_fused_kernel × wire_dtype) combination that is meaningful for a given
 axis size ``p`` — int8-wire mirrors use tolerance-based assertions
 (compressed rounds are lossy by design) while everything else keeps its
-exact checks — plus, for composite p, a hierarchical two-axis sweep
-(``run_hierarchical``).  Per case it asserts:
+exact checks — plus the alltoall(v) sweep (``run_alltoall``: uniform
+blocks and ragged per-pair counts matrices vs the simulator, the host
+transpose reference and XLA's native all-to-all, all bitwise) and, for
+composite p, a hierarchical two-axis sweep (``run_hierarchical``).  Per
+case it asserts:
 
   (a) agreement with a host-side numpy reference — bitwise for integer and
       order-independent (max/min) reductions, tolerance-based for float
@@ -265,7 +268,7 @@ def run_case(mesh, p: int, case: Case, rng: np.random.Generator) -> None:
 # HLO structure: Theorem 1/2 round counts
 # ---------------------------------------------------------------------------
 
-def _n_collective_permutes(jitted, shape: tuple[int, int]) -> int:
+def _n_collective_permutes(jitted, shape: tuple[int, ...]) -> int:
     """Lowered-HLO collective-permute count of a jitted per-rank wrapper
     on an f32 input of ``shape`` (shared by the single-axis and
     hierarchical round-count checks)."""
@@ -445,6 +448,192 @@ def _ref_nonuniform(xg: np.ndarray, op: str) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Alltoall(v) — uniform + ragged per-pair counts vs simulator + host ref
+# ---------------------------------------------------------------------------
+
+A2A_SCHEDULES = ("halving", "power2", "fully_connected")
+A2A_DTYPES = ("float32", "bfloat16", "int32")
+
+
+def alltoallv_counts_cases(p: int) -> dict[str, tuple[tuple[int, ...], ...]]:
+    """Per-pair counts matrices for the ragged alltoallv sweep.
+
+    ``ragged`` mixes sizes; ``zero_pairs`` has whole zero-count rows in
+    the round tables (every other (src, dst) pair empty, incl. a rank
+    that sends nothing); ``one_rank`` concentrates every payload on a
+    single destination (the worst windowed sum — each round one rank's
+    wire carries a full vector); ``uniform`` must agree with the dense
+    alltoall layout.
+    """
+    ragged = tuple(tuple((i * 3 + j * 5 + 1) % 4 for j in range(p))
+                   for i in range(p))
+    zero = tuple(tuple(0 if (i + j) % 2 or i == 0 else i + j + 1
+                       for j in range(p)) for i in range(p))
+    one = [[0] * p for _ in range(p)]
+    for i in range(p):
+        one[i][p // 2] = i + 1
+    return {
+        "ragged": ragged,
+        "zero_pairs": zero,
+        "one_rank": tuple(tuple(r) for r in one),
+        "uniform": tuple((BLK,) * p for _ in range(p)),
+    }
+
+
+def _a2a_input(case_dtype: str, shape, rng: np.random.Generator
+               ) -> np.ndarray:
+    if case_dtype == "int32":
+        return rng.integers(-50, 50, size=shape).astype(np.int32)
+    x = rng.standard_normal(shape).astype(np.float32)
+    if case_dtype == "bfloat16":
+        x = np.asarray(jnp.asarray(x, jnp.bfloat16).astype(jnp.float32))
+    return x
+
+
+def run_alltoall(p: int, mesh, verbose: bool = False) -> dict:
+    """Alltoall(v) conformance at axis size p.
+
+    Uniform: circulant alltoall across schedules × dtypes × fused, each
+    asserted BITWISE against the numpy simulator, the host transpose
+    reference, and XLA's native all-to-all (no arithmetic happens, so
+    exactness holds for every dtype), with fused == jnp bitwise.  Ragged:
+    every ``alltoallv_counts_cases`` matrix across schedules, f32 + i32,
+    vs ``simulate_alltoallv`` + host ref, zero rows past each rank's
+    receive total.  Both forms assert the lowered-HLO collective-permute
+    count == rounds(schedule) — ``ceil(log2 p)`` for halving/power2:
+    ragged per-pair counts must not change the communication structure.
+    """
+    rng = np.random.default_rng(905 + p)
+    n_cases = 0
+    rounds: dict[str, tuple[int, ...]] = {}
+
+    # --- uniform dense alltoall -------------------------------------------
+    for dtype in A2A_DTYPES:
+        xg = _a2a_input(dtype, (p, p, BLK), rng)
+        dt = jnp.dtype(dtype)
+        ref = sim.ref_alltoall(
+            [[xg[r, i] for i in range(p)] for r in range(p)])
+        W, stats = sim.simulate_alltoall(
+            [[xg[r, i] for i in range(p)] for r in range(p)])
+        assert stats.rounds == ceil_log2(p)
+        for sched in A2A_SCHEDULES:
+            spec = CollectiveSpec(schedule=sched)
+            outs = {}
+            for fused in (False, True):
+                s = spec.with_(use_fused_kernel=fused)
+                out = np.asarray(_shmap1(
+                    mesh, lambda v, s=s: C.alltoall(v, AXIS, spec=s),
+                    check_vma=False if fused else None)(
+                    jnp.asarray(xg, dtype=dt)))
+                outs[fused] = out
+                for r in range(p):
+                    for j in range(p):
+                        np.testing.assert_array_equal(
+                            out[r, j],
+                            np.asarray(W[r][j]).astype(out.dtype),
+                            err_msg=f"alltoall[{sched}:{dtype}"
+                                    f"{':fused' if fused else ''}] vs "
+                                    f"simulator (p={p}, rank {r})")
+                        np.testing.assert_array_equal(
+                            out[r, j],
+                            np.asarray(ref[r][j]).astype(out.dtype),
+                            err_msg=f"alltoall[{sched}:{dtype}] vs host "
+                                    f"ref (p={p})")
+                n_cases += 1
+            np.testing.assert_array_equal(
+                outs[True], outs[False],
+                err_msg=f"alltoall[{sched}:{dtype}] fused != jnp (p={p})")
+        # XLA native baseline (layout contract identical).
+        base = np.asarray(_shmap1(
+            mesh, lambda v: C.alltoall(
+                v, AXIS, spec=CollectiveSpec(kind="xla")))(
+            jnp.asarray(xg, dtype=dt)))
+        np.testing.assert_array_equal(
+            base, outs[False],
+            err_msg=f"alltoall[{dtype}] circulant != xla baseline (p={p})")
+        n_cases += 1
+
+    # HLO structure (uniform): one collective-permute per round, fused too.
+    for sched in A2A_SCHEDULES:
+        spec = CollectiveSpec(schedule=sched)
+        want = schedule_rounds(p, sched)
+        if sched in OPTIMAL_SCHEDULES:
+            assert want == ceil_log2(p)
+        got = []
+        for fused in (False, True):
+            s = spec.with_(use_fused_kernel=fused)
+            jitted = _shmap1(mesh, lambda v, s=s: C.alltoall(v, AXIS, spec=s),
+                             check_vma=False if fused else None)
+            n_cp = _n_collective_permutes(jitted, (p, p, BLK))
+            assert n_cp == want, \
+                (f"alltoall[{sched}{':fused' if fused else ''}] p={p}: "
+                 f"{n_cp} collective-permutes, want {want} (Theorem 1's "
+                 f"rounds; ceil(log2 p) for the optimal schedules)")
+            got.append(n_cp)
+        rounds[f"uniform:{sched}"] = tuple(got)
+
+    # --- ragged alltoallv -------------------------------------------------
+    for name, counts in alltoallv_counts_cases(p).items():
+        send_tot = [sum(row) for row in counts]
+        recv_tot = [sum(counts[s][d] for s in range(p)) for d in range(p)]
+        in_h = max(max(send_tot), 1)
+        for dtype in ("float32", "int32"):
+            inputs = [[_a2a_input(dtype, (counts[r][d], 2), rng)
+                       for d in range(p)] for r in range(p)]
+            xg = np.zeros((p, in_h, 2),
+                          np.int32 if dtype == "int32" else np.float32)
+            for r in range(p):
+                j = 0
+                for d in range(p):
+                    c = counts[r][d]
+                    xg[r, j:j + c] = inputs[r][d]
+                    j += c
+            W, stats = sim.simulate_alltoallv(inputs)
+            ref = sim.ref_alltoall(inputs)
+            for sched in A2A_SCHEDULES:
+                spec = CollectiveSpec(schedule=sched, counts=counts)
+                tag = f"alltoallv[{name}:{sched}:{dtype}]"
+                out = np.asarray(_shmap1(
+                    mesh, lambda v, s=spec: C.alltoall(v, AXIS, spec=s))(
+                    jnp.asarray(xg)))
+                for r in range(p):
+                    j = 0
+                    for s_ in range(p):
+                        c = counts[s_][r]
+                        np.testing.assert_array_equal(
+                            out[r, j:j + c], np.asarray(W[r][s_], out.dtype),
+                            err_msg=f"{tag} vs simulator (p={p}, rank {r})")
+                        np.testing.assert_array_equal(
+                            out[r, j:j + c],
+                            np.asarray(ref[r][s_], out.dtype),
+                            err_msg=f"{tag} vs host ref (p={p}, rank {r})")
+                        j += c
+                    assert j == recv_tot[r]
+                    assert (out[r, j:] == 0).all(), \
+                        f"{tag}: rows past recv total must be zero (p={p})"
+                n_cases += 1
+        # HLO structure: ragged counts keep one collective-permute per
+        # round (= ceil(log2 p) for the optimal schedules).
+        for sched in A2A_SCHEDULES:
+            spec = CollectiveSpec(schedule=sched, counts=counts)
+            want = schedule_rounds(p, sched)
+            n_cp = _n_collective_permutes(_shmap1(
+                mesh, lambda v, s=spec: C.alltoall(v, AXIS, spec=s)),
+                (p, in_h))
+            assert n_cp == want, \
+                (f"alltoallv[{name}:{sched}] p={p}: {n_cp} collective-"
+                 f"permutes, want {want} (ragged per-pair counts must not "
+                 f"change the round structure)")
+            rounds[f"{name}:{sched}"] = (n_cp,)
+        if verbose:
+            print(f"ok: alltoallv[{name}] p={p} "
+                  f"(total={sum(send_tot)} rows)")
+    if verbose:
+        print(f"ok: alltoall sweep p={p} ({n_cases} cases)")
+    return {"n_cases": n_cases, "rounds": rounds}
+
+
+# ---------------------------------------------------------------------------
 # Hierarchical (multi-axis) sweep — nested RS/AG/AR over a 2-D mesh
 # ---------------------------------------------------------------------------
 
@@ -571,9 +760,10 @@ def run_sweep(p: int, mesh=None, verbose: bool = False) -> dict:
             print(f"ok: HLO rounds p={p} {sched}: RS={n_rs} AR={n_ar} "
                   f"(ceil_log2={ceil_log2(p)})")
     nonuni = run_nonuniform(p, mesh, verbose=verbose)
+    a2a = run_alltoall(p, mesh, verbose=verbose)
     hier = run_hierarchical(p, verbose=verbose)
     return {"p": p, "n_cases": len(cases), "rounds": rounds,
-            "nonuniform": nonuni, "hierarchical": hier}
+            "nonuniform": nonuni, "alltoall": a2a, "hierarchical": hier}
 
 
 def main(argv=None) -> int:
@@ -588,9 +778,11 @@ def main(argv=None) -> int:
     hier_note = (f", hierarchical {hier['mesh'][0]}x{hier['mesh'][1]}: "
                  f"{hier['n_cases']} cases" if hier else "")
     nonuni = report["nonuniform"]
+    a2a = report["alltoall"]
     print(f"CONFORMANCE OK (p={p}, {report['n_cases']} cases, "
           f"{len(report['rounds'])} schedules, "
-          f"{nonuni['n_cases']} non-uniform cases{hier_note})")
+          f"{nonuni['n_cases']} non-uniform cases, "
+          f"{a2a['n_cases']} alltoall cases{hier_note})")
     return 0
 
 

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from .schedule import (RoundPlan, allgather_plan, ceil_log2,
+from .schedule import (RoundPlan, allgather_plan, alltoall_moves, ceil_log2,
                        reduce_scatter_plan)
 
 
@@ -138,6 +138,70 @@ def t_corollary3_bound(m: float, p: int, model: CommModel) -> float:
     if p == 1:
         return 0.0
     return ceil_log2(p) * (model.alpha + (model.beta + model.gamma) * m)
+
+
+def a2a_round_entries(p: int, schedule: str = "halving",
+                      group: int | None = None) -> tuple[int, ...]:
+    """Blocks each rank sends per round of alltoall-by-concatenation.
+
+    Entries hop through intermediate ranks, so the per-round send count
+    is the number of destination offsets whose slot lies in the round's
+    window — NOT the p-1 of reduce-scatter.  ``sum(a2a_round_entries(p))``
+    is the classic Bruck volume amplification (≈ (p/2)·ceil(log2 p) for
+    the halving schedule)."""
+    return tuple(len(moved) for _, moved in
+                 alltoall_moves(p, schedule, group))
+
+
+def t_alltoall(m: float, p: int, model: CommModel,
+               schedule: str = "halving", *, torus: bool = False) -> float:
+    """Predicted time of alltoall-by-concatenation on m total elements
+    per rank (uniform p blocks of m/p).  β is charged for the FULL
+    hop-through-intermediate-ranks volume (every entry in a round's
+    window retransmits); no γ — concatenation does no arithmetic."""
+    if p == 1:
+        return 0.0
+    t = 0.0
+    for (skip, moved) in alltoall_moves(p, schedule):
+        hops = min(skip, p - skip) if torus else 1
+        t += model.alpha + model.beta * hops * len(moved) * (m / p)
+    return t
+
+
+def alltoallv_round_widths(counts, schedule: str = "halving",
+                           group: int | None = None) -> tuple[int, ...]:
+    """Per-round wire widths (rows) of the ragged alltoallv: the worst
+    windowed count sum over ranks — the analytic bound the plan's
+    ``A2APlan.round_widths`` must equal (asserted by the CI ``a2a``
+    gate), and the β quantity of the Corollary 3 style per-round cost."""
+    p = len(counts)
+    widths = []
+    for _, moved in alltoall_moves(p, schedule, group):
+        per_rank = []
+        for r in range(p):
+            w = 0
+            for d, m in moved:
+                src = (r - m) % p
+                w += counts[src][(src + d) % p]
+            per_rank.append(w)
+        widths.append(max(max(per_rank), 1) if per_rank else 1)
+    return tuple(widths)
+
+
+def t_alltoallv(counts, model: CommModel, schedule: str = "halving", *,
+                elems_per_row: float = 1.0, torus: bool = False) -> float:
+    """Predicted alltoallv time for a per-pair ``counts`` row matrix.
+    Every round ships one fixed-width wire buffer (SPMD static shapes),
+    so β is charged for the worst windowed count sum per round."""
+    p = len(counts)
+    if p == 1:
+        return 0.0
+    t = 0.0
+    moves = alltoall_moves(p, schedule)
+    for (skip, _), w in zip(moves, alltoallv_round_widths(counts, schedule)):
+        hops = min(skip, p - skip) if torus else 1
+        t += model.alpha + model.beta * hops * w * elems_per_row
+    return t
 
 
 def t_ring_reduce_scatter(m: float, p: int, model: CommModel) -> float:

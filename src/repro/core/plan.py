@@ -14,6 +14,10 @@ moves, resolved ONCE per ``(spec, p, axis_name)`` and memoized:
   ragged send window into one fixed-width wire buffer (SPMD needs static
   shapes, so the wire width is the worst windowed count sum — exactly the
   quantity Corollary 3's bound maximizes over);
+* for a p×p per-pair ``counts`` MATRIX (alltoallv, paper §4 ragged), an
+  :class:`A2APlan`: seed/round/output row tables over the absolute
+  (src, dst) pair layout, walking ``schedule.alltoall_moves`` — same
+  one-ppermute-per-round discipline, Bruck hop amplification and all;
 * the wire-format layout (int8 codes + packed scale bytes) and a backend
   from a small registry (``jnp``, ``fused``, ``jnp+int8``, ``fused+int8``,
   ``nonuniform``, plus the baseline kinds).
@@ -42,7 +46,8 @@ from repro.kernels import (fused_round, fused_round_dq, pack_wire, pad2d,
                            permute_rows, quantize_rows, resolve_fused,
                            unpack_wire)
 from repro.kernels import ref as _kref
-from .schedule import RoundPlan, allgather_plan, reduce_scatter_plan
+from .schedule import (RoundPlan, allgather_plan, alltoall_moves,
+                       reduce_scatter_plan)
 from .spec import CollectiveSpec, as_spec
 
 Array = jax.Array
@@ -178,6 +183,110 @@ class BlockLayout:
 
 
 # ---------------------------------------------------------------------------
+# Alltoall(v) geometry — per-pair counts compiled to row tables
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True, eq=False)
+class A2APlan:
+    """Trace-time geometry of a ragged alltoallv (per-pair ``counts``).
+
+    The per-rank buffer holds the FULL absolute (src, dst) pair layout
+    (``total`` rows + one sentinel row); each rank only ever populates the
+    rows of entries it currently holds.  ``round_tables[k]`` is the
+    ``(p, W_k)`` absolute-row table of round k: row r lists the buffer
+    rows rank r gathers into the wire (its entries hopping this round,
+    in ``alltoall_moves`` order), sentinel-padded to the worst windowed
+    count sum ``W_k`` over ranks — SPMD needs one static wire shape, and
+    that max is exactly the per-round quantity the Corollary 3 style
+    bound maximizes over.  Sender and receiver store every entry at the
+    same absolute rows, so the receive table of rank r is row
+    ``(r - skip) mod p`` of the SAME table.
+    """
+
+    counts: tuple[tuple[int, ...], ...]   # [src][dst] rows
+    pair_offsets: np.ndarray              # (p, p) absolute row of each pair
+    total: int                            # sum of all counts
+    send_total: tuple[int, ...]           # per-src row sum
+    recv_total: tuple[int, ...]           # per-dst row sum
+    in_height: int                        # static input rows: max send_total
+    out_height: int                       # static output rows: max recv_total
+    seed_src: np.ndarray                  # (p, in_height) input rows gathered
+    seed_dst: np.ndarray                  # (p, in_height) buffer rows written
+    round_tables: tuple[np.ndarray, ...]  # (p, W_k) wire gather/scatter rows
+    out_rows: np.ndarray                  # (p, out_height) output gather rows
+
+    @property
+    def round_widths(self) -> tuple[int, ...]:
+        """Per-round wire width (rows) — the worst windowed count sum."""
+        return tuple(t.shape[1] for t in self.round_tables)
+
+
+def _build_a2a(counts: tuple[tuple[int, ...], ...], p: int,
+               schedule: str, group: int | None) -> A2APlan:
+    moves = alltoall_moves(p, schedule, group)
+    offs = np.zeros((p, p), np.int64)
+    acc = 0
+    for s in range(p):
+        for dcol in range(p):
+            offs[s, dcol] = acc
+            acc += counts[s][dcol]
+    total = acc
+    send_total = tuple(sum(row) for row in counts)
+    recv_total = tuple(sum(counts[s][dcol] for s in range(p))
+                       for dcol in range(p))
+    in_h = max(max(send_total), 1)
+    out_h = max(max(recv_total), 1)
+
+    # Seed: rank r's input rows (dst-ordered, rows [0, send_total[r]))
+    # scatter into the absolute pair layout; sentinel-padded.
+    seed_src = np.full((p, in_h), in_h, dtype=np.int32)   # input sentinel
+    seed_dst = np.full((p, in_h), total, dtype=np.int32)  # buffer sentinel
+    for r in range(p):
+        j = 0
+        for dcol in range(p):
+            c = counts[r][dcol]
+            seed_src[r, j:j + c] = np.arange(j, j + c, dtype=np.int32)
+            seed_dst[r, j:j + c] = np.arange(
+                offs[r, dcol], offs[r, dcol] + c, dtype=np.int32)
+            j += c
+
+    # Table widths come from the cost model's analytic bound (ONE
+    # implementation of the worst-windowed-count-sum formula); the row
+    # fill below would overrun a too-small width, so the CI width gate
+    # stays a real consistency check rather than a copy comparing itself.
+    from .cost_model import alltoallv_round_widths
+    widths = alltoallv_round_widths(counts, schedule, group)
+    tables = []
+    for (_, moved), W in zip(moves, widths):
+        tab = np.full((p, W), total, dtype=np.int32)
+        for r in range(p):
+            j = 0
+            for d, m in moved:
+                src = (r - m) % p
+                dst = (src + d) % p
+                c = counts[src][dst]
+                tab[r, j:j + c] = np.arange(
+                    offs[src, dst], offs[src, dst] + c, dtype=np.int32)
+                j += c
+            assert j <= W, (j, W)
+        tables.append(tab)
+
+    out_rows = np.full((p, out_h), total, dtype=np.int32)
+    for r in range(p):
+        j = 0
+        for src in range(p):
+            c = counts[src][r]
+            out_rows[r, j:j + c] = np.arange(
+                offs[src, r], offs[src, r] + c, dtype=np.int32)
+            j += c
+    return A2APlan(counts=counts, pair_offsets=offs, total=total,
+                   send_total=send_total, recv_total=recv_total,
+                   in_height=in_h, out_height=out_h,
+                   seed_src=seed_src, seed_dst=seed_dst,
+                   round_tables=tuple(tables), out_rows=out_rows)
+
+
+# ---------------------------------------------------------------------------
 # The compiled plan
 # ---------------------------------------------------------------------------
 
@@ -205,9 +314,10 @@ class CollectivePlan:
     rs_recv_blocks: tuple[tuple[int, ...], ...]
     ag_send_blocks: tuple[tuple[int, ...], ...]
     ag_recv_blocks: tuple[tuple[int, ...], ...]
-    layout: BlockLayout | None          # non-None iff spec.counts given
+    layout: BlockLayout | None          # non-None iff flat spec.counts given
     rs_row_tables: tuple[np.ndarray, ...] | None
     ag_row_tables: tuple[np.ndarray, ...] | None
+    a2a: A2APlan | None = None          # non-None iff matrix spec.counts
 
     # -- layout funnel -----------------------------------------------------
 
@@ -223,6 +333,7 @@ class CollectivePlan:
                        decompress=None) -> Array:
         """Paper Algorithm 1 under this plan (one ppermute per round)."""
         self._check_hooks(compress, decompress)
+        self._check_not_a2a("reduce_scatter")
         if self.backend in _BASELINE_RS:
             return _BASELINE_RS[self.backend](self, x)
         if self.p == 1:
@@ -240,6 +351,7 @@ class CollectivePlan:
 
     def allgather(self, x: Array) -> Array:
         """Algorithm 2's second phase (reversed skip stack) standalone."""
+        self._check_not_a2a("allgather")
         if self.backend in _BASELINE_AG:
             return _BASELINE_AG[self.backend](self, x)
         if self.p == 1:
@@ -260,10 +372,18 @@ class CollectivePlan:
 
     def alltoall(self, x: Array) -> Array:
         """All-to-all by concatenation (paper §4): Algorithm 1 with ⊕ =
-        concat.  Circulant kinds only; uniform blocks only."""
-        if self.spec.kind != "circulant":
-            raise ValueError(f"alltoall needs kind='circulant', "
-                             f"got {self.spec.kind!r}")
+        concat.
+
+        Uniform form (``counts=None``): ``x`` is ``(p, blk, *rest)``, row
+        j is this rank's payload for rank j; returns the same shape with
+        row j the payload FROM rank j.  Ragged form (p×p ``counts``
+        matrix, MPI_Alltoallv): ``x`` is ``(in_height, *rest)`` — this
+        rank's payload rows concatenated in destination order in rows
+        ``[0, send_total[r])`` — and the result is ``(out_height, *rest)``
+        with the received rows concatenated in source order, zeroed past
+        this rank's receive total.  Backends come from the ``_A2A_IMPLS``
+        registry (jnp / fused / alltoallv / xla baseline).
+        """
         if self.spec.wired:
             raise NotImplementedError(
                 "alltoall does not support wire_dtype (blocks hop through "
@@ -271,14 +391,24 @@ class CollectivePlan:
                 "the error)")
         if self.layout is not None:
             raise NotImplementedError(
-                "alltoall does not support non-uniform counts")
+                "alltoall does not support flat (Corollary 3) counts; "
+                "pass a p×p per-pair counts matrix for alltoallv")
+        impl = _A2A_IMPLS.get(self.backend)
+        if impl is None:
+            raise ValueError(
+                f"backend {self.backend!r} does not implement alltoall; "
+                f"have {sorted(_A2A_IMPLS)}")
         if self.p == 1:
             return x
-        if self.backend.startswith("fused"):
-            return _a2a_fused(self, x)
-        return _a2a_jnp(self, x)
+        return impl(self, x)
 
     # -- validation helpers ------------------------------------------------
+
+    def _check_not_a2a(self, fn: str) -> None:
+        if self.a2a is not None:
+            raise ValueError(
+                f"a p×p per-pair counts matrix is alltoall(v)-only; "
+                f"{fn} takes flat per-rank counts (Corollary 3)")
 
     def _check_hooks(self, compress, decompress) -> None:
         if compress is None and decompress is None:
@@ -317,6 +447,17 @@ def _resolve_backend(spec: CollectiveSpec) -> str:
     ``_resolve_op``/``_check_wire`` decision tables live on)."""
     if spec.kind in _BASELINE_KINDS:
         return spec.kind
+    if spec.counts_matrix:
+        if spec.wire_dtype is not None:
+            raise ValueError(
+                "alltoallv (per-pair counts) does not support wire_dtype "
+                "(blocks hop through intermediate ranks; requantizing per "
+                "hop would compound the error)")
+        if spec.use_fused_kernel is True:
+            raise ValueError(
+                "use_fused_kernel does not support per-pair counts (the "
+                "ragged wire is table-gathered, not slot-stacked)")
+        return "alltoallv"
     if spec.counts is not None:
         if spec.wire_dtype is not None:
             raise ValueError(
@@ -369,21 +510,25 @@ def _plan_cached(spec: CollectiveSpec, p: int, axis_name: str
     ag_send = tuple(tuple(range(0, pl.nblocks)) for pl in ag)
     ag_recv = tuple(tuple(range(pl.lo, pl.hi)) for pl in ag)
 
-    layout = rs_tables = ag_tables = None
+    layout = rs_tables = ag_tables = a2a = None
     if spec.counts is not None:
         if len(spec.counts) != p:
             raise ValueError(
                 f"counts has {len(spec.counts)} entries for axis size {p}")
-        layout = BlockLayout(counts=spec.counts)
-        rs_tables = tuple(layout.window_rows(w) for w in rs_send)
-        ag_tables = tuple(layout.window_rows(w) for w in ag_send)
+        if spec.counts_matrix:
+            a2a = _build_a2a(spec.counts, p, spec.schedule, spec.group)
+        else:
+            layout = BlockLayout(counts=spec.counts)
+            rs_tables = tuple(layout.window_rows(w) for w in rs_send)
+            ag_tables = tuple(layout.window_rows(w) for w in ag_send)
 
     return CollectivePlan(
         spec=spec, p=p, axis_name=axis_name, backend=backend,
         skips=tuple(pl.skip for pl in rs), rs_rounds=rs, ag_rounds=ag,
         rs_send_blocks=rs_send, rs_recv_blocks=rs_recv,
         ag_send_blocks=ag_send, ag_recv_blocks=ag_recv,
-        layout=layout, rs_row_tables=rs_tables, ag_row_tables=ag_tables)
+        layout=layout, rs_row_tables=rs_tables, ag_row_tables=ag_tables,
+        a2a=a2a)
 
 
 def plan(spec: CollectiveSpec | None = None, p: int | None = None,
@@ -667,6 +812,56 @@ def _a2a_fused(plan: CollectivePlan, x: Array) -> Array:
     return out.reshape(p, *blk_shape)
 
 
+def _a2a_v(plan: CollectivePlan, x: Array) -> Array:
+    """Ragged alltoallv over the per-pair counts matrix.
+
+    Same table discipline as the Corollary 3 reduce-scatter: the buffer
+    stays in ABSOLUTE (src, dst) pair order, round k gathers this rank's
+    hopping rows through ``a2a.round_tables[k]`` into one fixed-width
+    wire buffer (width = the worst windowed count sum over ranks),
+    ppermutes it once, and scatter-SETS the received rows through the
+    sender's view of the same table (no ⊕ — payloads move verbatim, so
+    any dtype works).  Exactly one collective-permute per round —
+    ``ceil(log2 p)`` for the optimal schedules, ragged counts included.
+
+    Input ``(in_height, *rest)``: rank r's payload rows, concatenated in
+    destination order, in rows ``[0, send_total[r])``.  Output
+    ``(out_height, *rest)``: received rows concatenated in source order,
+    zeroed past ``recv_total[r]`` (SPMD shapes are rank-invariant;
+    callers slice with their static count when they know it).
+    """
+    a2a, p = plan.a2a, plan.p
+    if x.shape[0] != a2a.in_height:
+        raise ValueError(
+            f"input has {x.shape[0]} rows, counts matrix needs "
+            f"in_height={a2a.in_height} (= max per-rank send total)")
+    r = lax.axis_index(plan.axis_name)
+    blk_shape = x.shape[1:]
+    x2 = x.reshape(a2a.in_height, -1)
+    cols = x2.shape[1]
+    # Input sentinel row (read by seed padding) and buffer sentinel row
+    # (written by wire padding, read by gather padding; never data).
+    xpad = jnp.concatenate([x2, jnp.zeros((1, cols), x2.dtype)], axis=0)
+    buf = jnp.zeros((a2a.total + 1, cols), x2.dtype)
+    buf = buf.at[_take_row(a2a.seed_dst, r)].set(
+        jnp.take(xpad, _take_row(a2a.seed_src, r), axis=0))
+    for k, pl in enumerate(plan.rs_rounds):
+        table = a2a.round_tables[k]
+        send_rows = _take_row(table, r)
+        payload = jnp.take(buf, send_rows, axis=0)
+        T = compat.ppermute(payload, plan.axis_name, _fwd_perm(p, pl.skip))
+        # Sender (r - skip) gathered exactly the rows this rank must
+        # store — both address the same absolute pair layout, so the
+        # receive table IS the sender's row of the send table.
+        recv_rows = _take_row(table, (r - pl.skip) % p)
+        buf = buf.at[recv_rows].set(T)
+    out = jnp.take(buf, _take_row(a2a.out_rows, r), axis=0)
+    cnt = _take_row(np.asarray(a2a.recv_total, np.int32), r)
+    mask = jnp.arange(a2a.out_height) < cnt
+    out = jnp.where(mask.reshape(-1, *([1] * (out.ndim - 1))), out, 0)
+    return out.reshape(a2a.out_height, *blk_shape)
+
+
 # ---------------------------------------------------------------------------
 # Non-uniform counts (paper Corollary 3) — gather/scatter over row tables
 # ---------------------------------------------------------------------------
@@ -818,6 +1013,15 @@ _BASELINE_AR = {
 _BASELINE_AG = {
     "xla": _baseline("xla_allgather"),
 }
+#: alltoall registry — the uniform circulant loops (lifted from the old
+#: special cases in CollectivePlan.alltoall), the ragged table backend,
+#: and XLA's native all-to-all as the A/B baseline.
+_A2A_IMPLS = {
+    "jnp": _a2a_jnp,
+    "fused": _a2a_fused,
+    "alltoallv": _a2a_v,
+    "xla": _baseline("xla_alltoall"),
+}
 
 #: backend registry — what plan() can resolve a spec onto, and which
 #: collectives each backend implements (introspection for the CI gate
@@ -828,7 +1032,8 @@ BACKENDS: dict[str, tuple[str, ...]] = {
     "jnp+int8": ("reduce_scatter", "allgather", "allreduce"),
     "fused+int8": ("reduce_scatter", "allgather", "allreduce"),
     "nonuniform": ("reduce_scatter", "allgather", "allreduce"),
+    "alltoallv": ("alltoall",),
     "ring": ("reduce_scatter", "allreduce"),
     "recursive_halving": ("reduce_scatter",),
-    "xla": ("reduce_scatter", "allgather", "allreduce"),
+    "xla": ("reduce_scatter", "allgather", "allreduce", "alltoall"),
 }

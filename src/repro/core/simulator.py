@@ -29,6 +29,12 @@ from .schedule import (
     reduce_scatter_plan,
 )
 
+__all__ = [
+    "CommStats", "simulate_reduce_scatter", "simulate_allgather",
+    "simulate_allreduce", "simulate_alltoall", "simulate_alltoallv",
+    "ref_reduce_scatter", "ref_allreduce", "ref_alltoall",
+]
+
 Op = Callable[[np.ndarray, np.ndarray], np.ndarray]
 
 
@@ -186,6 +192,10 @@ def simulate_alltoall(
     (source_rank, payload) pairs and ⊕ concatenates lists; at the end,
     processor r's W is the list of p payloads addressed to it.
 
+    Blocks may have ANY shape per (src, dst) pair — including empty —
+    so this is also the alltoallv (MPI_Alltoallv) oracle; see
+    :func:`simulate_alltoallv`.
+
     Round count is ceil(log2 p) (optimal); volume is amplified (blocks
     travel multiple hops) — the known Bruck trade-off, reported in stats.
     """
@@ -218,9 +228,33 @@ def simulate_alltoall(
     return out, stats
 
 
+def simulate_alltoallv(
+    inputs: Sequence[Sequence[np.ndarray]],
+    schedule: str = "halving",
+) -> tuple[list[list[np.ndarray]], CommStats]:
+    """Ragged alltoall oracle: ``inputs[src][dst]`` is the (arbitrarily
+    sized, possibly empty) payload src sends to dst.  Round structure is
+    identical to :func:`simulate_alltoall` (which already moves payloads
+    verbatim); this wrapper only asserts the round count — Theorem 1's
+    ``rounds`` survive ragged per-pair counts unchanged."""
+    p = len(inputs)
+    out, stats = simulate_alltoall(inputs, schedule=schedule)
+    assert stats.rounds == len(get_skips(p, schedule)), \
+        (stats.rounds, p, schedule)
+    return out, stats
+
+
 # ---------------------------------------------------------------------------
 # Reference "one-shot" answers for oracle comparisons
 # ---------------------------------------------------------------------------
+
+def ref_alltoall(inputs) -> list[list[np.ndarray]]:
+    """Host ground truth for alltoall(v): a transpose of the per-pair
+    payload matrix — ``out[r][j] = inputs[j][r]``."""
+    p = len(inputs)
+    return [[np.array(inputs[j][r], copy=True) for j in range(p)]
+            for r in range(p)]
+
 
 def ref_reduce_scatter(inputs, op=np.add):
     p = len(inputs)

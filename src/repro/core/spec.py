@@ -63,7 +63,10 @@ class CollectiveSpec:
                       ``reduce_scatter`` consumes a ``sum(counts)``-row
                       input and returns a ``max(counts)``-row block
                       (rows past this rank's count zeroed); ``allgather``
-                      / ``allreduce`` invert that layout.
+                      / ``allreduce`` invert that layout.  A NESTED p×p
+                      tuple is the alltoall(v) flavor: ``counts[src][dst]``
+                      rows travel from ``src`` to ``dst`` (MPI_Alltoallv
+                      semantics; consumed only by ``plan.alltoall``).
     """
 
     kind: str = "circulant"
@@ -86,17 +89,29 @@ class CollectiveSpec:
         if self.counts is not None:
             if self.kind != "circulant":
                 raise ValueError(
-                    f"counts= (Corollary 3) needs kind='circulant', "
-                    f"got {self.kind!r}")
-            counts = tuple(int(c) for c in self.counts)
-            if any(c < 0 for c in counts):
+                    f"counts= (Corollary 3 / alltoallv) needs "
+                    f"kind='circulant', got {self.kind!r}")
+            rows = list(self.counts)
+            if rows and hasattr(rows[0], "__len__"):
+                # p×p per-pair matrix (alltoallv): counts[src][dst].
+                counts = tuple(tuple(int(c) for c in row) for row in rows)
+                if any(len(row) != len(counts) for row in counts):
+                    raise ValueError(
+                        f"counts matrix must be square (p×p), got row "
+                        f"lengths {[len(r) for r in counts]} for "
+                        f"{len(counts)} rows")
+                flat = [c for row in counts for c in row]
+            else:
+                counts = tuple(int(c) for c in rows)
+                flat = list(counts)
+            if any(c < 0 for c in flat):
                 raise ValueError(f"counts must be non-negative, got {counts}")
-            if sum(counts) == 0:
+            if sum(flat) == 0:
                 raise ValueError(
                     f"counts must have at least one nonzero entry, "
                     f"got {counts}")
             # Normalize so specs hash/compare by value regardless of the
-            # caller's integer types (np.int64 vs int).
+            # caller's integer/container types (np.int64 vs int, lists).
             object.__setattr__(self, "counts", counts)
 
     # -- convenience -------------------------------------------------------
@@ -108,6 +123,11 @@ class CollectiveSpec:
     @property
     def wired(self) -> bool:
         return self.wire_dtype is not None
+
+    @property
+    def counts_matrix(self) -> bool:
+        """True when ``counts`` is the p×p per-pair (alltoallv) form."""
+        return self.counts is not None and isinstance(self.counts[0], tuple)
 
     @property
     def label(self) -> str:
@@ -122,7 +142,8 @@ class CollectiveSpec:
             if self.wire_dtype:
                 bits.append(f"wire={self.wire_dtype}")
             if self.counts is not None:
-                bits.append(f"counts={len(self.counts)}")
+                tag = "a2av" if self.counts_matrix else "counts"
+                bits.append(f"{tag}={len(self.counts)}")
         return ":".join(bits)
 
 

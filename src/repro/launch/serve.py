@@ -24,11 +24,35 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=[None, "global", "rowwise", "ep"],
+                    help="MoE dispatch layout (MoE archs only); 'ep' "
+                         "serves with experts sharded over --ep-devices "
+                         "ranks, exchanging dispatch buffers via the "
+                         "circulant alltoall plan")
+    ap.add_argument("--ep-devices", type=int, default=2,
+                    help="mesh size for --moe-dispatch ep")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.scale_down:
         cfg = cfg.scaled_down()
+    mesh = None
+    if args.moe_dispatch is not None:
+        if not cfg.is_moe:
+            raise SystemExit(
+                f"--moe-dispatch given but {args.arch} is not a MoE arch")
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, moe_dispatch=args.moe_dispatch)
+        if args.moe_dispatch == "ep":
+            if args.ep_devices > jax.device_count():
+                raise SystemExit(
+                    f"--ep-devices {args.ep_devices} needs that many "
+                    f"devices, have {jax.device_count()} (set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count="
+                    f"{args.ep_devices})")
+            from repro.launch import mesh as meshlib
+            mesh = meshlib.make_mesh((args.ep_devices,), (cfg.ep_axis,))
     model = build(cfg, recipe=None, remat=False)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
@@ -45,7 +69,7 @@ def main(argv=None):
 
     engine = ServeEngine(model=model, params=params,
                          max_len=args.prompt_len + args.max_new,
-                         temperature=args.temperature)
+                         temperature=args.temperature, mesh=mesh)
     t0 = time.time()
     out = engine.generate(prompts, args.max_new, extras=extras)
     dt = time.time() - t0

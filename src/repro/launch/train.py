@@ -62,6 +62,12 @@ def main(argv=None):
                     choices=["auto", "on", "off"],
                     help="fused Pallas round kernel for the circulant "
                          "collectives (auto = Pallas on TPU, jnp on CPU)")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=[None, "global", "rowwise", "ep"],
+                    help="MoE dispatch layout (MoE archs only); 'ep' "
+                         "shards experts over the model axis and "
+                         "exchanges the dispatch buffer via the circulant "
+                         "alltoall plan + routed counts via alltoallv")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--warmup", type=int, default=20)
     ap.add_argument("--ckpt-dir", default=None)
@@ -74,6 +80,12 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.scale_down:
         cfg = cfg.scaled_down()
+    if args.moe_dispatch is not None:
+        if not cfg.is_moe:
+            raise SystemExit(
+                f"--moe-dispatch given but {args.arch} is not a MoE arch")
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, moe_dispatch=args.moe_dispatch)
     d, m = (int(x) for x in args.mesh.split("x"))
     mode = args.mode or ("single" if d * m == 1 else "zero1")
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=args.warmup,

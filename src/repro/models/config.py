@@ -35,7 +35,10 @@ class ModelConfig:
     experts_per_token: int = 0
     capacity_factor: float = 1.25
     router_aux_coef: float = 0.01
-    moe_dispatch: str = "global"   # global | rowwise (§Perf C)
+    moe_dispatch: str = "global"   # global | rowwise (§Perf C) | ep
+    #                                (expert parallel via circulant
+    #                                alltoall; needs ep_axis manual)
+    ep_axis: str = "model"         # mesh axis ep dispatch exchanges over
 
     # --- SSM / hybrid ---
     ssm_state: int = 0             # mamba state size (hymba: 16)

@@ -1,0 +1,339 @@
+"""MoE dispatch stages — router → dispatch → expert FFN → combine.
+
+One set of composable stages behind every ``cfg.moe_dispatch`` mode:
+
+  global    one flat token pool (the stages applied directly);
+  rowwise   per-sequence pools (§Perf C) — the SAME stages under
+            ``jax.vmap`` over the batch dim, so argsort/cumsum/scatter
+            keep a batch axis and GSPMD never gathers the full token set
+            to one partition;
+  ep        expert parallelism over a MANUAL mesh axis (``cfg.ep_axis``):
+            the local ``(E, C, d)`` dispatch buffer is exchanged with the
+            circulant alltoall plan (paper §4 — ``ceil(log2 p)``
+            collective-permutes per exchange) and the ragged per-expert
+            routed-token counts with the alltoallv table backend, experts
+            run on their owner rank, and results return by the reverse
+            exchange.
+
+The stages all use SPMD-friendly static shapes: tokens are argsorted by
+expert assignment, positioned within their expert via a counts/starts
+prefix sum, dropped beyond capacity ``C = min(ceil(cf·N·K/E) rounded up
+to 8, N·K)``, gathered into an ``(E, C, d)`` buffer, run through batched
+expert FFNs (one einsum), and scatter-added back weighted by their
+router gates — the standard "dropping" MoE of production JAX LLM stacks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro import compat
+from repro.core.spec import CollectiveSpec
+from . import sharding as shd
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    """Per-expert slot count for an ``n_tokens`` pool.
+
+    ``ceil(cf · N · K / E)`` rounded up to a multiple of 8 (TPU lane
+    friendliness), clamped to ``N·K`` — a pool can never fill more than
+    N·K slots total, so tiny pools (N·K < E) must not blow up to an
+    all-padding buffer — and to at least 1.
+    """
+    n, k = n_tokens, cfg.experts_per_token
+    c = int(cfg.capacity_factor * n * k / cfg.n_experts) + 1
+    c = max(8, -(-c // 8) * 8)  # round up to multiple of 8
+    return max(1, min(c, n * k))
+
+
+# ---------------------------------------------------------------------------
+# Stages (flat token pool; vmap for per-sequence pools)
+# ---------------------------------------------------------------------------
+
+def route(router_w, cfg, x):
+    """Router stage.  ``x``: (*B, n, d) → (gate (*B, n, K) renormalized,
+    expert_idx (*B, n, K), probs (*B, n, E) fp32)."""
+    logits = x.astype(jnp.float32) @ router_w
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    return gate, expert_idx, probs
+
+
+def aux_loss(cfg, probs, expert_idx):
+    """Switch-style load-balancing loss, averaged over leading batch dims
+    (matches the historical per-pool scatter-add numerics: the one-hot
+    token counts are exact integers, so the fraction is bitwise equal)."""
+    e = cfg.n_experts
+    n, k = expert_idx.shape[-2], expert_idx.shape[-1]
+    frac = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32).sum((-3, -2)) \
+        / (n * k)
+    mean_probs = probs.mean(-2)
+    per_pool = e * jnp.sum(frac * mean_probs, axis=-1)
+    return jnp.mean(per_pool) * cfg.router_aux_coef
+
+
+def dispatch_tables(cfg, expert_idx, gate, cap: int):
+    """Sort-based capacity dispatch over ONE flat pool.
+
+    ``expert_idx``/``gate``: (n, K).  Returns ``(slot_token, slot_gate,
+    routed)`` where ``slot_token[e*cap + c]`` is the token filling slot c
+    of expert e (``n`` = the padded trash token when empty),
+    ``slot_gate`` its renormalized router weight, and ``routed[e]`` the
+    number of slots expert e actually filled (counts clipped to ``cap`` —
+    the per-expert token loads the ep mode ships over alltoallv).
+    """
+    n, k = expert_idx.shape
+    e = cfg.n_experts
+    flat_e = expert_idx.reshape(-1)                        # (n*K,)
+    sort_idx = jnp.argsort(flat_e)                         # stable
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.zeros(e, jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(n * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)  # trash slot
+    token_of = (sort_idx // k).astype(jnp.int32)
+    gate_of = gate.reshape(-1)[sort_idx]
+
+    slot_token = jnp.full(e * cap + 1, n, jnp.int32).at[slot].set(token_of)
+    slot_gate = jnp.zeros(e * cap + 1, jnp.float32).at[slot].set(gate_of)
+    return (slot_token[:-1], slot_gate[:-1],
+            jnp.minimum(counts, cap).astype(jnp.int32))
+
+
+def gather_tokens(xf, slot_token, e: int, cap: int):
+    """Fill the (E, C, d) dispatch buffer: slot → token row (the trash
+    token gathers a zero row, so unfilled slots are exactly zero)."""
+    n, d = xf.shape
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    return xpad[slot_token].reshape(e, cap, d)
+
+
+def expert_ffn(p, h):
+    """Batched expert SwiGLU.  ``h``: (*B, E, C, d) against stacked
+    expert weights (E, d, ff) — the E axis must line up with the weights'
+    leading axis (ep passes its local expert slice)."""
+    g = jax.nn.silu(jnp.einsum("...ecd,edf->...ecf", h, p["w_gate"]))
+    u = jnp.einsum("...ecd,edf->...ecf", h, p["w_up"])
+    return jnp.einsum("...ecf,efd->...ecd", g * u, p["w_down"])
+
+
+def combine(y, slot_token, slot_gate, n: int):
+    """Scatter-add expert outputs back to their tokens, gate-weighted.
+    ``y``: (E, C, d) flat-pool expert outputs → (n, d)."""
+    e_cap, d = y.shape[0] * y.shape[1], y.shape[2]
+    yf = y.reshape(e_cap, d) * slot_gate[:, None].astype(y.dtype)
+    return jnp.zeros((n + 1, d), y.dtype).at[slot_token].add(yf)[:n]
+
+
+# ---------------------------------------------------------------------------
+# moe_dispatch="global" — one flat pool
+# ---------------------------------------------------------------------------
+
+def moe_ffn_global(p, cfg, x, recipe=None):
+    b, s, d = x.shape
+    n = b * s
+    e = cfg.n_experts
+    xf = x.reshape(n, d)
+    gate, expert_idx, probs = route(p["router"], cfg, xf)
+    aux = aux_loss(cfg, probs, expert_idx)
+    cap = capacity(cfg, n)
+    slot_token, slot_gate, _ = dispatch_tables(cfg, expert_idx, gate, cap)
+    h = gather_tokens(xf, slot_token, e, cap)              # (E, C, d)
+    if recipe is not None:
+        h = shd.constrain(h, jax.sharding.PartitionSpec(
+            recipe.model_axis, None, None))
+    y = expert_ffn(p, h)                                   # (E, C, d)
+    out = combine(y, slot_token, slot_gate, n)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# moe_dispatch="rowwise" — per-sequence pools (§Perf C) = vmapped stages
+# ---------------------------------------------------------------------------
+
+def moe_ffn_rowwise(p, cfg, x, recipe=None):
+    """Per-sequence dispatch: every sort/positioning/scatter op carries
+    the batch dim (the stages under ``vmap``), which stays sharded over
+    the data axes — XLA's sort on a sharded dim otherwise all-gathers the
+    full token pool.  Capacity is per sequence: ``C_b = capacity(S)``.
+    Token dropping is per-sequence (slightly stricter than global
+    dropping; same expected load)."""
+    b, s, d = x.shape
+    e = cfg.n_experts
+    cap = capacity(cfg, s)
+
+    gate, expert_idx, probs = route(p["router"], cfg, x)   # (B, S, ·)
+    aux = aux_loss(cfg, probs, expert_idx)
+
+    tables = jax.vmap(functools.partial(dispatch_tables, cfg, cap=cap))
+    slot_token, slot_gate, _ = tables(expert_idx, gate)
+    h = jax.vmap(functools.partial(gather_tokens, e=e, cap=cap))(
+        x, slot_token)                                     # (B, E, C, d)
+    if recipe is not None:
+        h = shd.constrain(h, jax.sharding.PartitionSpec(
+            recipe.batch_axes, recipe.model_axis, None, None))
+    y = expert_ffn(p, h)                                   # (B, E, C, d)
+    out = jax.vmap(functools.partial(combine, n=s))(y, slot_token, slot_gate)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# moe_dispatch="ep" — expert parallelism over a manual mesh axis
+# ---------------------------------------------------------------------------
+
+def expert_owners(e: int, pe: int) -> tuple[int, ...]:
+    """Experts owned per rank (contiguous blocks, low ranks get the
+    remainder): ragged when ``e % pe != 0`` — the static per-pair
+    raggedness the counts exchange ships over alltoallv."""
+    base, rem = divmod(e, pe)
+    return tuple(base + (j < rem) for j in range(pe))
+
+
+def ep_collective_specs(cfg, pe: int) -> tuple[CollectiveSpec, ...]:
+    """The CollectiveSpecs ep dispatch executes on axis ``cfg.ep_axis``
+    (exposed so train-step builders can fail fast and pre-warm the plan
+    cache): the uniform circulant alltoall moving the padded dispatch
+    buffer (out and back) and the ragged alltoallv moving the per-expert
+    routed-token counts."""
+    own = expert_owners(cfg.n_experts, pe)
+    counts = tuple(own for _ in range(pe))   # [src][dst] = experts of dst
+    return (CollectiveSpec(), CollectiveSpec(counts=counts))
+
+
+def _ep_pad_table(own: tuple[int, ...], pe: int, own_max: int) -> np.ndarray:
+    """(pe, pe·own_max) gather table: padded (src, local-expert) slot →
+    row of the rank's ragged alltoallv output (src-major, ``own[r]``
+    real experts per src), sentinel = the zero row appended past it."""
+    out_h = max(pe * o for o in own)
+    tab = np.full((pe, pe * own_max), out_h, dtype=np.int32)
+    for r in range(pe):
+        for src in range(pe):
+            tab[r, src * own_max: src * own_max + own[r]] = np.arange(
+                src * own[r], (src + 1) * own[r], dtype=np.int32)
+    return tab
+
+
+def _ep_expert_grid(own: tuple[int, ...], e: int) -> tuple[np.ndarray,
+                                                           np.ndarray]:
+    """Static index maps between the real contiguous expert numbering and
+    the owner-padded grid (owner j holds padded slots [j·own_max,
+    (j+1)·own_max), the first ``own[j]`` of them real).
+
+    Returns ``(pad_idx, inv_idx)``: ``pad_idx[slot]`` is the real expert
+    filling a padded slot (sentinel ``e`` — a zero row — for phantom
+    slots), ``inv_idx[expert]`` the padded slot of a real expert.
+    """
+    pe, own_max = len(own), max(own)
+    off = np.concatenate([[0], np.cumsum(own)]).astype(np.int32)
+    pad_idx = np.full(pe * own_max, e, dtype=np.int32)
+    inv_idx = np.zeros(e, dtype=np.int32)
+    for j in range(pe):
+        for i in range(own[j]):
+            pad_idx[j * own_max + i] = off[j] + i
+            inv_idx[off[j] + i] = j * own_max + i
+    return pad_idx, inv_idx
+
+
+def moe_ffn_ep(p, cfg, x, recipe=None):
+    """Expert-parallel MoE dispatch over the manual axis ``cfg.ep_axis``.
+
+    Must run inside a shard_map region binding that axis, with the expert
+    weights replicated over it (each rank slices its own experts).  Per
+    layer call: route + dispatch locally, exchange the capacity-padded
+    ``(E_pad, C, d)`` buffer to the expert owners with the circulant
+    alltoall plan (``ceil(log2 p)`` collective-permutes), exchange the
+    ragged per-expert routed-token counts with the alltoallv backend
+    (``e % p`` experts make the per-pair counts genuinely non-uniform),
+    run the local experts' FFN on their gathered slots (masked to the
+    routed counts, so phantom/over-capacity slots are exactly zero),
+    reverse the exchange, and combine locally.  The aux loss psums the
+    per-rank router statistics, so it equals the global-pool loss.
+    """
+    axis = cfg.ep_axis
+    try:
+        pe = compat.axis_size(axis)
+    except Exception as err:  # NameError-ish: axis not bound
+        raise ValueError(
+            f"moe_dispatch='ep' needs mesh axis {axis!r} bound as a MANUAL "
+            f"axis (run inside shard_map; see ModelConfig.ep_axis)"
+        ) from err
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.experts_per_token
+    xf = x.reshape(n, d)
+
+    gate, expert_idx, probs = route(p["router"], cfg, xf)
+    # Aux loss on the GLOBAL pool statistics: the load fraction and mean
+    # router probs are linear in the tokens, so pmean-ing them before the
+    # product reproduces the single-pool loss exactly.
+    frac = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32).sum((0, 1)) \
+        / (n * k)
+    mean_probs = probs.mean(0)
+    frac = lax.pmean(frac, axis)
+    mean_probs = lax.pmean(mean_probs, axis)
+    aux = e * jnp.sum(frac * mean_probs) * cfg.router_aux_coef
+
+    cap = capacity(cfg, n)
+    slot_token, slot_gate, routed = dispatch_tables(cfg, expert_idx, gate,
+                                                    cap)
+    h = gather_tokens(xf, slot_token, e, cap)              # (E, C, d)
+
+    own = expert_owners(e, pe)
+    own_max = max(own)
+    buf_spec, cnt_spec = ep_collective_specs(cfg, pe)
+    from repro.core.plan import plan as _plan
+    buf_plan = _plan(buf_spec, p=pe, axis_name=axis)
+    cnt_plan = _plan(cnt_spec, p=pe, axis_name=axis)
+
+    # --- exchange routed counts (ragged alltoallv: one int32 row per
+    # REAL expert, destination-ordered because ownership is contiguous —
+    # every rank sends exactly e rows, so the wire input needs no pad).
+    assert cnt_plan.a2a.in_height == e, (cnt_plan.a2a.in_height, e)
+    cnt_in = routed.reshape(e, 1)
+    cnt_out = cnt_plan.alltoall(cnt_in)        # (max_r pe·own_r, 1)
+    # Lay the ragged (src-major) count rows into the padded (pe, own_max)
+    # grid; phantom experts read the appended zero row.
+    cz = jnp.concatenate([cnt_out[:, 0], jnp.zeros((1,), jnp.int32)])
+    r = lax.axis_index(axis)
+    pad_tab = _ep_pad_table(own, pe, own_max)
+    cnt_grid = jnp.take(cz, lax.dynamic_index_in_dim(
+        jnp.asarray(pad_tab), r, axis=0, keepdims=False))  # (pe·own_max,)
+    cnt_grid = cnt_grid.reshape(pe, own_max)   # [src, local expert]
+
+    # --- exchange the dispatch buffer (uniform alltoall over the
+    # owner-padded expert grid; phantom slots carry zero rows).
+    pad_idx, inv_idx = _ep_expert_grid(own, e)
+    hz = jnp.concatenate([h, jnp.zeros((1, cap, d), h.dtype)], axis=0)
+    blocks = hz[pad_idx].reshape(pe, own_max * cap, d)
+    got = buf_plan.alltoall(blocks)            # row j = from rank j
+    hloc = got.reshape(pe, own_max, cap, d)    # [src, local expert, slot]
+    # Mask slots past each (src, expert) routed count: over-capacity and
+    # phantom slots are exactly zero entering the FFN.
+    mask = jnp.arange(cap) < cnt_grid[..., None]
+    hloc = jnp.where(mask[..., None], hloc, 0).astype(hloc.dtype)
+    hloc = jnp.swapaxes(hloc, 0, 1)            # (own_max, pe, C, d)
+
+    # --- local experts: this rank's contiguous weight slice (clip-mode
+    # take — phantom positions borrow some real expert's weights but only
+    # ever see the zero rows masked above, so their outputs are zero).
+    off = np.concatenate([[0], np.cumsum(own)]).astype(np.int32)
+    start = lax.dynamic_index_in_dim(jnp.asarray(off[:pe]), r, keepdims=False)
+    w_idx = start + jnp.arange(own_max)
+    w_loc = {key: jnp.take(p[key], w_idx, axis=0)
+             for key in ("w_gate", "w_up", "w_down")}
+    y = expert_ffn(w_loc, hloc.reshape(own_max, pe * cap, d))
+    y = y.reshape(own_max, pe, cap, d)
+
+    # --- reverse exchange: owners return slots to their source ranks.
+    back = buf_plan.alltoall(
+        jnp.swapaxes(y, 0, 1).reshape(pe, own_max * cap, d))
+    y_all = back.reshape(pe * own_max, cap, d)[inv_idx]  # padded → real
+    out = combine(y_all, slot_token, slot_gate, n)
+    return out.reshape(b, s, d), aux

@@ -1,23 +1,26 @@
-"""Token-choice top-k MoE with sort-based capacity dispatch.
+"""Token-choice top-k MoE — parameter init + the dispatch-mode router.
 
-SPMD-friendly static shapes throughout: tokens are argsorted by expert
-assignment, positioned within their expert via a counts/starts prefix sum,
-dropped beyond capacity C = ceil(cf * N * K / E), gathered into an
-(E, C, d) buffer, run through batched expert FFNs (one einsum), and
-scatter-added back weighted by their router gates.  This is the standard
-"dropping" MoE used by production JAX LLM stacks; EP shards the (E, ...)
-dimension over the model axis.
+The dispatch pipeline itself (router → dispatch → expert FFN → combine)
+lives in :mod:`repro.models.dispatch` as composable stages; this module
+keeps the historical entry points (``init_moe`` / ``moe_ffn`` /
+``moe_ffn_rowwise``) and selects the layout from ``cfg.moe_dispatch``:
 
-Beyond-paper integration (§Perf): when the mesh axis is manual, the
-(E, C, d) dispatch buffer can be exchanged with ``circulant_alltoall``
-(paper §4) instead of GSPMD's all-to-all.
+  global    one flat token pool per call (SPMD-friendly static shapes);
+  rowwise   per-sequence pools (§Perf C) — the same stages vmapped over
+            the batch dim so GSPMD never gathers the full token set;
+  ep        expert parallelism over the manual mesh axis ``cfg.ep_axis``:
+            the (E, C, d) dispatch buffer is exchanged with the circulant
+            alltoall plan (paper §4, ceil(log2 p) collective-permutes)
+            and the ragged per-expert routed-token counts with the
+            alltoallv table backend — see ``dispatch.moe_ffn_ep``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from . import sharding as shd
+from .dispatch import (capacity, moe_ffn_ep, moe_ffn_global,  # noqa: F401
+                       moe_ffn_rowwise)
 from .layers import dense_init
 
 
@@ -33,123 +36,25 @@ def init_moe(key, cfg, dtype):
 
 
 def _capacity(cfg, n_tokens: int) -> int:
-    c = int(cfg.capacity_factor * n_tokens * cfg.experts_per_token
-            / cfg.n_experts) + 1
-    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+    """Historical alias for :func:`repro.models.dispatch.capacity`."""
+    return capacity(cfg, n_tokens)
+
+
+_DISPATCH = {
+    "global": moe_ffn_global,
+    "rowwise": moe_ffn_rowwise,
+    "ep": moe_ffn_ep,
+}
 
 
 def moe_ffn(p, cfg, x, recipe=None):
     """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).  Dispatch layout
-    selected by cfg.moe_dispatch: 'global' (one token pool) or 'rowwise'
-    (§Perf C: per-sequence pools — argsort/cumsum/scatter stay batch-local,
-    so GSPMD never gathers the full token set to one partition)."""
-    if getattr(cfg, "moe_dispatch", "global") == "rowwise":
-        return moe_ffn_rowwise(p, cfg, x, recipe)
-    b, s, d = x.shape
-    n = b * s
-    e, k = cfg.n_experts, cfg.experts_per_token
-    xf = x.reshape(n, d)
-
-    # --- Router (fp32) ---
-    logits = xf.astype(jnp.float32) @ p["router"]          # (N, E)
-    probs = jax.nn.softmax(logits, axis=-1)
-    gate, expert_idx = jax.lax.top_k(probs, k)             # (N, K)
-    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
-
-    # Load-balancing aux loss (Switch-style).
-    frac_tokens = jnp.zeros(e).at[expert_idx.reshape(-1)].add(1.0) / (n * k)
-    mean_probs = probs.mean(0)
-    aux = e * jnp.sum(frac_tokens * mean_probs) * cfg.router_aux_coef
-
-    # --- Sort-based dispatch ---
-    cap = _capacity(cfg, n)
-    flat_e = expert_idx.reshape(-1)                        # (N*K,)
-    sort_idx = jnp.argsort(flat_e)                         # stable
-    sorted_e = flat_e[sort_idx]
-    counts = jnp.zeros(e, jnp.int32).at[flat_e].add(1)
-    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
-                              jnp.cumsum(counts)[:-1]])
-    pos_in_e = jnp.arange(n * k, dtype=jnp.int32) - starts[sorted_e]
-    keep = pos_in_e < cap
-    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)  # trash slot
-    token_of = (sort_idx // k).astype(jnp.int32)
-    gate_of = gate.reshape(-1)[sort_idx]
-
-    slot_token = jnp.full(e * cap + 1, n, jnp.int32).at[slot].set(token_of)
-    slot_gate = jnp.zeros(e * cap + 1, jnp.float32).at[slot].set(gate_of)
-    slot_token, slot_gate = slot_token[:-1], slot_gate[:-1]
-
-    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
-    h = xpad[slot_token].reshape(e, cap, d)                # (E, C, d)
-    if recipe is not None:
-        h = shd.constrain(h, jax.sharding.PartitionSpec(
-            recipe.model_axis, None, None))
-
-    # --- Batched expert SwiGLU ---
-    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, p["w_gate"]))
-    u = jnp.einsum("ecd,edf->ecf", h, p["w_up"])
-    y = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])     # (E, C, d)
-
-    # --- Combine ---
-    yf = y.reshape(e * cap, d) * slot_gate[:, None].astype(y.dtype)
-    out = jnp.zeros((n + 1, d), y.dtype).at[slot_token].add(yf)[:n]
-    return out.reshape(b, s, d), aux
-
-
-def moe_ffn_rowwise(p, cfg, x, recipe=None):
-    """Per-sequence dispatch (§Perf C): every sort/positioning/scatter op
-    carries the batch dim, which stays sharded over the data axes — XLA's
-    sort on a sharded dim otherwise all-gathers the full token pool.
-    Capacity is per sequence: C_b = ceil(cf * S * K / E).  Token dropping
-    is per-sequence (slightly stricter than global dropping; same expected
-    load)."""
-    b, s, d = x.shape
-    e, k = cfg.n_experts, cfg.experts_per_token
-    cap = _capacity(cfg, s)
-
-    logits = x.astype(jnp.float32) @ p["router"]              # (B, S, E)
-    probs = jax.nn.softmax(logits, axis=-1)
-    gate, expert_idx = jax.lax.top_k(probs, k)                # (B, S, K)
-    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
-
-    frac = jnp.zeros((b, e)).at[
-        jnp.arange(b)[:, None], expert_idx.reshape(b, -1)].add(1.0) / (s * k)
-    aux = e * jnp.mean(jnp.sum(frac * probs.mean(1), axis=-1)) \
-        * cfg.router_aux_coef
-
-    flat_e = expert_idx.reshape(b, s * k)                     # (B, S*K)
-    sort_idx = jnp.argsort(flat_e, axis=1)
-    sorted_e = jnp.take_along_axis(flat_e, sort_idx, axis=1)
-    counts = jnp.zeros((b, e), jnp.int32).at[
-        jnp.arange(b)[:, None], flat_e].add(1)
-    starts = jnp.concatenate(
-        [jnp.zeros((b, 1), jnp.int32), jnp.cumsum(counts, axis=1)[:, :-1]],
-        axis=1)
-    pos_in_e = (jnp.arange(s * k, dtype=jnp.int32)[None]
-                - jnp.take_along_axis(starts, sorted_e, axis=1))
-    keep = pos_in_e < cap
-    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)
-    token_of = (sort_idx // k).astype(jnp.int32)
-    gate_of = jnp.take_along_axis(gate.reshape(b, s * k), sort_idx, axis=1)
-
-    rows = jnp.arange(b)[:, None]
-    slot_token = jnp.full((b, e * cap + 1), s, jnp.int32
-                          ).at[rows, slot].set(token_of)[:, :-1]
-    slot_gate = jnp.zeros((b, e * cap + 1), jnp.float32
-                          ).at[rows, slot].set(gate_of)[:, :-1]
-
-    xpad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
-    h = jnp.take_along_axis(
-        xpad, slot_token[..., None], axis=1).reshape(b, e, cap, d)
-    if recipe is not None:
-        h = shd.constrain(h, jax.sharding.PartitionSpec(
-            recipe.batch_axes, recipe.model_axis, None, None))
-
-    g2 = jax.nn.silu(jnp.einsum("becd,edf->becf", h, p["w_gate"]))
-    u = jnp.einsum("becd,edf->becf", h, p["w_up"])
-    y = jnp.einsum("becf,efd->becd", g2 * u, p["w_down"])     # (B,E,C,d)
-
-    yf = (y.reshape(b, e * cap, d)
-          * slot_gate[..., None].astype(y.dtype))
-    out = jnp.zeros((b, s + 1, d), y.dtype).at[rows, slot_token].add(yf)[:, :s]
-    return out, aux
+    selected by ``cfg.moe_dispatch`` (global | rowwise | ep)."""
+    mode = getattr(cfg, "moe_dispatch", "global")
+    try:
+        fn = _DISPATCH[mode]
+    except KeyError:
+        raise ValueError(
+            f"unknown moe_dispatch {mode!r}; have {sorted(_DISPATCH)}"
+        ) from None
+    return fn(p, cfg, x, recipe)

@@ -4,6 +4,14 @@
 prefills once, then decodes greedily/temperature-sampled to max_new_tokens.
 ``build_serve_fns`` returns the jitted prefill/decode closures the launcher
 lowers in the dry-run (decode_32k / long_500k cells lower ``decode_fn``).
+
+With a ``mesh``, both closures run inside a fully-manual ``shard_map``
+binding every mesh axis — the serving route onto collectives that need a
+manual axis, e.g. MoE expert parallelism (``cfg.moe_dispatch='ep'``
+exchanges the dispatch buffer over ``cfg.ep_axis`` via the circulant
+alltoall plan).  Params and token batches stay replicated across the
+mesh (each rank slices its own experts inside the region), so the
+generated tokens are identical to the mesh-less path.
 """
 from __future__ import annotations
 
@@ -13,20 +21,33 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models import ModelApi
 
 
-def build_serve_fns(model: ModelApi, max_len: int):
-    @jax.jit
-    def prefill_fn(params, tokens, extras):
+def build_serve_fns(model: ModelApi, max_len: int, mesh=None):
+    def prefill(params, tokens, extras):
         return model.prefill(params, tokens, max_len, **extras)
 
-    @jax.jit
-    def decode_fn(params, cache, token, pos):
+    def decode(params, cache, token, pos):
         return model.decode_step(params, cache, token, pos)
 
-    return prefill_fn, decode_fn
+    if mesh is None:
+        return jax.jit(prefill), jax.jit(decode)
+
+    def wrap(fn, n_args):
+        # Fully-manual region, everything replicated: the axes exist only
+        # to bind names for the manual collectives (ep alltoall).  The
+        # replication checker cannot see through rank-indexed expert
+        # slices, hence check_vma=False.
+        return jax.jit(compat.shard_map(
+            fn, mesh=mesh,
+            in_specs=tuple(P() for _ in range(n_args)),
+            out_specs=P(), check_vma=False))
+
+    return wrap(prefill, 3), wrap(decode, 4)
 
 
 @dataclass
@@ -35,10 +56,11 @@ class ServeEngine:
     params: Any
     max_len: int
     temperature: float = 0.0
+    mesh: Any = None
 
     def __post_init__(self):
-        self.prefill_fn, self.decode_fn = build_serve_fns(self.model,
-                                                          self.max_len)
+        self.prefill_fn, self.decode_fn = build_serve_fns(
+            self.model, self.max_len, mesh=self.mesh)
 
     def generate(self, tokens: np.ndarray, max_new_tokens: int,
                  extras: dict | None = None, key=None) -> np.ndarray:

@@ -87,16 +87,34 @@ def build_zero1(model: ModelApi, mesh: Mesh, recipe: ShardingRecipe,
         _plan(sync.rs_spec(), p=mesh.shape[ax], axis_name=ax)
         _plan(sync.ag_spec(), p=mesh.shape[ax], axis_name=ax)
 
+    # Expert-parallel MoE dispatch exchanges over cfg.ep_axis INSIDE the
+    # step, so that axis must be manual too — and its alltoall(v) plans
+    # can fail fast / pre-warm here, like the grad-sync plans above.
+    ep = (model.cfg.is_moe
+          and getattr(model.cfg, "moe_dispatch", "global") == "ep")
+    if ep:
+        ep_axis = model.cfg.ep_axis
+        if ep_axis not in mesh.shape:
+            raise ValueError(
+                f"moe_dispatch='ep' exchanges over mesh axis {ep_axis!r}, "
+                f"which is not in mesh {dict(mesh.shape)}")
+        from repro.models.dispatch import ep_collective_specs
+        for sp in ep_collective_specs(model.cfg, mesh.shape[ep_axis]):
+            _plan(sp, p=mesh.shape[ep_axis], axis_name=ep_axis)
+
     # Inside the manual region the data axes are already per-shard: the
     # inner model must only constrain over the AUTO (model) axis.  On JAX
     # builds whose XLA cannot partition ppermutes inside a manual subgroup
     # (0.4.x — see compat.SUPPORTS_PARTIAL_MANUAL_COLLECTIVES) the whole
     # step instead runs manual over EVERY mesh axis: model-axis ranks hold
     # full replicas (TP constraints dropped), while the data-axis circulant
-    # collectives — the part under test — are unchanged.
+    # collectives — the part under test — are unchanged.  ep dispatch
+    # likewise needs its exchange axis manual, so it always takes the
+    # fully-manual route (expert weights replicated per rank; each rank
+    # slices its own experts inside the region).
     from dataclasses import replace as _dc_replace
     from repro.models import build as _build_model
-    if compat.SUPPORTS_PARTIAL_MANUAL_COLLECTIVES:
+    if compat.SUPPORTS_PARTIAL_MANUAL_COLLECTIVES and not ep:
         inner_recipe = _dc_replace(recipe, data_axes=())
         manual_axes = set(recipe.data_axes)
     else:

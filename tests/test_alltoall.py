@@ -1,0 +1,322 @@
+"""Alltoall(v) plan-layer tests — everything that needs NO devices:
+
+* ``alltoall_moves`` trajectory properties (delivery, distinct-skip
+  paths, Bruck volume == the simulator's per-rank block counters);
+* ``A2APlan`` table properties: round widths equal the analytic worst
+  windowed count sum, real rows partition per-entry hops, zero-count
+  pairs contribute no rows, output rows are the (src, r) pairs in source
+  order;
+* p=1 identity, spec validation for the counts matrix, the backend
+  registry entry, and the cost model's hop-amplified alltoall terms;
+* the ep helpers' static index maps (ragged expert ownership).
+
+The multi-device execution checks (fused-vs-jnp bitwise at p∈{2,3,5,8},
+bf16/int32 payloads, single-row blocks, alltoallv vs the simulator, and
+the MoE ep-vs-global parity) run in the ``tests/_a2a_checks.py``
+subprocess worker driven from the bottom of this file.
+"""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BACKENDS, CollectiveSpec, CommModel,
+                        a2a_round_entries, alltoall_moves,
+                        alltoallv_round_widths, ceil_log2, plan,
+                        t_alltoall, t_alltoallv, t_reduce_scatter)
+from repro.core import simulator as sim
+from repro.core.schedule import get_skips
+from tests._hypothesis_compat import given, settings, st
+
+SCHEDULES = ("halving", "power2", "fully_connected", "sqrt")
+AX = "x"
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+WORKER = os.path.join(HERE, "_a2a_checks.py")
+
+
+def _plan(p, **kw):
+    return plan(CollectiveSpec(**kw), p=p, axis_name=AX)
+
+
+def _matrix_cases():
+    return [
+        ((0, 2, 1), (1, 0, 2), (2, 1, 0)),               # ragged, zero diag
+        ((0, 0, 5, 0), (0, 0, 1, 0), (0, 0, 0, 0), (0, 0, 2, 0)),  # one rank
+        ((1, 1), (1, 1)),                                # uniform p=2
+        ((3,),),                                         # p=1
+        tuple(tuple((i * 3 + j) % 4 for j in range(5)) for i in range(5)),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Trajectories
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=2, max_value=48), st.sampled_from(SCHEDULES))
+def test_moves_deliver_every_offset(p, schedule):
+    """Every destination offset's hop path is a subset of DISTINCT skips
+    summing to the offset (Corollary 2's decomposition, walked by the
+    send windows), and the round count matches the schedule."""
+    moves = alltoall_moves(p, schedule)
+    assert len(moves) == len(get_skips(p, schedule))
+    path: dict[int, list[int]] = {d: [] for d in range(p)}
+    for skip, moved in moves:
+        for d, shift in moved:
+            assert shift == sum(path[d]), "shift must equal skips so far"
+            path[d].append(skip)
+    for d in range(1, p):
+        assert sum(path[d]) == d
+        assert len(set(path[d])) == len(path[d])  # distinct skips
+    assert path[0] == []  # self payload never moves
+
+
+@pytest.mark.parametrize("p", [2, 3, 5, 8, 12])
+def test_moves_volume_matches_simulator(p):
+    """sum(len(moved)) per rank == the simulator's blocks_sent counter —
+    the Bruck volume amplification, cross-checked end to end."""
+    inputs = [[np.ones(1) for _ in range(p)] for _ in range(p)]
+    _, stats = sim.simulate_alltoall(inputs)
+    want = sum(a2a_round_entries(p))
+    assert all(b == want for b in stats.blocks_sent), \
+        (stats.blocks_sent, want)
+    assert stats.rounds == ceil_log2(p)
+
+
+# ---------------------------------------------------------------------------
+# A2APlan tables
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("counts", _matrix_cases())
+@pytest.mark.parametrize("schedule", ("halving", "power2",
+                                      "fully_connected"))
+def test_a2a_round_widths_are_worst_window(counts, schedule):
+    p = len(counts)
+    pl = _plan(p, schedule=schedule, counts=counts)
+    assert pl.backend == "alltoallv"
+    assert pl.a2a.round_widths == alltoallv_round_widths(counts, schedule)
+
+
+@pytest.mark.parametrize("counts", _matrix_cases())
+def test_a2a_tables_route_every_row_per_hop(counts):
+    """Table Theorem-1 analogue: over all rounds, the rows of pair
+    (src, dst) are gathered exactly hops(dst-src) times in total (once
+    per hop of its offset), zero-count pairs never appear, and sentinel
+    padding is trailing."""
+    p = len(counts)
+    pl = _plan(p, counts=counts)
+    a2a = pl.a2a
+    N = a2a.total
+    hops = {d: 0 for d in range(p)}
+    for _, moved in alltoall_moves(p, "halving"):
+        for d, _ in moved:
+            hops[d] += 1
+    gathered: dict[int, int] = {}
+    for tab in a2a.round_tables:
+        for r in range(p):
+            real = [int(v) for v in tab[r] if v != N]
+            # trailing sentinel only
+            assert list(tab[r][:len(real)]) == real
+            for v in real:
+                gathered[v] = gathered.get(v, 0) + 1
+    offs = a2a.pair_offsets
+    for src in range(p):
+        for dst in range(p):
+            d = (dst - src) % p
+            for row in range(offs[src, dst],
+                             offs[src, dst] + counts[src][dst]):
+                assert gathered.get(row, 0) == hops[d], \
+                    f"pair ({src},{dst}) row {row}: gathered " \
+                    f"{gathered.get(row, 0)}x, want {hops[d]}"
+    # output rows: exactly the (src, r) pairs in source order
+    for r in range(p):
+        want = [row for src in range(p)
+                for row in range(offs[src, r],
+                                 offs[src, r] + counts[src][r])]
+        real = [int(v) for v in a2a.out_rows[r] if v != N]
+        assert real == want
+
+
+def test_a2a_zero_count_rows_in_tables():
+    """A rank with an all-zero counts row originates nothing — no row of
+    a (0, dst) pair exists anywhere — yet it still receives its column
+    (out_rows has exactly recv_total real rows), its seed table is all
+    sentinel, and every wire keeps width >= 1 so sentinel-only rounds
+    still cost exactly one collective-permute."""
+    counts = ((0, 0, 0), (2, 0, 1), (1, 3, 0))
+    pl = _plan(3, counts=counts)
+    a2a = pl.a2a
+    assert a2a.send_total == (0, 3, 4)
+    assert a2a.recv_total == (3, 3, 1)
+    assert all(v == a2a.total for v in a2a.seed_dst[0])  # seeds nothing
+    for tab in a2a.round_tables:
+        assert tab.shape[1] >= 1
+    for r in range(3):
+        real = [int(v) for v in a2a.out_rows[r] if v != a2a.total]
+        assert len(real) == a2a.recv_total[r]
+    assert len(pl.rs_rounds) == ceil_log2(3)
+
+
+# ---------------------------------------------------------------------------
+# p=1 identity + validation + registry
+# ---------------------------------------------------------------------------
+
+def test_p1_identity():
+    x = jnp.arange(6.0).reshape(1, 6)
+    assert (_plan(1).alltoall(x) == x).all()
+    xv = jnp.arange(8.0).reshape(4, 2)
+    out = _plan(1, counts=((4,),)).alltoall(xv)
+    assert (out == xv).all()
+
+
+def test_counts_matrix_validation():
+    with pytest.raises(ValueError, match="square"):
+        CollectiveSpec(counts=((1, 2), (1,)))
+    with pytest.raises(ValueError, match="non-negative"):
+        CollectiveSpec(counts=((1, -2), (0, 1)))
+    with pytest.raises(ValueError, match="at least one"):
+        CollectiveSpec(counts=((0, 0), (0, 0)))
+    with pytest.raises(ValueError, match="circulant"):
+        CollectiveSpec(kind="xla", counts=((1, 1), (1, 1)))
+    with pytest.raises(ValueError, match="wire_dtype"):
+        _plan(2, counts=((1, 1), (1, 1)), wire_dtype="int8")
+    with pytest.raises(ValueError, match="fused"):
+        _plan(2, counts=((1, 1), (1, 1)), use_fused_kernel=True)
+    # matrix counts are alltoall-only
+    with pytest.raises(ValueError, match="alltoall"):
+        _plan(2, counts=((1, 1), (1, 1))).reduce_scatter(jnp.ones((2, 2)))
+    with pytest.raises(ValueError, match="alltoall"):
+        _plan(2, counts=((1, 1), (1, 1))).allgather(jnp.ones((2, 2)))
+    # flat counts stay RS/AG-only
+    with pytest.raises(NotImplementedError, match="counts"):
+        _plan(4, counts=(1, 2, 3, 4)).alltoall(jnp.ones((4, 2)))
+    # wrong input height fails loudly
+    with pytest.raises(ValueError, match="in_height"):
+        _plan(2, counts=((1, 1), (1, 1))).alltoall(jnp.ones((3, 2)))
+    # normalization: lists and np ints hash like plain tuples
+    s1 = CollectiveSpec(counts=[[np.int64(1), 2], [3, 4]])
+    s2 = CollectiveSpec(counts=((1, 2), (3, 4)))
+    assert s1 == s2 and hash(s1) == hash(s2) and s1.counts_matrix
+
+
+def test_backend_registry_alltoall():
+    assert "alltoallv" in BACKENDS
+    assert BACKENDS["alltoallv"] == ("alltoall",)
+    assert "alltoall" in BACKENDS["xla"]
+    assert _plan(4, counts=((1,) * 4,) * 4).backend == "alltoallv"
+    assert _plan(4, kind="xla").backend == "xla"
+    with pytest.raises(ValueError, match="does not implement alltoall"):
+        _plan(4, kind="ring").alltoall(jnp.ones((4, 2)))
+
+
+def test_a2a_plan_cached():
+    from repro.core import plan_cache_info
+    spec = CollectiveSpec(counts=((1, 2), (3, 4)))
+    before = plan_cache_info().misses
+    a = plan(spec, p=2, axis_name=AX)
+    b = plan(CollectiveSpec(counts=((1, 2), (3, 4))), p=2, axis_name=AX)
+    assert a is b
+    assert plan_cache_info().misses <= before + 1
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+def test_t_alltoall_hop_volume():
+    model = CommModel.tpu_v5e()
+    for p in (4, 7, 16):
+        entries = a2a_round_entries(p)
+        assert len(entries) == ceil_log2(p)
+        assert sum(entries) >= p - 1  # amplified vs reduce-scatter
+        t = t_alltoall(1 << 20, p, model)
+        # same round count as reduce-scatter but amplified volume (and no
+        # γ): the β term alone must already cost at least RS's β term.
+        assert t > t_reduce_scatter(1 << 20, p, model) * 0.5
+    assert t_alltoall(100, 1, model) == 0.0
+
+
+def test_t_alltoallv_matches_widths():
+    model = CommModel(alpha=1.0, beta=1.0, gamma=0.0)
+    counts = ((0, 2, 1), (1, 0, 2), (2, 1, 0))
+    widths = alltoallv_round_widths(counts)
+    want = sum(1.0 + w for w in widths)
+    assert t_alltoallv(counts, model) == pytest.approx(want)
+    assert t_alltoallv(((5,),), model) == 0.0
+
+
+def test_alltoallv_one_rank_widths_worst_case():
+    """All payload to one destination: every round's wire is dominated by
+    whoever currently holds the big rows."""
+    p = 6
+    one = [[0] * p for _ in range(p)]
+    for i in range(p):
+        one[i][2] = 7
+    widths = alltoallv_round_widths(tuple(tuple(r) for r in one))
+    assert all(w >= 7 for w in widths)
+
+
+# ---------------------------------------------------------------------------
+# ep helpers
+# ---------------------------------------------------------------------------
+
+def test_expert_owner_grid_ragged():
+    from repro.models.dispatch import _ep_expert_grid, expert_owners
+    for e, pe in [(8, 4), (6, 4), (3, 2), (5, 3), (4, 1)]:
+        own = expert_owners(e, pe)
+        assert sum(own) == e and len(own) == pe
+        assert max(own) - min(own) <= 1
+        pad_idx, inv_idx = _ep_expert_grid(own, e)
+        own_max = max(own)
+        assert pad_idx.shape == (pe * own_max,)
+        # every real expert appears exactly once, phantoms are sentinel e
+        real = [v for v in pad_idx if v != e]
+        assert sorted(real) == list(range(e))
+        for ex in range(e):
+            assert pad_idx[inv_idx[ex]] == ex
+
+
+def test_capacity_clamped_for_tiny_pools():
+    from repro.models.dispatch import capacity
+
+    class Cfg:
+        capacity_factor = 1.25
+        experts_per_token = 2
+        n_experts = 8
+
+    assert capacity(Cfg, 1) == 2           # N*K = 2 < old floor of 8
+    assert capacity(Cfg, 2) == 4
+    assert capacity(Cfg, 100) % 8 == 0 and capacity(Cfg, 100) >= 8
+
+
+def test_ep_collective_specs():
+    from repro.models.dispatch import ep_collective_specs
+
+    class Cfg:
+        n_experts = 6
+        ep_axis = "model"
+
+    buf, cnt = ep_collective_specs(Cfg, 4)
+    assert buf.counts is None
+    assert cnt.counts_matrix and cnt.counts == ((2, 2, 1, 1),) * 4
+
+
+# ---------------------------------------------------------------------------
+# Multi-device execution checks (subprocess: 8 fake devices)
+# ---------------------------------------------------------------------------
+
+def test_a2a_multidev_subprocess():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # worker sets its own device count
+    proc = subprocess.run(
+        [sys.executable, WORKER], capture_output=True, text=True,
+        timeout=900, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"a2a multidev checks failed:\n--- stdout ---\n{proc.stdout}\n"
+            f"--- stderr ---\n{proc.stderr}")
+    assert "ALL A2A CHECKS PASSED" in proc.stdout

@@ -25,9 +25,9 @@ import sys
 import pytest
 
 from repro.core.conformance import (
-    DEFAULT_PS, NONUNIFORM_SCHEDULES, OPS, SCHEDULES, case_spec,
-    hierarchical_factors, nonuniform_counts_cases, sweep_cases,
-    two_level_group)
+    A2A_SCHEDULES, DEFAULT_PS, NONUNIFORM_SCHEDULES, OPS, SCHEDULES,
+    alltoallv_counts_cases, case_spec, hierarchical_factors,
+    nonuniform_counts_cases, sweep_cases, two_level_group)
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 WORKER = os.path.join(HERE, "..", "src", "repro", "core", "conformance.py")
@@ -112,6 +112,31 @@ def test_nonuniform_cases_cover_required_space():
         if p >= 2:
             assert 0 in cases["zero_ranks"], \
                 "zero_ranks must include an empty block"
+
+
+def test_alltoallv_cases_cover_required_space():
+    """The alltoall(v) sweep includes uniform, ragged, zero-count-pair
+    and all-on-one-rank counts matrices at every tested p, and always
+    sweeps both optimal (ceil(log2 p)-round) schedules."""
+    assert set(A2A_SCHEDULES) >= {"halving", "power2"}
+    for p in DEFAULT_PS:
+        cases = alltoallv_counts_cases(p)
+        assert {"ragged", "zero_pairs", "one_rank", "uniform"} <= set(cases)
+        for counts in cases.values():
+            assert len(counts) == p
+            assert all(len(row) == p for row in counts)
+            assert sum(sum(row) for row in counts) > 0
+        one = cases["one_rank"]
+        dst = p // 2
+        assert all(c == 0 for i, row in enumerate(one)
+                   for j, c in enumerate(row) if j != dst), \
+            "one_rank must send every payload to a single destination"
+        if p >= 2:
+            zero = cases["zero_pairs"]
+            assert any(c == 0 for row in zero for c in row), \
+                "zero_pairs must include empty (src, dst) pairs"
+            assert any(sum(row) == 0 for row in zero), \
+                "zero_pairs must include a rank that sends nothing"
 
 
 def test_hierarchical_factors():

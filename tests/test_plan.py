@@ -208,9 +208,15 @@ def test_backend_registry():
     assert _plan(4).backend in BACKENDS
     assert _plan(4, wire_dtype="int8").backend in ("jnp+int8", "fused+int8")
     assert _plan(4, counts=(1, 2, 3, 4)).backend == "nonuniform"
+    assert _plan(4, counts=((1,) * 4,) * 4).backend == "alltoallv"
     assert _plan(4, kind="ring").backend == "ring"
     for backend, collectives in BACKENDS.items():
-        assert "reduce_scatter" in collectives
+        # every backend implements reduce_scatter except the
+        # alltoall-only table backend
+        if backend == "alltoallv":
+            assert collectives == ("alltoall",)
+        else:
+            assert "reduce_scatter" in collectives
 
 
 # ---------------------------------------------------------------------------
