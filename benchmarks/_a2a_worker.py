@@ -41,6 +41,8 @@ import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import compat  # noqa: E402
+from repro.analysis.hlo_budget import (  # noqa: E402
+    count_collective_permutes_lowered)
 from repro.core import (CollectiveSpec, alltoallv_round_widths,  # noqa: E402
                         ceil_log2, plan)
 from repro.core import collectives as C  # noqa: E402
@@ -58,8 +60,7 @@ def jitted(fn, check_vma=None):
 
 
 def count_cp(f, shape):
-    txt = f.lower(jax.ShapeDtypeStruct(shape, jnp.float32)).as_text()
-    return txt.count("collective_permute")
+    return count_collective_permutes_lowered(f, shape)
 
 
 def timeit(f, x, iters=10):
@@ -148,8 +149,7 @@ out_g = np.concatenate(
      for r in range(pe)], axis=0)
 ok = bool(np.allclose(out_ep, out_g, rtol=2e-5, atol=2e-5))
 us = timeit(fe, xm)
-txt = fe.lower(jax.ShapeDtypeStruct(xm.shape, jnp.float32)).as_text()
-cp = txt.count("collective_permute")
+cp = count_collective_permutes_lowered(fe, xm.shape)
 # 3 exchanges per layer call (counts alltoallv + buffer out + buffer
 # back), ceil(log2 pe) ppermutes each.
 theory_ep = 3 * ceil_log2(pe)

@@ -31,7 +31,9 @@ import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import compat  # noqa: E402
-from repro.core import CollectiveSpec, plan_cache_info  # noqa: E402
+from repro.analysis.hlo_budget import (  # noqa: E402
+    count_collective_permutes_lowered)
+from repro.core import CollectiveSpec, plan  # noqa: E402
 from repro.core import collectives as C  # noqa: E402
 from repro.core.schedule import ceil_log2, get_skips  # noqa: E402
 
@@ -70,7 +72,7 @@ for name, spec, coll, mult in CASES:
     f = jax.jit(compat.shard_map(body, mesh=mesh,
                                  in_specs=(P("x"),), out_specs=P("x")))
     x = jnp.asarray(payload_for(spec))
-    misses0 = plan_cache_info().misses
+    misses0 = plan.cache_stats().misses
     f(x).block_until_ready()          # first call: the one allowed trace
     t0 = time.perf_counter()
     iters = 10
@@ -79,11 +81,10 @@ for name, spec, coll, mult in CASES:
     out.block_until_ready()
     us = (time.perf_counter() - t0) / iters * 1e6
     retraces = traces - 1
-    rebuilds = max(plan_cache_info().misses - misses0 - 1, 0)
+    rebuilds = max(plan.cache_stats().misses - misses0 - 1, 0)
 
     theory = mult * len(get_skips(NDEV, spec.schedule))
-    txt = f.lower(jax.ShapeDtypeStruct(x.shape, jnp.float32)).as_text()
-    cp = txt.count("collective_permute")
+    cp = count_collective_permutes_lowered(f, x.shape)
     print(f"plans/{name},{us:.3f},"
           f"retraces={retraces};plan_rebuilds={rebuilds};"
           f"cp={cp};theory={theory};cp_delta={cp - theory};"

@@ -34,7 +34,7 @@ from repro import compat  # noqa: E402
 from repro.core import collectives as C  # noqa: E402
 from repro.core.schedule import ceil_log2  # noqa: E402
 from repro.kernels import wire_width  # noqa: E402
-from repro.roofline.analysis import parse_collectives  # noqa: E402
+from repro.analysis.hlo_budget import parse_collectives  # noqa: E402
 
 NDEV = 8
 GROUP = 512

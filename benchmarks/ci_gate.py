@@ -5,6 +5,10 @@ raises on any ``assert_theorem1/2`` violation and the wire bench on any round-co
 budget violation, which this gate surfaces as failures), parses the CSV into ``BENCH_ci.json``
 (the perf-trajectory artifact CI uploads per commit), and additionally asserts:
 
+* static-analysis rows (``analysis/``): ``python -m repro.analysis --all`` (plan verifier
+  sweep, jaxpr lint, HLO audit, repo-invariant lint) reports zero findings — ratcheted
+  repo-lint exemptions live in ``analysis_ratchet.json`` and are waived, not counted;
+
 * no ``ERROR`` rows and every kernel ``allclose``/``bitwise`` flag true (the Pallas kernels agree
   with their jnp oracles);
 * the fused round kernels (plain AND compressed-dq) stay within ``FUSED_RATIO_MAX`` of their
@@ -50,7 +54,7 @@ WIRE_REDUCTION_MIN = 3.0
 # observed); 1.5 catches a structural regression (an extra buffer copy
 # per round lands well above it).
 A2A_RATIO_MAX = 1.5
-ONLY = "rounds,kernels,wire,plans,a2a"
+ONLY = "rounds,kernels,wire,plans,a2a,analysis"
 
 
 def parse_csv(text: str) -> list[dict]:
@@ -123,6 +127,17 @@ def check(rows: list[dict]) -> list[str]:
                         f"{row['name']}: fused/jnp ratio {ratio:.3f} > "
                         f"{A2A_RATIO_MAX} (interpret-mode noise backstop)"
                     )
+        if row["name"].startswith("analysis/"):
+            f = row["fields"]
+            if f.get("findings", "0") != "0":
+                failures.append(
+                    f"{row['name']}: {f.get('findings')} static-analysis "
+                    f"findings (run `python -m repro.analysis --all` "
+                    f"locally; pre-existing repo-lint exemptions belong in "
+                    f"analysis_ratchet.json)"
+                )
+            if f.get("ok", "True") != "True":
+                failures.append(f"{row['name']}: analysis report not ok")
         if row["name"].startswith("plans/"):
             f = row["fields"]
             if f.get("retraces") != "0":
@@ -159,6 +174,10 @@ def check(rows: list[dict]) -> list[str]:
     if "a2a/moe_ep_parity" not in names:
         failures.append("no a2a/moe_ep_parity (ep vs global dispatch) row "
                         "produced")
+    for pass_name in ("verify", "jaxpr", "hlo", "repo"):
+        if f"analysis/{pass_name}" not in names:
+            failures.append(f"no analysis/{pass_name} static-analysis row "
+                            f"produced")
     return failures
 
 

@@ -284,6 +284,51 @@ def bench_kernels():
 
 
 # ---------------------------------------------------------------------------
+def bench_analysis():
+    """Static-analysis gate: ``python -m repro.analysis --all`` must exit
+    clean (plan verifier sweep, jaxpr lint, HLO audit, repo lint).
+    Subprocess — the CLI forces its own fake-device XLA_FLAGS."""
+    import tempfile
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(here)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tf:
+        report_path = tf.name
+    try:
+        t0 = time.perf_counter()
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--all",
+             "--json", report_path],
+            capture_output=True, text=True, timeout=900, env=env, cwd=root)
+        us = (time.perf_counter() - t0) * 1e6
+        try:
+            rep = json.load(open(report_path))
+        except (OSError, ValueError):
+            rep = None
+        if proc.returncode != 0 or rep is None:
+            n = rep["n_findings"] if rep else -1
+            emit("analysis/ERROR", us,
+                 f"findings={n};rc={proc.returncode};"
+                 + proc.stdout[-160:].replace("\n", " ").replace(",", " "))
+            return
+        by_pass = rep["findings_by_pass"]
+        for pass_name in rep["passes_run"]:
+            emit(f"analysis/{pass_name}", us / len(rep["passes_run"]),
+                 f"findings={by_pass.get(pass_name, 0)};"
+                 f"waived={len(rep.get('waived', [])) if pass_name == 'repo' else 0};"
+                 f"ok={rep['ok']}")
+    finally:
+        try:
+            os.unlink(report_path)
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
 def bench_roofline():
     d = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "reports", "dryrun")
@@ -319,6 +364,7 @@ BENCHES = {
     "wire": bench_wire,
     "plans": bench_plans,
     "a2a": bench_a2a,
+    "analysis": bench_analysis,
     "roofline": bench_roofline,
 }
 

@@ -24,6 +24,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.analysis.hlo_budget import count_collective_permutes_lowered
 from repro.core import collectives as C
 from repro.core.schedule import (ceil_log2, get_skips, reduction_tree)
 
@@ -66,11 +67,9 @@ def main():
 
     # HLO structure = the paper's round counts
     def count_cp(fn):
-        t = jax.jit(compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
-                                     in_specs=(P('x'),), out_specs=P('x'))
-                    ).lower(jax.ShapeDtypeStruct((p, p * 4), jnp.float32)
-                            ).as_text()
-        return t.count("collective_permute")
+        f = jax.jit(compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
+                                     in_specs=(P('x'),), out_specs=P('x')))
+        return count_collective_permutes_lowered(f, (p, p * 4))
 
     print(f"\nHLO collective-permutes: RS="
           f"{count_cp(lambda v: C.circulant_reduce_scatter(v, 'x'))} "

@@ -34,6 +34,8 @@ import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import compat  # noqa: E402
+from repro.analysis.hlo_budget import (  # noqa: E402
+    count_collective_permutes_lowered)
 from repro.core import CollectiveSpec, ceil_log2, plan  # noqa: E402
 from repro.models.config import ModelConfig  # noqa: E402
 from repro.models.moe import init_moe, moe_ffn  # noqa: E402
@@ -58,8 +60,7 @@ def main():
     out = np.asarray(f(jnp.asarray(x)))
     assert all((out[r, j] == x[j, r]).all() for r in range(p)
                for j in range(p))
-    cps = f.lower(jax.ShapeDtypeStruct((p, p, blk), jnp.float32)
-                  ).as_text().count("collective_permute")
+    cps = count_collective_permutes_lowered(f, (p, p, blk))
     print(f"alltoall p={p}: transposed {p}x{p} blocks in {cps} "
           f"collective-permutes (ceil(log2 p) = {ceil_log2(p)})")
 

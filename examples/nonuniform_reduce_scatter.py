@@ -24,6 +24,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.analysis.hlo_budget import count_collective_permutes_lowered
 from repro.core import CollectiveSpec, plan
 from repro.core import collectives as C
 from repro.core.schedule import ceil_log2
@@ -38,9 +39,7 @@ def shmap(fn):
 
 
 def count_cp(fn, shape):
-    f = shmap(fn)
-    txt = f.lower(jax.ShapeDtypeStruct(shape, jnp.float32)).as_text()
-    return txt.count("collective_permute")
+    return count_collective_permutes_lowered(shmap(fn), shape)
 
 
 def demo(name: str, counts: tuple[int, ...]):

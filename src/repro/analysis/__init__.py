@@ -1,0 +1,19 @@
+"""Static analysis for the circulant-collective stack: four gated passes
+behind one CLI (``python -m repro.analysis --all``).
+
+  verify      plan verifier — Theorem 1 partition, deadlock-freedom,
+              Corollary 3 row tables, alltoallv delivery (no devices)
+  jaxpr       trace the backend registry + zero1 entrypoints; lint the
+              jaxprs (ppermute axis/perm, f32 fold, retrace risks)
+  hlo         the ONE collective-permute counter / byte parser, plus a
+              compiled-HLO round/byte audit
+  repo        ast-based repo invariants (imports, pallas, spec funnel,
+              one HLO counter), ratcheted in analysis_ratchet.json
+
+This ``__init__`` stays jax-free: ``python -m repro.analysis`` imports
+it before ``__main__`` can set ``XLA_FLAGS``, so anything importing jax
+must be pulled in lazily by the passes that need it.
+"""
+from .report import Finding, Report  # noqa: F401
+
+__all__ = ["Finding", "Report"]

@@ -1,0 +1,106 @@
+"""``python -m repro.analysis`` — run the static-analysis passes and
+emit a machine-readable JSON report; exit non-zero on any finding.
+
+    python -m repro.analysis --all                 # all four passes
+    python -m repro.analysis --verify --p 2,3,5,8,16
+    python -m repro.analysis --repo --update-ratchet
+    python -m repro.analysis --all --json report.json
+
+The jaxpr and hlo passes trace/compile shard_map programs and need fake
+devices, so the device count is forced into ``XLA_FLAGS`` HERE, before
+the first jax import (the package ``__init__`` is deliberately
+jax-free; any inherited device-count flag is stripped first because XLA
+honors the LAST occurrence).
+"""
+import argparse
+import os
+import re
+import sys
+
+_DEVICES = 8
+
+_inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                    os.environ.get("XLA_FLAGS", ""))
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={_DEVICES} " + _inherited)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.analysis.report import Report  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (default when no pass is chosen)")
+    ap.add_argument("--verify", action="store_true",
+                    help="static plan verifier over the spec registry")
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="jaxpr lint of the backends + zero1 entrypoints")
+    ap.add_argument("--hlo", action="store_true",
+                    help="compiled-HLO round/byte audit")
+    ap.add_argument("--repo", action="store_true",
+                    help="repo-invariant AST lint")
+    ap.add_argument("--p", default="2,3,5,8,16",
+                    help="comma-separated axis sizes for --verify")
+    ap.add_argument("--root", default=None,
+                    help="repo root for --repo (default: auto-detect)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the JSON report to PATH ('-' = stdout)")
+    ap.add_argument("--update-ratchet", action="store_true",
+                    help="record current repo-lint findings as exemptions")
+    args = ap.parse_args(argv)
+
+    chosen = args.verify or args.jaxpr or args.hlo or args.repo
+    run_all = args.all or not chosen
+    report = Report()
+
+    if run_all or args.verify:
+        from repro.analysis import verify
+        ps = tuple(int(tok) for tok in args.p.split(",") if tok)
+        report.extend("verify", verify.run(ps))
+    if run_all or args.jaxpr:
+        from repro.analysis import jaxpr_lint
+        report.extend("jaxpr", jaxpr_lint.lint(p=_DEVICES))
+    if run_all or args.hlo:
+        from repro.analysis import hlo_budget
+        report.extend("hlo", hlo_budget.audit(p=_DEVICES))
+    if run_all or args.repo:
+        from repro.analysis import repo_lint
+        root = args.root or _find_root()
+        if args.update_ratchet:
+            repo_lint.save_ratchet(root, repo_lint.lint_repo(root))
+            print(f"ratchet updated: {os.path.join(root, repo_lint.RATCHET_FILE)}")
+        fresh, waived = repo_lint.run(root)
+        report.extend("repo", fresh)
+        report.waived.extend(waived)
+
+    out = report.as_json()
+    if args.json == "-":
+        print(out)
+    elif args.json:
+        with open(args.json, "w") as f:
+            f.write(out + "\n")
+    for f in report.findings:
+        print("FINDING " + f.render())
+    for f in report.waived:
+        print("waived  " + f.render())
+    n = len(report.findings)
+    print(f"repro.analysis: passes={','.join(report.passes_run)} "
+          f"findings={n} waived={len(report.waived)} "
+          f"{'OK' if report.ok else 'FAIL'}")
+    return 0 if report.ok else 1
+
+
+def _find_root() -> str:
+    """Repo root = nearest ancestor of this file holding pyproject.toml
+    (src/repro/analysis -> repo)."""
+    d = os.path.dirname(os.path.abspath(__file__))
+    for _ in range(6):
+        if os.path.exists(os.path.join(d, "pyproject.toml")):
+            return d
+        d = os.path.dirname(d)
+    return os.getcwd()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

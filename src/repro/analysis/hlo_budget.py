@@ -1,0 +1,231 @@
+"""The one HLO/StableHLO collective counter and byte-budget parser.
+
+Every place the repo inspects compiler output for collectives goes
+through here: ``core/conformance.py`` (Theorem 1/2 round counts),
+``benchmarks/_wire_worker.py`` (codes+scales byte budgets),
+``benchmarks/_plan_worker.py`` / ``_a2a_worker.py`` (plan-dispatch round
+deltas), ``roofline/analysis.py`` (collective roofline term) and the
+test/example helpers.  Before this module each had its own regex; the
+repo-lint rule ``hlo-counter-outside-budget`` keeps it that way.
+
+Two textual formats appear in practice:
+
+* **lowered StableHLO** (``jitted.lower(...).as_text()``) — collectives
+  are ``stablehlo.collective_permute`` ops, one token per op;
+* **compiled post-SPMD HLO** (``compiled.as_text()``) — collectives are
+  ``collective-permute`` instructions, possibly split into async
+  ``collective-permute-start`` / ``-done`` pairs whose start instruction
+  has a *tuple* result type ``(operand, result[, u32[], u32[]])``.
+
+``parse_collectives`` handles the HLO form (start counted once, done
+skipped, tuple payload counted once — not summed across the operand AND
+result aliases); ``count_collective_permutes`` accepts either form.
+
+This module is jax-free (pure ``re``): it must be importable before the
+CLI sets ``XLA_FLAGS``.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_INSTR_RE = re.compile(r"%?[\w.\-]+ = (.+?) ([\w\-]+)\(")
+_MLIR_CP_RE = re.compile(r"\bcollective_permute\b")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _dims_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(type_str: str, opname: str) -> tuple[int, dict]:
+    """(payload bytes, per-dtype byte breakdown) of an HLO result type.
+
+    Sync ops have a plain array type: sum every array in it (there is
+    one).  Async ``*-start`` ops have a TUPLE type aliasing the operand
+    and the result buffer (plus u32 context scalars on some backends);
+    counting every tuple element would double-count the payload, so the
+    result entry — index 1 of the tuple — is counted alone.
+    """
+    shapes = _SHAPE_RE.findall(type_str)
+    if opname.endswith("-start") and type_str.lstrip().startswith("("):
+        if len(shapes) >= 2:
+            shapes = [shapes[1]]
+        elif shapes:
+            shapes = [shapes[0]]
+    total = 0
+    by_dtype: dict[str, int] = {}
+    for dtype, dims in shapes:
+        if dtype not in _DTYPE_BYTES:
+            continue
+        nbytes = _dims_elems(dims) * _DTYPE_BYTES[dtype]
+        total += nbytes
+        by_dtype[dtype] = by_dtype.get(dtype, 0) + nbytes
+    return total, by_dtype
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2  # conservative default
+
+
+@dataclass
+class CollectiveStats:
+    ops: dict = field(default_factory=dict)        # op -> count
+    bytes_by_op: dict = field(default_factory=dict)  # op -> effective bytes
+    raw_bytes_by_op: dict = field(default_factory=dict)
+    raw_bytes_by_dtype: dict = field(default_factory=dict)  # s8/f32/... ->
+    #                               raw payload bytes (compressed-wire audit)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.ops.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Scan post-SPMD HLO for collective ops; returns per-device effective
+    link bytes.  Start/done pairs are counted once (via -start), and a
+    start's tuple result type contributes its payload once."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        type_str, opname = m.groups()
+        base = opname.replace("-start", "")
+        if base.endswith("-done") or base not in COLLECTIVE_OPS:
+            continue
+        size, size_by_dtype = _shape_bytes(type_str, opname)
+        g = _group_size(line)
+        if base == "collective-permute":
+            eff = size
+        elif base == "all-gather":
+            eff = size * (g - 1) / g
+        elif base == "reduce-scatter":
+            eff = size * (g - 1)
+        elif base == "all-reduce":
+            eff = 2 * size * (g - 1) / g
+        else:  # all-to-all
+            eff = size * (g - 1) / g
+        stats.ops[base] = stats.ops.get(base, 0) + 1
+        stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + eff
+        stats.raw_bytes_by_op[base] = (stats.raw_bytes_by_op.get(base, 0)
+                                       + size)
+        for dt, nb in size_by_dtype.items():
+            stats.raw_bytes_by_dtype[dt] = (
+                stats.raw_bytes_by_dtype.get(dt, 0) + nb)
+    return stats
+
+
+def count_collective_permutes(text: str) -> int:
+    """Collective-permute op count of lowered StableHLO OR compiled HLO.
+
+    StableHLO spells the op ``stablehlo.collective_permute`` (one token
+    per op, never async); compiled HLO spells it ``collective-permute``
+    with possible ``-start``/``-done`` splitting, which
+    :func:`parse_collectives` normalizes to one count per pair.
+    """
+    n = len(_MLIR_CP_RE.findall(text))
+    if n:
+        return n
+    return parse_collectives(text).ops.get("collective-permute", 0)
+
+
+def count_collective_permutes_lowered(jitted, shape, dtype="float32") -> int:
+    """Count for a jitted fn lowered at an f32 (by default) input of
+    ``shape`` — the shared convenience the conformance harness, bench
+    workers and examples previously each reimplemented."""
+    import jax  # deferred: this module must import jax-free
+    import jax.numpy as jnp
+
+    aval = jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+    return count_collective_permutes(jitted.lower(aval).as_text())
+
+
+def audit(p: int = 8):
+    """CLI pass: compile a small spec set on ``p`` fake devices and check
+    the compiled-HLO collective structure with THIS parser — round
+    counts == Theorem 1/2, the int8 wire moves s8 payloads, and the
+    async-aware byte accounting stays below the f32 payload volume.
+
+    Needs ``p`` devices (run via ``python -m repro.analysis --hlo``).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.core import collectives as C
+    from repro.core.schedule import ceil_log2
+    from repro.core.spec import CollectiveSpec
+
+    from .report import Finding
+
+    if jax.device_count() < p:
+        raise RuntimeError(
+            f"hlo audit needs {p} devices, have {jax.device_count()} — "
+            f"run via `python -m repro.analysis --hlo`")
+    mesh = compat.make_mesh((p,), ("x",))
+    findings = []
+
+    def stats_for(spec, coll, n=p * 256):
+        fn = jax.jit(compat.shard_map(
+            lambda v, s=spec: getattr(C, coll)(v[0], "x", spec=s)[None],
+            mesh=mesh, in_specs=(P("x"),), out_specs=P("x")))
+        x = jnp.zeros((p, n), jnp.float32)
+        return parse_collectives(fn.lower(x).compile().as_text())
+
+    q = ceil_log2(p)
+    cases = [
+        ("rs/f32", CollectiveSpec(), "reduce_scatter", q),
+        ("ar/f32", CollectiveSpec(), "allreduce", 2 * q),
+        ("rs/int8", CollectiveSpec(wire_dtype="int8"), "reduce_scatter", q),
+    ]
+    payload = {}
+    for label, spec, coll, want in cases:
+        st = stats_for(spec, coll)
+        got = st.ops.get("collective-permute", 0)
+        payload[label] = st.raw_bytes_by_op.get("collective-permute", 0)
+        if got != want:
+            findings.append(Finding(
+                pass_name="hlo", rule="round-count", where=f"{label}@p={p}",
+                message=f"{got} collective-permutes in compiled HLO, "
+                        f"want {want} (Theorem 1/2)"))
+        if label == "rs/int8" and st.raw_bytes_by_dtype.get("s8", 0) == 0:
+            findings.append(Finding(
+                pass_name="hlo", rule="wire-dtype", where=f"{label}@p={p}",
+                message="int8-wire compile moves no s8 payload bytes"))
+    if payload.get("rs/int8", 0) >= payload.get("rs/f32", 1):
+        findings.append(Finding(
+            pass_name="hlo", rule="wire-bytes", where=f"rs/int8@p={p}",
+            message=f"compressed wire payload {payload.get('rs/int8')} B "
+                    f"not below the f32 payload "
+                    f"{payload.get('rs/f32')} B — byte accounting or "
+                    f"wire format regressed"))
+    return findings

@@ -1,0 +1,211 @@
+"""Jaxpr lint: trace the registered backends and the zero1 grad-sync
+entrypoints, then walk the jaxprs for trace-level invariants no test
+asserts directly:
+
+* every ``ppermute`` runs over the expected mesh axis, and its ``perm``
+  is a single circulant shift ``{(i, (i+s) mod p)}`` — the deadlock-free
+  pattern the paper's round structure guarantees;
+* the int8-wire fold path accumulates in f32 even for bf16 payloads
+  (dequantized codes must not be folded in half precision);
+* every registry spec is hashable and re-planning is an identity (a
+  spec that misses the lru cache retraces on every jit call);
+* tracing repro entrypoints raises no DeprecationWarning from repro
+  modules (the raw-``impl`` string path must not be reachable from
+  spec-driven code).
+
+Tracing shard_map bodies needs ``p`` fake devices: run via
+``python -m repro.analysis --jaxpr`` (the CLI sets
+``XLA_FLAGS=--xla_force_host_platform_device_count`` before jax loads)
+or from a process configured the same way.
+"""
+from __future__ import annotations
+
+import warnings
+
+from .report import Finding
+
+AXIS = "x"
+BLK = 4
+
+
+def _finding(rule: str, where: str, message: str) -> Finding:
+    return Finding(pass_name="jaxpr", rule=rule, where=where,
+                   message=message)
+
+
+def _walk_eqns(jaxpr):
+    """Yield every eqn of ``jaxpr`` and of any jaxpr nested in params
+    (shard_map bodies, scans, conds, pallas_call kernels).  Duck-typed
+    (``.eqns`` / ``.jaxpr``) so no version-sensitive ``jax.core``
+    isinstance checks are needed."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            stack = [val]
+            while stack:
+                v = stack.pop()
+                if hasattr(v, "jaxpr") and hasattr(v, "consts"):
+                    yield from _walk_eqns(v.jaxpr)   # ClosedJaxpr
+                elif hasattr(v, "eqns"):
+                    yield from _walk_eqns(v)         # Jaxpr
+                elif isinstance(v, (tuple, list)):
+                    stack.extend(v)
+
+
+def _is_circulant_perm(perm, p: int) -> bool:
+    pairs = set(tuple(pr) for pr in perm)
+    if len(pairs) != p:
+        return False
+    for s in range(1, p):
+        if pairs == {(i, (i + s) % p) for i in range(p)}:
+            return True
+    return False
+
+
+def _axis_names(param) -> tuple:
+    if isinstance(param, (tuple, list, set, frozenset)):
+        return tuple(param)
+    return (param,)
+
+
+def _check_jaxpr(jaxpr, p: int, where: str, *,
+                 wired: bool) -> list[Finding]:
+    out: list[Finding] = []
+    n_ppermute = 0
+    for eqn in _walk_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name == "ppermute":
+            n_ppermute += 1
+            axes = _axis_names(eqn.params.get("axis_name"))
+            if tuple(axes) != (AXIS,):
+                out.append(_finding(
+                    "ppermute-axis", where,
+                    f"ppermute over axis {axes}, expected ({AXIS!r},) — "
+                    f"a stray axis would address a different mesh "
+                    f"dimension"))
+            perm = eqn.params.get("perm", ())
+            if not _is_circulant_perm(perm, p):
+                out.append(_finding(
+                    "non-circulant-perm", where,
+                    f"ppermute perm {tuple(perm)[:4]}... is not a single "
+                    f"circulant shift of the {p}-ring (deadlock-freedom "
+                    f"relies on one matched permutation per round)"))
+        elif wired and name in ("add", "max", "min") and eqn.outvars:
+            aval = eqn.outvars[0].aval
+            dtype = getattr(aval, "dtype", None)
+            if dtype is not None and dtype.kind == "f" and \
+                    dtype.itemsize < 4:
+                out.append(_finding(
+                    "low-precision-accumulation", where,
+                    f"{name} accumulates in {dtype} on the int8-wire "
+                    f"fold path; dequantized rounds must fold in f32"))
+    if n_ppermute == 0:
+        out.append(_finding(
+            "no-collective", where,
+            "trace contains no ppermute (backend wiring broken?)"))
+    return out
+
+
+def _trace_cases(p: int):
+    """(label, spec, traced jaxpr, wired) for the backend registry and
+    the zero1 leaf entrypoints."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.core import collectives as C
+    from repro.core.spec import CollectiveSpec
+    from repro.optim import zero1
+
+    if jax.device_count() < p:
+        raise RuntimeError(
+            f"jaxpr lint needs {p} devices, have {jax.device_count()} — "
+            f"run via `python -m repro.analysis --jaxpr` (it forces the "
+            f"host platform device count before jax loads)")
+    mesh = compat.make_mesh((p,), (AXIS,))
+
+    def shmap(fn, dtype=jnp.float32, n=p * BLK, check_vma=None):
+        f = compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
+                             in_specs=(P(AXIS),), out_specs=P(AXIS),
+                             check_vma=check_vma)
+        return jax.make_jaxpr(f)(jnp.zeros((p, n), dtype)).jaxpr
+
+    nonuni = tuple((i * 5 + 3) % 7 for i in range(p))
+    if sum(nonuni) == 0:
+        nonuni = (1,) * p
+    a2a_counts = tuple(tuple((i + 2 * j + 1) % 3 for j in range(p))
+                       for i in range(p))
+    in_h = max(max(sum(row) for row in a2a_counts), 1)
+
+    cases = []
+    for label, spec, dtype in (
+            ("rs/jnp", CollectiveSpec(), jnp.float32),
+            ("ar/jnp", CollectiveSpec(), jnp.float32),
+            ("rs/fused", CollectiveSpec(use_fused_kernel=True), jnp.float32),
+            ("rs/int8", CollectiveSpec(wire_dtype="int8"), jnp.float32),
+            ("rs/int8-bf16", CollectiveSpec(wire_dtype="int8"),
+             jnp.bfloat16),
+            ("ar/int8-bf16", CollectiveSpec(wire_dtype="int8"),
+             jnp.bfloat16)):
+        coll = C.allreduce if label.startswith("ar/") else C.reduce_scatter
+        cv = False if "fused" in label else None
+        jx = shmap(lambda v, s=spec, c=coll: c(v, AXIS, spec=s),
+                   dtype=dtype, check_vma=cv)
+        cases.append((label, spec, jx, spec.wired))
+
+    spec = CollectiveSpec(counts=nonuni)
+    cases.append(("rs/nonuniform", spec,
+                  shmap(lambda v, s=spec: C.reduce_scatter(v, AXIS, spec=s),
+                        n=sum(nonuni)), False))
+    spec = CollectiveSpec(counts=a2a_counts)
+    cases.append(("a2a/alltoallv", spec,
+                  shmap(lambda v, s=spec: C.alltoall(v, AXIS, spec=s),
+                        n=in_h), False))
+
+    # zero1 grad-sync entrypoints (what steps.build_zero1 pre-plans).
+    for label, sync in (("zero1/plain", zero1.GradSyncConfig()),
+                        ("zero1/int8", zero1.GradSyncConfig(
+                            wire_dtype="int8"))):
+        def leaves(g, _s=sync):
+            shard = zero1.reduce_scatter_leaf(g, (AXIS,), _s, p)
+            return zero1.allgather_leaf(shard, g.shape[0], (AXIS,), _s)
+        n = int(np.lcm(p, 4)) * p
+        cases.append((label, sync.rs_spec(), shmap(leaves, n=n),
+                      sync.rs_spec().wired))
+    return cases
+
+
+def lint(p: int = 8) -> list[Finding]:
+    from repro.core.plan import plan
+
+    out: list[Finding] = []
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        cases = _trace_cases(p)
+    for w in caught:
+        if w.category is DeprecationWarning and \
+                "repro" in str(w.filename):
+            out.append(_finding(
+                "deprecated-impl-dispatch", f"registry@p={p}",
+                f"tracing the registry raised a DeprecationWarning from "
+                f"{w.filename}:{w.lineno}: {w.message}"))
+    for label, spec, jaxpr, wired in cases:
+        where = f"{label}@p={p}"
+        try:
+            hash(spec)
+        except TypeError as e:
+            out.append(_finding(
+                "unhashable-spec", where,
+                f"spec is unhashable ({e}) — jit static args would "
+                f"retrace on every call"))
+            continue
+        if plan(spec, p=p, axis_name=AXIS) is not plan(spec, p=p,
+                                                       axis_name=AXIS):
+            out.append(_finding(
+                "plan-cache-miss", where,
+                "plan() returns a fresh object for an identical spec — "
+                "the lru cache is broken (retrace risk)"))
+        out.extend(_check_jaxpr(jaxpr, p, where, wired=wired))
+    return out

@@ -1,0 +1,265 @@
+"""Repo-invariant AST lint: hard-won structural rules, machine-checked.
+
+Each rule encodes an invariant the codebase converged on the hard way:
+
+* ``jax-experimental-outside-compat`` — every ``jax.experimental`` /
+  ``shard_map`` import lives in ``compat.py`` (the single file that
+  changes when a JAX API moves).  Pre-existing exemptions (the Pallas
+  kernel modules import ``jax.experimental.pallas`` directly) are
+  ratcheted, not grandfathered invisibly.
+* ``pallas-call-outside-kernels`` — ``pallas_call`` appears only under
+  ``src/repro/kernels/`` (interpret-mode gating and TPU lowering live
+  there).
+* ``spec-funnel`` — the public collective wrappers in
+  ``core/collectives.py`` all funnel through ``plan()`` / ``_dispatch``
+  (which resolves via ``as_spec``): no wrapper may grow a private
+  dispatch path.
+* ``bare-impl-string`` — no ``impl="..."`` string dispatch outside
+  ``tests/`` (the deprecated kwarg-era path; tests keep exercising its
+  DeprecationWarning on purpose).
+* ``hlo-counter-outside-budget`` — nobody counts ``collective_permute``
+  strings or regexes outside ``analysis/hlo_budget.py``: exactly one
+  HLO collective counter exists.
+
+Adding a rule: write a ``_rule_*`` visitor hook below, give it a stable
+kebab-case id, and (if the repo already violates it) run
+``python -m repro.analysis --repo --update-ratchet`` to record the
+pre-existing findings in ``analysis_ratchet.json`` — new violations
+still fail while the ratchet holds the old ones visible.
+
+Pure ``ast`` + ``pathlib``; no jax import.
+"""
+from __future__ import annotations
+
+import ast
+import json
+from pathlib import Path
+
+from .report import Finding
+
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+RATCHET_FILE = "analysis_ratchet.json"
+
+COMPAT_FILE = "src/repro/compat.py"
+KERNELS_DIR = "src/repro/kernels/"
+BUDGET_FILE = "src/repro/analysis/hlo_budget.py"
+COLLECTIVES_FILE = "src/repro/core/collectives.py"
+
+_CP_TOKENS = ("collective_permute", "collective-permute")
+
+
+def _finding(rule: str, rel: str, line: int, message: str) -> Finding:
+    return Finding(pass_name="repo", rule=rule, where=f"{rel}:{line}",
+                   message=message)
+
+
+def _const_str(node) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def _call_name(node: ast.Call) -> str | None:
+    if isinstance(node.func, ast.Name):
+        return node.func.id
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Per-file rules
+# ---------------------------------------------------------------------------
+
+def _rule_jax_experimental(tree, rel: str) -> list[Finding]:
+    if rel == COMPAT_FILE:
+        return []
+    out = []
+    for node in ast.walk(tree):
+        mods: list[str] = []
+        if isinstance(node, ast.Import):
+            mods = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            mods = [node.module]
+            if node.module == "jax":
+                for a in node.names:
+                    if a.name == "shard_map":
+                        out.append(_finding(
+                            "jax-experimental-outside-compat", rel,
+                            node.lineno,
+                            "shard_map import outside compat.py (use "
+                            "repro.compat.shard_map)"))
+        for mod in mods:
+            if mod == "jax.experimental" or \
+                    mod.startswith("jax.experimental."):
+                out.append(_finding(
+                    "jax-experimental-outside-compat", rel, node.lineno,
+                    f"import of {mod} outside compat.py (version-"
+                    f"sensitive surface; go through repro.compat)"))
+        if isinstance(node, ast.Attribute) and node.attr == "shard_map" \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == "jax":
+            out.append(_finding(
+                "jax-experimental-outside-compat", rel, node.lineno,
+                "jax" + ".shard_map outside compat.py (use "  # split: keep
+                "repro.compat.shard_map)"))  # THIS file out of the gate
+    return out
+
+
+def _rule_pallas_call(tree, rel: str) -> list[Finding]:
+    if rel.startswith(KERNELS_DIR):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        name = None
+        if isinstance(node, ast.Name) and node.id == "pallas_call":
+            name = node.id
+        elif isinstance(node, ast.Attribute) and node.attr == "pallas_call":
+            name = node.attr
+        if name:
+            out.append(_finding(
+                "pallas-call-outside-kernels", rel, node.lineno,
+                "pallas_call outside src/repro/kernels/ (kernel lowering "
+                "and interpret gating live there)"))
+    return out
+
+
+def _rule_bare_impl(tree, rel: str) -> list[Finding]:
+    if rel.startswith("tests/"):
+        return []  # deprecation tests exercise the legacy path on purpose
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg == "impl" and _const_str(kw.value) is not None:
+                out.append(_finding(
+                    "bare-impl-string", rel, node.lineno,
+                    f"impl={_const_str(kw.value)!r} string dispatch is "
+                    f"deprecated; pass spec=CollectiveSpec(...)"))
+    return out
+
+
+def _rule_hlo_counter(tree, rel: str) -> list[Finding]:
+    if rel == BUDGET_FILE:
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        consts = [s for a in node.args if (s := _const_str(a)) is not None]
+        if name == "count" and any(
+                tok in s for s in consts for tok in _CP_TOKENS):
+            out.append(_finding(
+                "hlo-counter-outside-budget", rel, node.lineno,
+                'hand-rolled .count("collective_permute") — use '
+                "repro.analysis.hlo_budget.count_collective_permutes"))
+        if isinstance(node.func, ast.Attribute) \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id == "re" \
+                and any(tok in s for s in consts for tok in _CP_TOKENS):
+            out.append(_finding(
+                "hlo-counter-outside-budget", rel, node.lineno,
+                "hand-rolled collective-permute regex — use "
+                "repro.analysis.hlo_budget"))
+    return out
+
+
+_WRAPPER_PREFIXES = ("circulant_", "hierarchical_")
+_DISPATCHERS = {"reduce_scatter", "allreduce", "allgather", "alltoall"}
+_FUNNEL_CALLS = {"plan", "_dispatch", "as_spec"}
+
+
+def _rule_spec_funnel(tree, rel: str) -> list[Finding]:
+    if rel != COLLECTIVES_FILE:
+        return []
+    out = []
+    fns = [n for n in tree.body if isinstance(n, ast.FunctionDef)]
+    wrappers = {f.name for f in fns
+                if f.name.startswith(_WRAPPER_PREFIXES)
+                or f.name in _DISPATCHERS}
+    for f in fns:
+        if f.name not in wrappers:
+            continue
+        called = set()
+        for node in ast.walk(f):
+            if isinstance(node, ast.Call):
+                name = _call_name(node)
+                if name:
+                    called.add(name)
+        if not called & (_FUNNEL_CALLS | wrappers):
+            out.append(_finding(
+                "spec-funnel", rel, f.lineno,
+                f"public wrapper {f.name}() does not funnel through "
+                f"plan()/_dispatch (as_spec) or a sibling wrapper"))
+    return out
+
+
+_RULES = (_rule_jax_experimental, _rule_pallas_call, _rule_bare_impl,
+          _rule_hlo_counter, _rule_spec_funnel)
+
+
+# ---------------------------------------------------------------------------
+# Driver + ratchet
+# ---------------------------------------------------------------------------
+
+def _iter_py_files(root: Path):
+    for d in SCAN_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            yield path
+
+
+def lint_repo(root: str | Path = ".") -> list[Finding]:
+    """Raw findings over the repo tree (ratchet NOT applied)."""
+    root = Path(root)
+    findings: list[Finding] = []
+    for path in _iter_py_files(root):
+        rel = path.relative_to(root).as_posix()
+        try:
+            tree = ast.parse(path.read_text(), filename=rel)
+        except SyntaxError as e:
+            findings.append(_finding("syntax-error", rel, e.lineno or 0,
+                                     str(e)))
+            continue
+        for rule in _RULES:
+            findings.extend(rule(tree, rel))
+    return findings
+
+
+def load_ratchet(root: str | Path = ".") -> set[str]:
+    path = Path(root) / RATCHET_FILE
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return set(data.get("repo_lint", []))
+
+
+def save_ratchet(root: str | Path, findings: list[Finding]) -> None:
+    path = Path(root) / RATCHET_FILE
+    data = {
+        "_comment": (
+            "Pre-existing repro.analysis repo-lint exemptions. Entries are "
+            "'<file>::<rule>'. Shrink-only: remove entries as the "
+            "violations are fixed; --update-ratchet regenerates."),
+        "repo_lint": sorted({ratchet_key(f) for f in findings}),
+    }
+    path.write_text(json.dumps(data, indent=2) + "\n")
+
+
+def ratchet_key(f: Finding) -> str:
+    """Ratchet entries key on file x rule (no line number: unrelated
+    edits must not invalidate an exemption)."""
+    return f"{f.where.rsplit(':', 1)[0]}::{f.rule}"
+
+
+def run(root: str | Path = ".") -> tuple[list[Finding], list[Finding]]:
+    """(new findings, ratchet-waived findings) for the repo at ``root``."""
+    ratchet = load_ratchet(root)
+    fresh, waived = [], []
+    for f in lint_repo(root):
+        (waived if ratchet_key(f) in ratchet else fresh).append(f)
+    return fresh, waived

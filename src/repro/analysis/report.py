@@ -1,0 +1,73 @@
+"""Finding/report plumbing shared by the four analysis passes.
+
+A :class:`Finding` is one violated invariant, carrying enough structure
+for both the human rendering (``--all`` console output) and the
+machine-readable JSON report the CI ``analysis`` gate consumes.  This
+module is dependency-light on purpose: it must import before (and
+without) jax so ``python -m repro.analysis`` can set ``XLA_FLAGS``
+ahead of the first jax import.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One violated invariant.
+
+    ``pass_name`` is the emitting pass (verify / jaxpr / hlo / repo);
+    ``rule`` a stable kebab-case identifier (what ratchet entries key
+    on); ``where`` the subject (a ``file:line`` or a ``spec@p`` label);
+    ``message`` the human explanation.
+    """
+
+    pass_name: str
+    rule: str
+    where: str
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Ratchet key: location x rule, stable across reruns."""
+        return f"{self.where}::{self.rule}"
+
+    def render(self) -> str:
+        return f"[{self.pass_name}/{self.rule}] {self.where}: {self.message}"
+
+
+@dataclass
+class Report:
+    """Aggregated findings of one ``repro.analysis`` run."""
+
+    findings: list[Finding] = field(default_factory=list)
+    passes_run: list[str] = field(default_factory=list)
+    waived: list[Finding] = field(default_factory=list)  # ratchet-exempted
+
+    def extend(self, pass_name: str, findings: list[Finding]) -> None:
+        self.passes_run.append(pass_name)
+        self.findings.extend(findings)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for f in self.findings:
+            out[f.pass_name] = out.get(f.pass_name, 0) + 1
+        return out
+
+    def as_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "passes_run": self.passes_run,
+            "n_findings": len(self.findings),
+            "findings_by_pass": self.counts(),
+            "findings": [asdict(f) for f in self.findings],
+            "waived": [asdict(f) for f in self.waived],
+        }
+
+    def as_json(self) -> str:
+        return json.dumps(self.as_dict(), indent=2)

@@ -44,6 +44,7 @@ from .cost_model import (  # noqa: F401
     CommModel,
     a2a_round_entries,
     alltoallv_round_widths,
+    nonuniform_round_widths,
     t_allgather,
     t_allreduce,
     t_alltoall,

@@ -270,10 +270,10 @@ def run_case(mesh, p: int, case: Case, rng: np.random.Generator) -> None:
 
 def _n_collective_permutes(jitted, shape: tuple[int, ...]) -> int:
     """Lowered-HLO collective-permute count of a jitted per-rank wrapper
-    on an f32 input of ``shape`` (shared by the single-axis and
-    hierarchical round-count checks)."""
-    txt = jitted.lower(jax.ShapeDtypeStruct(shape, jnp.float32)).as_text()
-    return txt.count("collective_permute")
+    on an f32 input of ``shape`` (the repo-wide counter lives in
+    ``repro.analysis.hlo_budget``; this shim fixes the f32 dtype)."""
+    from repro.analysis.hlo_budget import count_collective_permutes_lowered
+    return count_collective_permutes_lowered(jitted, shape)
 
 
 def count_collective_permutes(mesh, p: int, fn,

@@ -140,6 +140,27 @@ def t_corollary3_bound(m: float, p: int, model: CommModel) -> float:
     return ceil_log2(p) * (model.alpha + (model.beta + model.gamma) * m)
 
 
+def nonuniform_round_widths(counts, schedule: str = "halving",
+                            group: int | None = None, *,
+                            phase: str = "rs") -> tuple[int, ...]:
+    """Per-round wire widths (rows) of the non-uniform RS/AG: the worst
+    windowed count sum over ranks — the exact per-round quantity
+    Corollary 3's bound maximizes over, and the analytic width the plan
+    layer's row tables must match (checked by ``repro.analysis``'s plan
+    verifier, so a table-construction bug cannot silently widen or
+    narrow the wire)."""
+    p = len(counts)
+    plans = (reduce_scatter_plan(p, schedule, group) if phase == "rs"
+             else allgather_plan(p, schedule, group))
+    widths = []
+    for pl in plans:
+        window = (range(pl.lo, pl.hi) if phase == "rs"
+                  else range(0, pl.nblocks))
+        w = max(sum(counts[(r + i) % p] for i in window) for r in range(p))
+        widths.append(max(w, 1))
+    return tuple(widths)
+
+
 def a2a_round_entries(p: int, schedule: str = "halving",
                       group: int | None = None) -> tuple[int, ...]:
     """Blocks each rank sends per round of alltoall-by-concatenation.

@@ -548,12 +548,22 @@ def plan(spec: CollectiveSpec | None = None, p: int | None = None,
     return _plan_cached(spec, int(p), axis_name)
 
 
+# Cache introspection rides on plan() itself: ``plan.cache_stats()`` /
+# ``plan.clear()``.  Both proxy the lru_cache on _plan_cached, so an
+# identity assertion like ``plan(s, ...) is plan(s, ...)`` plus a
+# hits/misses delta from cache_stats() observes the same cache.
+plan.cache_stats = _plan_cached.cache_info
+plan.clear = _plan_cached.cache_clear
+
+
 def plan_cache_info():
-    return _plan_cached.cache_info()
+    """Deprecated alias — use ``plan.cache_stats()``."""
+    return plan.cache_stats()
 
 
 def plan_cache_clear() -> None:
-    _plan_cached.cache_clear()
+    """Deprecated alias — use ``plan.clear()``."""
+    plan.clear()
 
 
 # ---------------------------------------------------------------------------

@@ -8,17 +8,10 @@ Three terms per (arch × shape × mesh), all in seconds-per-step per chip
   collective = effective_collective_bytes / link_bw  (~50 GB/s/link ICI)
 
 ``cost_analysis()`` provides per-device FLOPs and bytes.  Collective bytes
-are NOT in cost_analysis: we parse the post-SPMD HLO text and sum, per
-collective op, the bytes that actually cross links per participating
-device:
-
-  collective-permute     size                  (one send per device)
-  all-gather             out * (g-1)/g
-  reduce-scatter         out * (g-1)            (= in * (g-1)/g)
-  all-reduce             2 * size * (g-1)/g     (RS + AG decomposition)
-  all-to-all             size * (g-1)/g
-
-with g parsed from replica_groups (explicit or iota form).
+are NOT in cost_analysis: they come from ``parse_collectives`` in
+``repro.analysis.hlo_budget`` — the repo's single HLO collective parser
+(effective link bytes per op, async start/done pairs counted once),
+re-exported here for callers that import it from the roofline namespace.
 
 MODEL_FLOPS = 6·N·D for training cells (N = total params dense / active
 params MoE; D = tokens per chip per step) and 2·N·D for inference cells
@@ -27,109 +20,18 @@ remat/redundancy waste.
 """
 from __future__ import annotations
 
-import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro import compat
+from repro.analysis.hlo_budget import (  # noqa: F401  (re-exports)
+    COLLECTIVE_OPS,
+    CollectiveStats,
+    parse_collectives,
+)
 
 PEAK_FLOPS = 197e12       # bf16 / chip
 HBM_BW = 819e9            # B/s
 LINK_BW = 50e9            # B/s per ICI link
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-}
-
-_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
-_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-
-COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                  "collective-permute")
-
-
-def _shape_bytes(type_str: str) -> tuple[int, dict]:
-    """(total bytes, per-dtype byte breakdown) of an HLO type string.
-    The breakdown is what makes a compressed (s8-wire) collective visible
-    next to its uncompressed (f32/bf16) peer in the roofline report."""
-    total = 0
-    by_dtype: dict[str, int] = {}
-    for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        nbytes = n * _DTYPE_BYTES[dtype]
-        total += nbytes
-        by_dtype[dtype] = by_dtype.get(dtype, 0) + nbytes
-    return total, by_dtype
-
-
-def _group_size(line: str) -> int:
-    m = _GROUPS_EXPL_RE.search(line)
-    if m:
-        return len(m.group(1).split(","))
-    m = _GROUPS_IOTA_RE.search(line)
-    if m:
-        return int(m.group(2))
-    return 2  # conservative default
-
-
-@dataclass
-class CollectiveStats:
-    ops: dict = field(default_factory=dict)        # op -> count
-    bytes_by_op: dict = field(default_factory=dict)  # op -> effective bytes
-    raw_bytes_by_op: dict = field(default_factory=dict)
-    raw_bytes_by_dtype: dict = field(default_factory=dict)  # s8/f32/... ->
-    #                               raw payload bytes (compressed-wire audit)
-
-    @property
-    def total_bytes(self) -> float:
-        return sum(self.bytes_by_op.values())
-
-    @property
-    def total_count(self) -> int:
-        return sum(self.ops.values())
-
-
-def parse_collectives(hlo_text: str) -> CollectiveStats:
-    """Scan post-SPMD HLO for collective ops; returns per-device effective
-    link bytes.  Start/done pairs are counted once (via -start)."""
-    stats = CollectiveStats()
-    for line in hlo_text.splitlines():
-        line = line.strip()
-        m = re.match(r"%?[\w.\-]+ = (.+?) ([\w\-]+)\(", line)
-        if not m:
-            continue
-        type_str, opname = m.groups()
-        base = opname.replace("-start", "")
-        if base.endswith("-done") or base not in COLLECTIVE_OPS:
-            continue
-        size, size_by_dtype = _shape_bytes(type_str)
-        g = _group_size(line)
-        if base == "collective-permute":
-            eff = size
-        elif base == "all-gather":
-            eff = size * (g - 1) / g
-        elif base == "reduce-scatter":
-            eff = size * (g - 1)
-        elif base == "all-reduce":
-            eff = 2 * size * (g - 1) / g
-        else:  # all-to-all
-            eff = size * (g - 1) / g
-        stats.ops[base] = stats.ops.get(base, 0) + 1
-        stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + eff
-        stats.raw_bytes_by_op[base] = (stats.raw_bytes_by_op.get(base, 0)
-                                       + size)
-        for dt, nb in size_by_dtype.items():
-            stats.raw_bytes_by_dtype[dt] = (
-                stats.raw_bytes_by_dtype.get(dt, 0) + nb)
-    return stats
 
 
 @dataclass

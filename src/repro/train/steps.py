@@ -81,11 +81,17 @@ def build_zero1(model: ModelApi, mesh: Mesh, recipe: ShardingRecipe,
     # Compile the grad-sync CollectivePlans up front: a bad sync config
     # (unknown schedule, wire×op conflict, ...) fails HERE with a config
     # error instead of mid-trace, and the per-axis plans are warm in the
-    # cache before the first step traces.
+    # cache before the first step traces.  Each plan then goes through
+    # the static verifier (Theorem 1 partition, deadlock-freedom, row
+    # tables) — the same pre-flight an elastic re-plan at a new world
+    # size would run before trusting the fresh geometry.
+    from repro.analysis.verify import assert_verified
     from repro.core.plan import plan as _plan
     for ax in collective_axes:
-        _plan(sync.rs_spec(), p=mesh.shape[ax], axis_name=ax)
-        _plan(sync.ag_spec(), p=mesh.shape[ax], axis_name=ax)
+        assert_verified(_plan(sync.rs_spec(), p=mesh.shape[ax],
+                              axis_name=ax))
+        assert_verified(_plan(sync.ag_spec(), p=mesh.shape[ax],
+                              axis_name=ax))
 
     # Expert-parallel MoE dispatch exchanges over cfg.ep_axis INSIDE the
     # step, so that axis must be manual too — and its alltoall(v) plans
@@ -100,7 +106,8 @@ def build_zero1(model: ModelApi, mesh: Mesh, recipe: ShardingRecipe,
                 f"which is not in mesh {dict(mesh.shape)}")
         from repro.models.dispatch import ep_collective_specs
         for sp in ep_collective_specs(model.cfg, mesh.shape[ep_axis]):
-            _plan(sp, p=mesh.shape[ep_axis], axis_name=ep_axis)
+            assert_verified(_plan(sp, p=mesh.shape[ep_axis],
+                                  axis_name=ep_axis))
 
     # Inside the manual region the data axes are already per-shard: the
     # inner model must only constrain over the AUTO (model) axis.  On JAX

@@ -27,6 +27,8 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro import compat  # noqa: E402
+from repro.analysis.hlo_budget import (  # noqa: E402
+    count_collective_permutes_lowered)
 from repro.core import collectives as C  # noqa: E402
 from repro.core import simulator as sim  # noqa: E402
 from repro.core.schedule import ceil_log2  # noqa: E402
@@ -203,8 +205,7 @@ check(f"circulant_alltoall (p={p})")
 def count_cp(fn):
     f = jax.jit(compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
                                  in_specs=(P("x"),), out_specs=P("x")))
-    txt = f.lower(jax.ShapeDtypeStruct((p, p * BLK), jnp.float32)).as_text()
-    return txt.count("collective_permute")
+    return count_collective_permutes_lowered(f, (p, p * BLK))
 
 
 q = ceil_log2(p)

@@ -22,6 +22,8 @@ import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import compat  # noqa: E402
+from repro.analysis.hlo_budget import (  # noqa: E402
+    count_collective_permutes)
 from repro.configs import get_config  # noqa: E402
 from repro.data import for_model  # noqa: E402
 from repro.models import ShardingRecipe, build  # noqa: E402
@@ -153,8 +155,7 @@ check(f"ZeRO-1 opt bytes/device {opt_bytes_per_dev} <~ full/4 "
 batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
 with compat.use_mesh(mesh):
     lowered = jax.jit(built.step_fn).lower(params, opt, batch)
-txt = lowered.as_text()
-n_cp = txt.count("collective_permute")
+n_cp = count_collective_permutes(lowered.as_text())
 q = ceil_log2(4)
 check(f"train-step HLO has >= {2 * q} collective-permutes (got {n_cp})",
       n_cp >= 2 * q)

@@ -1,0 +1,299 @@
+"""repro.analysis: the static verifier must kill seeded plan corruptions
+(mutation testing), stay silent on every clean plan (property sweep), and
+the repo lint / CLI must work end to end.
+
+The mutation suite is the verifier's own test harness: each mutant is a
+``dataclasses.replace`` of a REAL plan with one seeded defect — a dropped
+skip, swapped row-table entries, an inflated wire width, a duplicated
+send — and the verifier must produce at least one finding for every one
+of them (a verifier that misses a mutant would wave through the same
+corruption at pre-flight time).
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_budget import (count_collective_permutes,
+                                       parse_collectives)
+from repro.analysis.report import Finding, Report
+from repro.analysis.verify import (assert_verified, registry_specs,
+                                   verify, verify_plan)
+from repro.core import CollectiveSpec, plan
+from tests._hypothesis_compat import given, settings, st
+
+AX = "x"
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _plan(spec, p):
+    return plan(spec, p=p, axis_name=AX)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# Clean plans: zero findings (the sweep the CLI gates on)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=2, max_value=64),
+       st.sampled_from(["halving", "power2", "fully_connected", "sqrt"]))
+@settings(max_examples=60, deadline=None)
+def test_clean_uniform_plans_verify(p, schedule):
+    assert verify(CollectiveSpec(schedule=schedule), p=p) == []
+
+
+@given(st.integers(min_value=2, max_value=24),
+       st.sampled_from(["halving", "power2"]))
+@settings(max_examples=40, deadline=None)
+def test_clean_nonuniform_plans_verify(p, schedule):
+    counts = tuple((3 * i + 1) % 5 for i in range(p))
+    if sum(counts) == 0:
+        counts = (1,) * p
+    spec = CollectiveSpec(schedule=schedule, counts=counts)
+    assert verify(spec, p=p) == []
+
+
+@given(st.integers(min_value=2, max_value=12))
+@settings(max_examples=20, deadline=None)
+def test_clean_alltoallv_plans_verify(p):
+    counts = tuple(tuple((i + 2 * j + 1) % 3 for j in range(p))
+                   for i in range(p))
+    assert verify(CollectiveSpec(counts=counts), p=p) == []
+
+
+def test_registry_sweep_is_clean():
+    for p in (2, 3, 5, 8, 16):
+        for spec in registry_specs(p):
+            assert verify_plan(_plan(spec, p)) == [], \
+                f"{spec.label} @ p={p}"
+
+
+def test_assert_verified_passes_through_clean_plan():
+    pl = _plan(CollectiveSpec(), 8)
+    assert assert_verified(pl) is pl
+
+
+# ---------------------------------------------------------------------------
+# Mutation kill: every seeded corruption must be flagged
+# ---------------------------------------------------------------------------
+
+def test_mutant_dropped_skip_is_killed():
+    pl = _plan(CollectiveSpec(), 8)
+    mut = dataclasses.replace(
+        pl,
+        skips=pl.skips[:-1], rs_rounds=pl.rs_rounds[:-1],
+        rs_send_blocks=pl.rs_send_blocks[:-1],
+        rs_recv_blocks=pl.rs_recv_blocks[:-1],
+        ag_rounds=pl.ag_rounds[1:], ag_send_blocks=pl.ag_send_blocks[1:],
+        ag_recv_blocks=pl.ag_recv_blocks[1:])
+    findings = verify_plan(mut)
+    assert findings, "dropped skip not detected"
+    assert _rules(findings) & {"theorem1-partition", "round-count",
+                               "schedule-invalid"}
+    with pytest.raises(AssertionError):
+        assert_verified(mut)
+
+
+def test_mutant_swapped_table_rows_is_killed():
+    spec = CollectiveSpec(counts=(3, 1, 6, 4, 2))
+    pl = _plan(spec, 5)
+    tab = pl.rs_row_tables[0].copy()
+    sent = pl.layout.total
+    # swap the first differing non-sentinel entries of two ranks' rows
+    swapped = False
+    for c1 in range(tab.shape[1]):
+        for c2 in range(tab.shape[1]):
+            a, b = tab[0, c1], tab[1, c2]
+            if a != sent and b != sent and a != b:
+                tab[0, c1], tab[1, c2] = b, a
+                swapped = True
+                break
+        if swapped:
+            break
+    assert swapped
+    mut = dataclasses.replace(
+        pl, rs_row_tables=(tab,) + pl.rs_row_tables[1:])
+    findings = verify_plan(mut)
+    assert findings, "swapped row-table entries not detected"
+    assert _rules(findings) & {"duplicate-contribution",
+                               "incomplete-reduction", "duplicate-send"}
+
+
+def test_mutant_inflated_width_is_killed():
+    spec = CollectiveSpec(counts=(3, 1, 6, 4, 2))
+    pl = _plan(spec, 5)
+    tab = pl.rs_row_tables[0]
+    wide = np.concatenate(
+        [tab, np.full((tab.shape[0], 1), pl.layout.total, tab.dtype)],
+        axis=1)
+    mut = dataclasses.replace(
+        pl, rs_row_tables=(wide,) + pl.rs_row_tables[1:])
+    findings = verify_plan(mut)
+    assert findings, "inflated wire width not detected"
+    assert "width-bound" in _rules(findings)
+
+
+def test_mutant_inflated_a2a_width_is_killed():
+    counts = tuple(tuple((i + 2 * j + 1) % 3 for j in range(5))
+                   for i in range(5))
+    pl = _plan(CollectiveSpec(counts=counts), 5)
+    tab = pl.a2a.round_tables[0]
+    wide = np.concatenate(
+        [tab, np.full((tab.shape[0], 1), pl.a2a.total, tab.dtype)], axis=1)
+    mut = dataclasses.replace(
+        pl, a2a=dataclasses.replace(
+            pl.a2a, round_tables=(wide,) + pl.a2a.round_tables[1:]))
+    findings = verify_plan(mut)
+    assert findings, "inflated alltoallv width not detected"
+    assert "width-bound" in _rules(findings)
+
+
+def test_mutant_duplicated_send_is_killed():
+    pl = _plan(CollectiveSpec(), 8)
+    win = list(pl.rs_send_blocks[0])
+    assert len(win) >= 2
+    dup = (win[0],) + tuple(win[:-1])  # repeat one block, drop one
+    mut = dataclasses.replace(
+        pl, rs_send_blocks=(dup,) + pl.rs_send_blocks[1:])
+    findings = verify_plan(mut)
+    assert findings, "duplicated send block not detected"
+    assert _rules(findings) & {"duplicate-send", "theorem1-partition",
+                               "window-mismatch"}
+
+
+def test_mutant_self_send_is_killed():
+    pl = _plan(CollectiveSpec(), 8)
+    bad = dataclasses.replace(pl.rs_rounds[0], skip=0, lo=0)
+    mut = dataclasses.replace(
+        pl, skips=(0,) + pl.skips[1:],
+        rs_rounds=(bad,) + pl.rs_rounds[1:])
+    findings = verify_plan(mut)
+    assert findings, "self-send round not detected"
+    assert _rules(findings) & {"self-send", "schedule-invalid"}
+
+
+# ---------------------------------------------------------------------------
+# HLO budget parser
+# ---------------------------------------------------------------------------
+
+def test_count_collective_permutes_both_formats():
+    mlir = ('%0 = "stablehlo.collective_permute"(%arg) ...\n'
+            '%1 = "stablehlo.collective_permute"(%0) ...\n')
+    assert count_collective_permutes(mlir) == 2
+    hlo = ("  %a = f32[8]{0} collective-permute(%x), "
+           "source_target_pairs={{0,1}}\n"
+           "  %b = (f32[8]{0}, f32[8]{0}, u32[], u32[]) "
+           "collective-permute-start(%a)\n"
+           "  %c = f32[8]{0} collective-permute-done(%b)\n")
+    assert count_collective_permutes(hlo) == 2
+
+
+def test_parse_collectives_async_tuple_payload_once():
+    hlo = ("  %s = (bf16[64,4]{1,0}, bf16[64,4]{1,0}, u32[], u32[]) "
+           "collective-permute-start(%x), source_target_pairs={{0,1}}\n")
+    st_ = parse_collectives(hlo)
+    assert st_.ops == {"collective-permute": 1}
+    assert st_.raw_bytes_by_op["collective-permute"] == 64 * 4 * 2
+    assert st_.raw_bytes_by_dtype == {"bf16": 64 * 4 * 2}
+
+
+# ---------------------------------------------------------------------------
+# Repo lint + ratchet
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, rel, text):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text)
+
+
+def test_repo_lint_rules_fire(tmp_path):
+    from repro.analysis import repo_lint
+    _write(tmp_path, "src/bad.py", (
+        "import jax.experimental.pallas as plx\n"
+        "y = plx.pallas_call(lambda: None)\n"
+        'n = txt.count("collective_permute")\n'
+        'reduce_scatter(x, impl="ring")\n'))
+    findings = repo_lint.lint_repo(tmp_path)
+    assert _rules(findings) >= {
+        "jax-experimental-outside-compat", "pallas-call-outside-kernels",
+        "hlo-counter-outside-budget", "bare-impl-string"}
+
+
+def test_repo_lint_ratchet_waives_and_shrinks(tmp_path):
+    from repro.analysis import repo_lint
+    _write(tmp_path, "src/bad.py", "import jax.experimental.pallas\n")
+    findings = repo_lint.lint_repo(tmp_path)
+    assert findings
+    repo_lint.save_ratchet(tmp_path, findings)
+    fresh, waived = repo_lint.run(tmp_path)
+    assert fresh == [] and len(waived) == len(findings)
+    # a NEW violation in another file is not covered by the ratchet
+    _write(tmp_path, "src/worse.py", "from jax.experimental import pallas\n")
+    fresh, waived = repo_lint.run(tmp_path)
+    assert [f.where.split(":")[0] for f in fresh] == ["src/worse.py"]
+
+
+def test_repo_lint_repo_is_clean():
+    from repro.analysis import repo_lint
+    fresh, _waived = repo_lint.run(ROOT)
+    assert fresh == [], "\n".join(f.render() for f in fresh)
+
+
+def test_only_one_hlo_counter_exists():
+    """Exactly one collective-permute counter: every hand-rolled
+    ``.count("collective_permute")``/regex outside hlo_budget.py is a
+    repo-lint finding AND must not be ratcheted away."""
+    from repro.analysis import repo_lint
+    waived_counter = [
+        k for k in repo_lint.load_ratchet(ROOT)
+        if k.endswith("hlo-counter-outside-budget")]
+    assert waived_counter == []
+
+
+# ---------------------------------------------------------------------------
+# Report + CLI
+# ---------------------------------------------------------------------------
+
+def test_report_shape_and_exit_semantics():
+    rep = Report()
+    rep.extend("verify", [])
+    assert rep.ok
+    rep.extend("repo", [Finding(pass_name="repo", rule="r", where="w",
+                                message="m")])
+    assert not rep.ok
+    d = json.loads(rep.as_json())
+    assert d["ok"] is False
+    assert d["passes_run"] == ["verify", "repo"]
+    assert d["findings_by_pass"] == {"repo": 1}
+
+
+def _run_cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=600)
+
+
+def test_cli_verify_and_repo_exit_zero(tmp_path):
+    out = tmp_path / "report.json"
+    r = _run_cli("--verify", "--repo", "--p", "2,3,4,8",
+                 "--json", str(out))
+    assert r.returncode == 0, r.stdout + r.stderr
+    rep = json.loads(out.read_text())
+    assert rep["ok"] is True
+    assert rep["passes_run"] == ["verify", "repo"]
+
+
+def test_cli_jaxpr_pass_exit_zero():
+    r = _run_cli("--jaxpr")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "passes=jaxpr findings=0" in r.stdout

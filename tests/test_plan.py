@@ -146,6 +146,20 @@ def test_plan_cache_returns_same_object():
     assert plan(spec, p=3, axis_name="y") is not a
 
 
+def test_plan_cache_stats_identity():
+    # plan.cache_stats()/plan.clear() and the legacy plan_cache_info()
+    # observe the SAME lru cache: a hit through plan() moves both.
+    spec = CollectiveSpec(schedule="halving")
+    plan(spec, p=5, axis_name=AX)
+    s0, legacy0 = plan.cache_stats(), plan_cache_info()
+    assert (s0.hits, s0.misses) == (legacy0.hits, legacy0.misses)
+    plan(spec, p=5, axis_name=AX)  # cached: one hit, zero misses
+    s1 = plan.cache_stats()
+    assert s1.hits == s0.hits + 1
+    assert s1.misses == s0.misses
+    assert callable(plan.clear)
+
+
 def test_spec_hashable_and_normalized():
     s1 = CollectiveSpec(counts=(np.int64(2), np.int64(3)))
     s2 = CollectiveSpec(counts=(2, 3))

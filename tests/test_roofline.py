@@ -51,6 +51,24 @@ def test_parse_start_done_counted_once():
     assert st.ops == {"collective-permute": 1}
 
 
+def test_parse_async_tuple_start_bytes_counted_once():
+    """Regression: an async collective-permute-start has a TUPLE result
+    type aliasing operand + result (+ u32 context scalars).  Summing
+    every tuple element double-counted the payload; only the result
+    buffer (tuple index 1) may contribute."""
+    hlo = """
+  %cps = (f32[256,8]{1,0}, f32[256,8]{1,0}, u32[], u32[]) collective-permute-start(%x), source_target_pairs={{0,1},{1,0}}
+  %cpd = f32[256,8]{1,0} collective-permute-done(%cps)
+"""
+    st = A.parse_collectives(hlo)
+    assert st.ops == {"collective-permute": 1}
+    payload = 256 * 8 * 4
+    assert st.raw_bytes_by_op["collective-permute"] == payload
+    assert st.bytes_by_op["collective-permute"] == payload
+    # the u32 context scalars must not leak into the dtype breakdown
+    assert st.raw_bytes_by_dtype == {"f32": payload}
+
+
 def test_cost_analysis_undercounts_loops():
     """The motivating defect: flops identical for 2 vs 8 scan iterations."""
     def make(nl):
