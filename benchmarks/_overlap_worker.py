@@ -1,0 +1,216 @@
+"""Subprocess worker for bench_overlap: the bucketed, software-pipelined
+grad-sync path measured end-to-end on 8 fake CPU devices.
+
+Per spec it emits CSV rows with:
+
+  rs_pipelined_p8   B-payload pipelined reduce-scatter: lowered-HLO
+                    collective-permute count vs B*ceil(log2 p) (cp_delta,
+                    want 0 — one ppermute per round per bucket, rounds
+                    interleaved at the start_round/finish_round seam) and
+                    bitwise equality against the one-shot path;
+  ar_pipelined_p8   same for allreduce (RS+AG): cp vs 2*B*ceil(log2 p);
+  step_unbucketed / step_bucketed
+                    min-of-N ZeRO-1 train-step wall clock on the smoke
+                    config at the launcher-default seq_len (the regime
+                    the gate is about: sync cost amortized against a
+                    realistic step), unbucketed vs bucket_bytes-
+                    partitioned; the bucketed row carries ratio = median
+                    of paired bucketed/unbucketed reps (want <= 1.05 —
+                    bucketing must not cost a serial slowdown);
+  step_hlo          lowered bucketed train step: data-axis collective-
+                    permutes vs 2*B*ceil(log2 d) (cp_delta, want 0);
+  trajectory        short bucketed-f32 training run bitwise-equal to
+                    unbucketed (bitwise flag) and bucketed int8+EF within
+                    the documented wire tolerance of it (within_tol).
+
+Emits CSV rows on stdout; the gate logic lives in benchmarks/ci_gate.py.
+"""
+import os
+import sys
+import time
+
+import re  # noqa: E402 — strip inherited count: XLA keeps the LAST flag
+_inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                    os.environ.get("XLA_FLAGS", ""))
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + _inherited)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import compat  # noqa: E402
+from repro.analysis.hlo_budget import (  # noqa: E402
+    count_collective_permutes)
+from repro.configs import get_config  # noqa: E402
+from repro.core import CollectiveSpec, plan  # noqa: E402
+from repro.core.schedule import ceil_log2  # noqa: E402
+from repro.data import for_model  # noqa: E402
+from repro.models import ShardingRecipe, build  # noqa: E402
+from repro.optim.adamw import AdamWConfig  # noqa: E402
+from repro.optim.zero1 import (GradSyncConfig, is_zero_leaf,  # noqa: E402
+                               plan_grad_buckets)
+from repro.train import build as build_step  # noqa: E402
+
+NDEV = 8
+rng = np.random.default_rng(11)
+
+# --------------------------------------------------------------------------
+# Pipelined RS / AR on a 1-D mesh: per-bucket round budget + bitwise check.
+# --------------------------------------------------------------------------
+mesh1 = compat.make_mesh((NDEV,), ("x",))
+q = ceil_log2(NDEV)
+SHAPES = [(NDEV * 8,), (NDEV * 4,), (NDEV * 6,)]
+B = len(SHAPES)
+pl = plan(CollectiveSpec(), p=NDEV, axis_name="x")
+
+
+def sharded(fn, nshapes):
+    return jax.jit(compat.shard_map(
+        lambda *vs: tuple(o[None] for o in fn([v[0] for v in vs])),
+        mesh=mesh1, in_specs=tuple(P("x") for _ in range(nshapes)),
+        out_specs=tuple(P("x") for _ in range(nshapes)), check_vma=False))
+
+
+def timed(f, xs, iters=10):
+    outs = f(*xs)
+    jax.block_until_ready(outs)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        outs = f(*xs)
+    jax.block_until_ready(outs)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+xs = [jnp.asarray(rng.standard_normal((NDEV, *s)).astype(np.float32))
+      for s in SHAPES]
+
+f_one = sharded(lambda vs: [pl.reduce_scatter(v) for v in vs], B)
+f_pipe = sharded(lambda vs: pl.reduce_scatter_pipelined(vs), B)
+bitwise = all(np.array_equal(np.asarray(a), np.asarray(b))
+              for a, b in zip(f_one(*xs), f_pipe(*xs)))
+avals = [jax.ShapeDtypeStruct((NDEV, *s), jnp.float32) for s in SHAPES]
+cp = count_collective_permutes(f_pipe.lower(*avals).as_text())
+us = timed(f_pipe, xs)
+print(f"overlap/rs_pipelined_p{NDEV},{us:.3f},"
+      f"bitwise={bitwise};cp={cp};theory={B * q};"
+      f"cp_delta={cp - B * q};buckets={B}")
+
+f_ar_pipe = sharded(
+    lambda vs: pl.allgather_pipelined(pl.reduce_scatter_pipelined(vs)), B)
+f_ar_one = sharded(
+    lambda vs: [pl.allgather(pl.reduce_scatter(v)) for v in vs], B)
+bitwise = all(np.array_equal(np.asarray(a), np.asarray(b))
+              for a, b in zip(f_ar_one(*xs), f_ar_pipe(*xs)))
+cp = count_collective_permutes(f_ar_pipe.lower(*avals).as_text())
+us = timed(f_ar_pipe, xs)
+print(f"overlap/ar_pipelined_p{NDEV},{us:.3f},"
+      f"bitwise={bitwise};cp={cp};theory={2 * B * q};"
+      f"cp_delta={cp - 2 * B * q};buckets={B}")
+
+# --------------------------------------------------------------------------
+# ZeRO-1 smoke config: bucketed vs unbucketed train step.
+# --------------------------------------------------------------------------
+DATA, MODEL = 4, 2
+mesh = compat.make_mesh((DATA, MODEL), ("data", "model"))
+cfg = get_config("qwen3-1.7b").scaled_down(n_layers=2, vocab_size=64)
+opt_cfg = AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=50,
+                      weight_decay=0.01)
+pipe = for_model(cfg, seq_len=128, global_batch=8, seed=3)
+BUCKET_BYTES = 1 << 18
+
+
+def make_step(**sync_kw):
+    recipe = ShardingRecipe(data_axes=("data",), model_axis="model")
+    model = build(cfg, recipe=recipe, remat=False)
+    with compat.use_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(0))
+    sync = GradSyncConfig(quant_group=64, **sync_kw)  # impl defaults to circulant
+    built = build_step("zero1", model, opt_cfg, mesh=mesh, recipe=recipe,
+                       sync=sync)
+    opt = jax.device_put(built.init_opt(params), built.opt_spec(params))
+    return model, built, params, opt
+
+
+def batch_at(step, built):
+    return {k: jax.device_put(
+        jnp.asarray(v), NamedSharding(mesh, built.batch_spec))
+        for k, v in pipe.batch_at(step).items()}
+
+
+def run_steps(built, params, opt, n):
+    losses = []
+    with compat.use_mesh(mesh):
+        for step in range(n):
+            params, opt, m = built.step_fn(params, opt, batch_at(step, built))
+            losses.append(float(m["loss"]))
+    return np.array(losses), params, opt
+
+
+def time_step(built, params, opt, iters):
+    b = batch_at(0, built)
+    with compat.use_mesh(mesh):
+        p2, o2, m = built.step_fn(params, opt, b)  # compile + warm
+        jax.block_until_ready((p2, o2, m))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            p2, o2, m = built.step_fn(params, opt, b)
+        jax.block_until_ready((p2, o2, m))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+model_u, built_u, params_u, opt_u = make_step()
+model_b, built_b, params_b, opt_b = make_step(bucket_bytes=BUCKET_BYTES)
+
+# Paired back-to-back reps: per-rep ratios cancel common-mode machine-load
+# drift on shared runners; report min-of-reps times + the median ratio.
+t_u, t_b, ratios = 1e30, 1e30, []
+for _ in range(9):
+    tu = time_step(built_u, params_u, opt_u, iters=5)
+    tb = time_step(built_b, params_b, opt_b, iters=5)
+    ratios.append(tb / tu)
+    t_u, t_b = min(t_u, tu), min(t_b, tb)
+ratio = sorted(ratios)[len(ratios) // 2]
+
+# Bucket geometry of this config, for the per-bucket round budget.
+abs_params = jax.eval_shape(model_b.init, jax.random.PRNGKey(0))
+zshapes = [l.shape for l in jax.tree.leaves(abs_params)
+           if is_zero_leaf(l.shape, DATA, GradSyncConfig().min_shard_numel)]
+n_buckets = len(plan_grad_buckets(zshapes, DATA, BUCKET_BYTES, 4))
+qd = ceil_log2(DATA)
+
+print(f"overlap/step_unbucketed,{t_u:.3f},buckets=1")
+print(f"overlap/step_bucketed,{t_b:.3f},"
+      f"buckets={n_buckets};unbucketed_us={t_u:.3f};ratio={ratio:.3f}")
+
+# Per-bucket round budget in the lowered train step: every bucket runs one
+# circulant RS (q ppermutes) + one AG (q more) over the data axis; nothing
+# else in the step emits a collective-permute (model-axis sync is psum).
+b0 = batch_at(0, built_b)
+with compat.use_mesh(mesh):
+    hlo = jax.jit(built_b.step_fn).lower(params_b, opt_b, b0).as_text()
+cp = count_collective_permutes(hlo)
+theory = 2 * n_buckets * qd
+print(f"overlap/step_hlo,0.000,"
+      f"cp={cp};theory={theory};cp_delta={cp - theory};"
+      f"buckets={n_buckets};rounds_per_rs={qd}")
+
+# --------------------------------------------------------------------------
+# Trajectory: bucketed f32 bitwise == unbucketed; bucketed int8+EF within
+# the documented wire tolerance (README §Compressed wire format: 0.05 on
+# the smoke config).
+# --------------------------------------------------------------------------
+N_STEPS = 4
+TOL = 0.05
+losses_u, _, _ = run_steps(built_u, params_u, opt_u, N_STEPS)
+losses_b, _, _ = run_steps(built_b, params_b, opt_b, N_STEPS)
+bitwise = bool(np.array_equal(losses_u, losses_b))
+_, built_c, params_c, opt_c = make_step(bucket_bytes=BUCKET_BYTES,
+                                        wire_dtype="int8")
+losses_c, _, _ = run_steps(built_c, params_c, opt_c, N_STEPS)
+err = float(np.abs(losses_c - losses_u).max())
+print(f"overlap/trajectory,0.000,"
+      f"bitwise={bitwise};max_err_int8={err:.2e};tol={TOL};"
+      f"within_tol={err < TOL};steps={N_STEPS}")

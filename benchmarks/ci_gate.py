@@ -27,7 +27,14 @@ budget violation, which this gate surfaces as failures), parses the CSV into ``B
   fused AND ragged (per-pair counts) forms; the alltoallv wire widths equal the analytic
   worst-windowed-count-sum bound exactly; the fused/jnp uniform alltoall stays within
   ``A2A_RATIO_MAX``; and the MoE expert-parallel dispatch (``moe_dispatch='ep'``, ragged
-  expert ownership) matches the single-pool 'global' reference (``allclose=True``).
+  expert ownership) matches the single-pool 'global' reference (``allclose=True``);
+* bucketed-overlap rows (``overlap/``): the pipelined multi-payload RS/AR and the bucketed
+  ZeRO-1 train step lower to exactly B * ceil(log2 p) collective-permutes per RS (2x for
+  allreduce) — one ppermute per round per bucket, nothing extra from the round seam
+  (``cp_delta == 0``); the pipelined drivers are bitwise-equal to the one-shot path; the
+  bucketed step stays within ``OVERLAP_RATIO_MAX`` of the unbucketed step (median of paired
+  reps at the launcher-default seq_len); and the bucketed int8+EF trajectory stays inside the
+  documented wire tolerance (``within_tol``).
 
 Usage:  PYTHONPATH=src python -m benchmarks.ci_gate [--out BENCH_ci.json]
 Exit code 0 iff every check passes.
@@ -54,7 +61,12 @@ WIRE_REDUCTION_MIN = 3.0
 # observed); 1.5 catches a structural regression (an extra buffer copy
 # per round lands well above it).
 A2A_RATIO_MAX = 1.5
-ONLY = "rounds,kernels,wire,plans,a2a,analysis"
+# Bucketing trades per-leaf collectives for bucket assembly; at the
+# launcher-default seq_len the sync path is amortized against real step
+# work and the paired-rep median sits at ~1.0, so 1.05 catches a real
+# serialization regression (a lost overlap seam lands well above it).
+OVERLAP_RATIO_MAX = 1.05
+ONLY = "rounds,kernels,wire,plans,a2a,overlap,analysis"
 
 
 def parse_csv(text: str) -> list[dict]:
@@ -127,6 +139,27 @@ def check(rows: list[dict]) -> list[str]:
                         f"{row['name']}: fused/jnp ratio {ratio:.3f} > "
                         f"{A2A_RATIO_MAX} (interpret-mode noise backstop)"
                     )
+        if row["name"].startswith("overlap/"):
+            f = row["fields"]
+            if "cp_delta" in f and f["cp_delta"] != "0":
+                failures.append(
+                    f"{row['name']}: {f.get('cp')} collective-permutes, "
+                    f"want {f.get('theory')} (one ppermute per round per "
+                    f"bucket; the multi-call seam must add zero)"
+                )
+            if "ratio" in f:
+                ratio = float(f["ratio"])
+                if ratio > OVERLAP_RATIO_MAX:
+                    failures.append(
+                        f"{row['name']}: bucketed/unbucketed step ratio "
+                        f"{ratio:.3f} > {OVERLAP_RATIO_MAX}"
+                    )
+            if "within_tol" in f and f["within_tol"] != "True":
+                failures.append(
+                    f"{row['name']}: bucketed int8+EF trajectory err "
+                    f"{f.get('max_err_int8')} outside wire tolerance "
+                    f"{f.get('tol')}"
+                )
         if row["name"].startswith("analysis/"):
             f = row["fields"]
             if f.get("findings", "0") != "0":
@@ -174,6 +207,11 @@ def check(rows: list[dict]) -> list[str]:
     if "a2a/moe_ep_parity" not in names:
         failures.append("no a2a/moe_ep_parity (ep vs global dispatch) row "
                         "produced")
+    for req in ("overlap/rs_pipelined_p8", "overlap/ar_pipelined_p8",
+                "overlap/step_bucketed", "overlap/step_hlo",
+                "overlap/trajectory"):
+        if req not in names:
+            failures.append(f"no {req} bucketed-overlap row produced")
     for pass_name in ("verify", "jaxpr", "hlo", "repo"):
         if f"analysis/{pass_name}" not in names:
             failures.append(f"no analysis/{pass_name} static-analysis row "

@@ -21,6 +21,11 @@ and the Corollary-2 schedule family.  Benchmarks:
                uniform, fused AND ragged per-pair counts; alltoallv wire
                widths == the analytic worst-windowed-count-sum bound;
                fused/jnp ratio; MoE ep-vs-global dispatch parity
+  overlap      bucketed, software-pipelined grad sync: per-bucket HLO
+               collective-permutes == B*ceil(log2 p) per RS (2x for AR),
+               pipelined drivers bitwise == one-shot, bucketed ZeRO-1
+               step within 1.05x of unbucketed, trajectory within wire
+               tolerances
   roofline     re-emit the dry-run roofline table (reads reports/dryrun)
 
 Output: ``name,us_per_call,derived`` CSV rows.
@@ -143,6 +148,23 @@ def bench_a2a():
                           text=True, timeout=900, env=env)
     if proc.returncode != 0:
         emit("a2a/ERROR", 0.0, proc.stderr[-200:].replace("\n", " "))
+        return
+    print(proc.stdout, end="")
+
+
+# ---------------------------------------------------------------------------
+def bench_overlap():
+    """Bucketed/overlapped grad-sync gate: pipelined round budgets,
+    bucketed-vs-unbucketed step ratio, trajectory equivalence.
+    Subprocess (needs fake devices)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    worker = os.path.join(here, "_overlap_worker.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, worker], capture_output=True,
+                          text=True, timeout=1200, env=env)
+    if proc.returncode != 0:
+        emit("overlap/ERROR", 0.0, proc.stderr[-200:].replace("\n", " "))
         return
     print(proc.stdout, end="")
 
@@ -364,6 +386,7 @@ BENCHES = {
     "wire": bench_wire,
     "plans": bench_plans,
     "a2a": bench_a2a,
+    "overlap": bench_overlap,
     "analysis": bench_analysis,
     "roofline": bench_roofline,
 }

@@ -1,0 +1,184 @@
+"""Markdown link & anchor checker for the docs tree.
+
+Validates every inline link in ``README.md`` + ``docs/*.md`` so docs rot
+fails CI (the docs job runs this next to the markdown doctests):
+
+* **relative file links** must resolve to an existing file inside the
+  repo (``docs/paper_map.md`` linking ``../src/repro/core/plan.py``);
+* **anchors** (``#section`` alone, or ``file.md#section``) must match a
+  heading in the target file, using GitHub's slug rules (lowercase,
+  spaces → ``-``, punctuation stripped, duplicate slugs suffixed
+  ``-1``, ``-2``, ...);
+* ``http(s)://`` / ``mailto:`` targets are skipped (no network in CI),
+  as are links that resolve *outside* the repo root — those are
+  GitHub-site-relative URLs (the CI badge) that cannot be validated
+  locally;
+* absolute filesystem targets (``/src/...``) are findings: links must
+  be relative so they work on GitHub, in local checkouts, and in
+  rendered docs alike.
+
+Fenced code blocks and inline code spans are stripped before scanning,
+so ``[i](j)``-shaped expressions in code samples are not treated as
+links.
+
+Pure stdlib (``re`` + ``pathlib``); no jax import.  Run standalone:
+
+    PYTHONPATH=src python -m repro.analysis.doc_lint [--root DIR]
+
+Exits non-zero on any finding.  ``tests/test_docs.py`` runs the same
+check in-process as part of tier-1.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+from dataclasses import dataclass
+
+__all__ = ["Finding", "check_file", "doc_files", "heading_slugs", "run"]
+
+# Inline links AND images: [text](target) / ![alt](target "title").
+_LINK = re.compile(r"!?\[[^\]\[]*\]\(\s*(<[^>]*>|[^)\s]+)(?:\s+\"[^\"]*\")?\s*\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+_CODE_SPAN = re.compile(r"`[^`]*`")
+_MD_INLINE = re.compile(r"[*_`]|\[([^\]]*)\]\([^)]*\)")  # formatting to strip
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One broken link: ``file:line`` plus a human-readable message."""
+    file: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.file}:{self.line}: {self.message}"
+
+
+def _slugify(heading: str) -> str:
+    """GitHub heading slug: strip formatting, lowercase, spaces → '-'."""
+    text = _MD_INLINE.sub(lambda m: m.group(1) or "", heading)
+    text = text.strip().lower()
+    out = []
+    for ch in text:
+        if ch.isalnum() or ch in "-_":
+            out.append(ch)
+        elif ch in " \t":
+            out.append("-")
+        # everything else (punctuation, arrows, ...) is dropped
+    return "".join(out)
+
+
+def heading_slugs(text: str) -> set[str]:
+    """All GitHub anchor slugs defined by ``text``'s ATX headings."""
+    seen: dict[str, int] = {}
+    slugs: set[str] = set()
+    in_fence = False
+    for line in text.splitlines():
+        if line.lstrip().startswith(("```", "~~~")):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if not m:
+            continue
+        slug = _slugify(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def _scannable_lines(text: str):
+    """Yield ``(lineno, line)`` with fenced blocks and code spans blanked."""
+    in_fence = False
+    for i, line in enumerate(text.splitlines(), start=1):
+        if line.lstrip().startswith(("```", "~~~")):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        yield i, _CODE_SPAN.sub("", line)
+
+
+def check_file(md_path: pathlib.Path, root: pathlib.Path) -> list[Finding]:
+    """Validate every link in one markdown file against the repo tree."""
+    rel = md_path.relative_to(root).as_posix()
+    text = md_path.read_text()
+    own_slugs = heading_slugs(text)
+    out: list[Finding] = []
+    for lineno, line in _scannable_lines(text):
+        for m in _LINK.finditer(line):
+            target = m.group(1).strip("<>")
+            if target.startswith(_SKIP_SCHEMES):
+                continue
+            if target.startswith("#"):  # same-file anchor
+                if target[1:] not in own_slugs:
+                    out.append(Finding(rel, lineno,
+                        f"anchor {target!r} matches no heading in this file"))
+                continue
+            if target.startswith("/"):
+                out.append(Finding(rel, lineno,
+                    f"absolute link {target!r}; use a repo-relative path"))
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = (md_path.parent / path_part).resolve()
+            try:
+                dest.relative_to(root.resolve())
+            except ValueError:
+                # GitHub-site-relative (e.g. the ../../actions CI badge):
+                # points outside the checkout, nothing to validate locally.
+                continue
+            if not dest.exists():
+                out.append(Finding(rel, lineno,
+                    f"broken link {target!r}: {path_part} does not exist"))
+                continue
+            if anchor:
+                if dest.suffix != ".md":
+                    out.append(Finding(rel, lineno,
+                        f"anchor on non-markdown target {target!r}"))
+                elif anchor not in heading_slugs(dest.read_text()):
+                    out.append(Finding(rel, lineno,
+                        f"broken anchor {target!r}: no heading "
+                        f"#{anchor} in {path_part}"))
+    return out
+
+
+def doc_files(root: pathlib.Path) -> list[pathlib.Path]:
+    """The checked set: README.md plus every markdown file under docs/."""
+    files = []
+    readme = root / "README.md"
+    if readme.exists():
+        files.append(readme)
+    files.extend(sorted((root / "docs").glob("**/*.md")))
+    return files
+
+
+def run(root: pathlib.Path | str = ".") -> list[Finding]:
+    """Check the whole docs surface; returns all findings (empty = clean)."""
+    root = pathlib.Path(root)
+    out: list[Finding] = []
+    for md in doc_files(root):
+        out.extend(check_file(md, root))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="markdown link/anchor checker (README.md + docs/*.md)")
+    ap.add_argument("--root", default=".", help="repo root (default: cwd)")
+    args = ap.parse_args(argv)
+    findings = run(args.root)
+    for f in findings:
+        print(f)
+    files = doc_files(pathlib.Path(args.root))
+    print(f"doc_lint: {len(files)} files, {len(findings)} findings "
+          f"{'FAIL' if findings else 'OK'}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

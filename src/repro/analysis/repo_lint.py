@@ -20,6 +20,11 @@ Each rule encodes an invariant the codebase converged on the hard way:
 * ``hlo-counter-outside-budget`` — nobody counts ``collective_permute``
   strings or regexes outside ``analysis/hlo_budget.py``: exactly one
   HLO collective counter exists.
+* ``public-missing-docstring`` — every public top-level function and
+  class in ``src/repro/core/`` and ``src/repro/optim/`` carries a
+  docstring (these two packages are the library surface the docs tree
+  maps to the paper; an undocumented public callable there is a docs
+  regression, ratcheted shrink-only like everything else).
 
 Adding a rule: write a ``_rule_*`` visitor hook below, give it a stable
 kebab-case id, and (if the repo already violates it) run
@@ -196,8 +201,30 @@ def _rule_spec_funnel(tree, rel: str) -> list[Finding]:
     return out
 
 
+_DOCSTRING_DIRS = ("src/repro/core/", "src/repro/optim/")
+
+
+def _rule_public_docstring(tree, rel: str) -> list[Finding]:
+    if not rel.startswith(_DOCSTRING_DIRS):
+        return []
+    out = []
+    for node in tree.body:
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+            continue
+        if node.name.startswith("_"):
+            continue
+        if ast.get_docstring(node) is None:
+            kind = "class" if isinstance(node, ast.ClassDef) else "function"
+            out.append(_finding(
+                "public-missing-docstring", rel, node.lineno,
+                f"public {kind} {node.name} has no docstring (core/ and "
+                f"optim/ are the documented library surface)"))
+    return out
+
+
 _RULES = (_rule_jax_experimental, _rule_pallas_call, _rule_bare_impl,
-          _rule_hlo_counter, _rule_spec_funnel)
+          _rule_hlo_counter, _rule_spec_funnel, _rule_public_docstring)
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,7 @@ from .plan import (  # noqa: F401
     BACKENDS,
     BlockLayout,
     CollectivePlan,
+    RoundState,
     plan,
     plan_cache_clear,
     plan_cache_info,
@@ -45,8 +46,10 @@ from .cost_model import (  # noqa: F401
     a2a_round_entries,
     alltoallv_round_widths,
     nonuniform_round_widths,
+    optimal_bucket_count,
     t_allgather,
     t_allreduce,
+    t_bucketed_allreduce,
     t_alltoall,
     t_alltoallv,
     t_corollary1,

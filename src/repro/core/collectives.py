@@ -302,16 +302,21 @@ def recursive_halving_reduce_scatter(x: Array, axis_name: str, *,
 
 
 def xla_reduce_scatter(x: Array, axis_name: str, **_) -> Array:
+    """XLA's native ``psum_scatter`` baseline (compiler-chosen algorithm;
+    same block-partition contract as :func:`circulant_reduce_scatter`)."""
     p = compat.axis_size(axis_name)
     return lax.psum_scatter(_as_blocks(x, p), axis_name,
                             scatter_dimension=0, tiled=False)
 
 
 def xla_allreduce(x: Array, axis_name: str, **_) -> Array:
+    """XLA's native ``psum`` allreduce baseline."""
     return lax.psum(x, axis_name)
 
 
 def xla_allgather(x: Array, axis_name: str, **_) -> Array:
+    """XLA's native ``all_gather`` baseline (tiled along axis 0, the
+    same layout :func:`circulant_allgather` produces)."""
     return lax.all_gather(x, axis_name, axis=0, tiled=True)
 
 
@@ -402,6 +407,29 @@ def alltoall(x, axis_name, impl=None, *,
                      "alltoall", kw)
 
 
+def reduce_scatter_pipelined(xs: Sequence[Array], axis_name: str, *,
+                             spec: CollectiveSpec | None = None) -> list:
+    """Software-pipelined reduce-scatter over independent payloads.
+
+    Each payload gets the one-shot result (bitwise-identical — the same
+    plan backend runs, split at its round seam), but the rounds are
+    interleaved: payload b's round-k ppermute is issued before payload
+    b-1's round-k fold, so XLA's latency-hiding scheduler can overlap
+    each collective-permute with the previous payload's local fold.
+    Total collectives are unchanged (len(xs) * ceil(log2 p)).  This is
+    the execution mode the bucketed ZeRO-1 grad sync rides on.
+    """
+    s = spec if spec is not None else CollectiveSpec()
+    return plan(s, axis_name=axis_name).reduce_scatter_pipelined(xs)
+
+
+def allgather_pipelined(xs: Sequence[Array], axis_name: str, *,
+                        spec: CollectiveSpec | None = None) -> list:
+    """Software-pipelined allgather — see :func:`reduce_scatter_pipelined`."""
+    s = spec if spec is not None else CollectiveSpec()
+    return plan(s, axis_name=axis_name).allgather_pipelined(xs)
+
+
 def hierarchical_reduce_scatter(x, axis_names: Sequence[str],
                                 impl=None, *,
                                 spec: CollectiveSpec | None = None, **kw):
@@ -432,5 +460,8 @@ def hierarchical_allgather(x, axis_names: Sequence[str],
 def hierarchical_allreduce(x, axis_names: Sequence[str],
                            impl=None, *,
                            spec: CollectiveSpec | None = None, **kw):
+    """Multi-axis allreduce: hierarchical RS over ``axis_names`` in
+    order, then hierarchical AG in reverse order (Theorem 2 composed
+    per mesh axis; block linearization ``lin = r0*p1 + r1``)."""
     out = hierarchical_reduce_scatter(x, axis_names, impl, spec=spec, **kw)
     return hierarchical_allgather(out, axis_names, impl, spec=spec, **kw)

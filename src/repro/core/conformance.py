@@ -83,12 +83,16 @@ def two_level_group(p: int) -> int:
 
 
 def schedule_rounds(p: int, schedule: str) -> int:
+    """Round count of ``schedule`` at ``p`` ranks (two_level resolves
+    its group size first)."""
     group = two_level_group(p) if schedule == "two_level" else None
     return len(get_skips(p, schedule, group=group))
 
 
 @dataclass(frozen=True)
 class Case:
+    """One conformance-matrix cell: a (collective, impl, schedule, op,
+    dtype, fused, wire) combination to execute and check."""
     collective: str            # reduce_scatter | allreduce
     impl: str                  # circulant | ring | recursive_halving | xla
     schedule: str = "halving"
@@ -278,6 +282,8 @@ def _n_collective_permutes(jitted, shape: tuple[int, ...]) -> int:
 
 def count_collective_permutes(mesh, p: int, fn,
                               check_vma: bool | None = None) -> int:
+    """Collective-permute count of ``fn`` lowered under shard_map on
+    ``mesh`` with the standard (p, p*BLK) conformance payload."""
     return _n_collective_permutes(_shmap1(mesh, fn, check_vma=check_vma),
                                   (p, p * BLK))
 
@@ -767,6 +773,8 @@ def run_sweep(p: int, mesh=None, verbose: bool = False) -> dict:
 
 
 def main(argv=None) -> int:
+    """CLI: run the full conformance matrix at ``argv[0]`` ranks
+    (default 8) on fake devices; exit 0 iff every case passes."""
     argv = argv if argv is not None else sys.argv[1:]
     p = int(argv[0]) if argv else 8
     if jax.device_count() < p:

@@ -106,6 +106,9 @@ def t_allgather(m: float, p: int, model: CommModel,
                 schedule: str = "halving", *, torus: bool = False,
                 wire_dtype: str | None = None,
                 wire_group: int = 512) -> float:
+    """Predicted circulant allgather time for an ``m``-element result at
+    ``p`` ranks (transport only — no gamma term; Corollary 1 dual of the
+    reduce-scatter)."""
     if p == 1:
         return 0.0
     plans = allgather_plan(p, schedule)
@@ -123,6 +126,64 @@ def t_allreduce(m: float, p: int, model: CommModel,
                              wire_dtype=wire_dtype, wire_group=wire_group)
             + t_allgather(m, p, model, schedule, torus=torus,
                           wire_dtype=wire_dtype, wire_group=wire_group))
+
+
+def t_bucketed_allreduce(m: float, p: int, model: CommModel,
+                         nbuckets: int, schedule: str = "halving", *,
+                         torus: bool = False, wire_dtype: str | None = None,
+                         wire_group: int = 512,
+                         overlap: float = 1.0) -> float:
+    """Predicted time of the bucketed, software-pipelined allreduce.
+
+    The serial (single-bucket) lower bound is Corollary 1's
+    ``α·2⌈log₂p⌉ + β·2(p-1)/p·m + γ·(p-1)/p·m``.  Splitting into B
+    buckets pays the round latency B times (every bucket runs its own
+    2⌈log₂p⌉ ppermutes), moves the same total β bytes, and lets each
+    bucket's fold (γ) work hide under a neighboring bucket's ppermute —
+    except the last bucket's, which has nothing left to hide behind.
+    ``overlap`` in [0, 1] scales how much of the hideable fold actually
+    overlaps (1 = perfect latency-hiding scheduler, 0 = fully serial,
+    which recovers ``t_allreduce`` at any B up to the extra α rounds).
+
+    ``t_bucketed_allreduce(m, p, model, 1)`` == ``t_allreduce(m, p,
+    model)`` exactly; the α-vs-γ trade is minimized at
+    :func:`optimal_bucket_count`.
+    """
+    if nbuckets < 1:
+        raise ValueError(f"nbuckets must be >= 1, got {nbuckets}")
+    if not 0.0 <= overlap <= 1.0:
+        raise ValueError(f"overlap must be in [0, 1], got {overlap}")
+    if p == 1:
+        return 0.0
+    comm = CommModel(alpha=model.alpha, beta=model.beta, gamma=0.0,
+                     elem_bytes=model.elem_bytes)
+    t_comm = nbuckets * t_allreduce(m / nbuckets, p, comm, schedule,
+                                    torus=torus, wire_dtype=wire_dtype,
+                                    wire_group=wire_group)
+    t_fold = (t_reduce_scatter(m, p, model, schedule, torus=torus,
+                               wire_dtype=wire_dtype, wire_group=wire_group)
+              - t_reduce_scatter(m, p, comm, schedule, torus=torus,
+                                 wire_dtype=wire_dtype,
+                                 wire_group=wire_group))
+    hidden = overlap * t_fold * (nbuckets - 1) / nbuckets
+    return t_comm + t_fold - hidden
+
+
+def optimal_bucket_count(m: float, p: int, model: CommModel,
+                         schedule: str = "halving") -> int:
+    """Bucket count minimizing :func:`t_bucketed_allreduce` at full
+    overlap: balancing the extra round latency ``B·rounds·α`` against
+    the unhidden fold tail ``γ·(p-1)/p·m / B`` gives
+    ``B* = sqrt(γ·(p-1)/p·m / (rounds·α))`` (rounded, clamped to >= 1).
+    """
+    if p == 1:
+        return 1
+    rounds = (len(reduce_scatter_plan(p, schedule))
+              + len(allgather_plan(p, schedule)))
+    fold = model.gamma * (p - 1) / p * m
+    if fold <= 0 or model.alpha <= 0:
+        return 1
+    return max(1, round((fold / (rounds * model.alpha)) ** 0.5))
 
 
 def t_corollary1(m: float, p: int, model: CommModel) -> float:
@@ -234,6 +295,9 @@ def t_ring_reduce_scatter(m: float, p: int, model: CommModel) -> float:
 
 
 def t_ring_allreduce(m: float, p: int, model: CommModel) -> float:
+    """Classic bandwidth-optimal ring allreduce baseline: 2(p-1) rounds
+    of m/p-sized messages (latency term 2(p-1)·alpha vs the circulant
+    2⌈log2 p⌉·alpha)."""
     if p == 1:
         return 0.0
     return (t_ring_reduce_scatter(m, p, model)

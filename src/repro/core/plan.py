@@ -29,11 +29,37 @@ kwarg API (asserted by the conformance harness and the CI ``plans`` gate).
 Plans are cached with ``functools.lru_cache`` — repeated calls with the
 same spec are trace-time dict hits, so spec-driven dispatch adds zero
 retraces and zero extra collectives.
+
+Two execution modes share each backend's round steps:
+
+* **one-shot** — ``plan.reduce_scatter(x)`` runs begin → q × (start →
+  finish) → end in a single call (the classic API); and
+* **multi-call (async)** — ``st = plan.rs_begin(x)`` hands the caller a
+  :class:`RoundState`; each ``plan.start_round(st)`` issues EXACTLY ONE
+  collective-permute and each ``plan.finish_round(st)`` does the local
+  fold + next-send assembly (the seam the fused Pallas round kernel
+  already separates — see ``kernels.fused_round``), with
+  ``plan.rs_end(st)`` / ``plan.ag_end(st)`` extracting the result once
+  all rounds are finished.  States of the SAME plan are independent, so
+  a caller can interleave rounds of many payloads:
+  ``plan.reduce_scatter_pipelined(xs)`` software-pipelines them so
+  payload b's round-k ppermute sits between payload b-1's ppermute and
+  fold in program order — independent dataflow chains XLA's scheduler
+  can overlap.  The bucketed ZeRO-1 gradient sync
+  (``optim.zero1``, ``GradSyncConfig.bucket_bytes``) rides this mode.
+
+Async backend-registry contract (``_ASYNC_IMPLS``): a backend opts in by
+registering an ops class per phase with ``begin`` / ``start`` /
+``finish`` / ``end`` hooks.  ``start`` must issue exactly one
+collective-permute and park the wire payload on ``RoundState.inflight``;
+``finish`` must be collective-free (local fold + assembling the next
+round's send buffer); the one-shot methods are thin drivers over the
+same hooks, so both modes are bitwise-identical by construction.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
 import jax
@@ -287,6 +313,51 @@ def _build_a2a(counts: tuple[tuple[int, ...], ...], p: int,
 
 
 # ---------------------------------------------------------------------------
+# Multi-call (async) round protocol state
+# ---------------------------------------------------------------------------
+
+@dataclass(eq=False)
+class RoundState:
+    """In-trace state of one multi-call collective phase.
+
+    Created by :meth:`CollectivePlan.rs_begin` / ``ag_begin`` and
+    advanced by ``start_round`` / ``finish_round`` (which MUTATE the
+    state in place and return it for chaining).  It holds traced arrays,
+    so a state never escapes the trace that created it; the protocol
+    order (start → finish per round, end only when ``done``) is enforced
+    by the plan methods.
+
+    phase:    ``"rs"`` (Algorithm 1) or ``"ag"`` (reversed skip stack).
+    nrounds:  total rounds of the phase (0 for the p == 1 identity).
+    k:        rounds fully finished so far.
+    started:  a ``start_round`` is in flight, awaiting ``finish_round``.
+    inflight: the ppermuted wire payload of the started round.
+    data:     backend-private buffers (live/send blocks, packed wire,
+              rank index, hooks) — owned by the ``_ASYNC_IMPLS`` ops.
+    """
+
+    plan: "CollectivePlan"
+    phase: str
+    nrounds: int
+    k: int = 0
+    started: bool = False
+    inflight: object = None
+    data: dict = field(default_factory=dict)
+
+    @property
+    def done(self) -> bool:
+        """True once every round is finished (``end`` may be called)."""
+        return self.k >= self.nrounds
+
+    @property
+    def round(self) -> RoundPlan:
+        """The :class:`RoundPlan` of the round being started/finished."""
+        rounds = (self.plan.rs_rounds if self.phase == "rs"
+                  else self.plan.ag_rounds)
+        return rounds[self.k]
+
+
+# ---------------------------------------------------------------------------
 # The compiled plan
 # ---------------------------------------------------------------------------
 
@@ -340,14 +411,10 @@ class CollectivePlan:
             return x
         if self.backend == "nonuniform":
             return _rs_nonuniform(self, x)
-        _check_wire_payload(self, x)
-        r = lax.axis_index(self.axis_name)
-        R = jnp.roll(self.layout_for(x.shape[0]).as_blocks(x), -r, axis=0)
-        if self.backend in ("jnp+int8", "fused+int8"):
-            return _rs_wire(self, R)
-        if self.backend == "fused":
-            return _rs_fused(self, R, compress, decompress)
-        return _rs_jnp(self, R, compress, decompress)
+        st = self.rs_begin(x, compress=compress, decompress=decompress)
+        while not st.done:
+            self.finish_round(self.start_round(st))
+        return self.rs_end(st)
 
     def allgather(self, x: Array) -> Array:
         """Algorithm 2's second phase (reversed skip stack) standalone."""
@@ -358,10 +425,10 @@ class CollectivePlan:
             return x
         if self.backend == "nonuniform":
             return _ag_nonuniform(self, x)
-        _check_wire_payload(self, x)
-        if self.backend in ("jnp+int8", "fused+int8"):
-            return _ag_wire(self, x)
-        return _ag_plain(self, x)
+        st = self.ag_begin(x)
+        while not st.done:
+            self.finish_round(self.start_round(st))
+        return self.ag_end(st)
 
     def allreduce(self, x: Array, *, compress=None, decompress=None) -> Array:
         """Paper Algorithm 2: reduce-scatter + reversed allgather."""
@@ -402,7 +469,154 @@ class CollectivePlan:
             return x
         return impl(self, x)
 
+    # -- multi-call (async) round protocol ---------------------------------
+
+    def rs_begin(self, x: Array, *, compress=None,
+                 decompress=None) -> RoundState:
+        """Open a multi-call reduce-scatter over ``x`` (async mode).
+
+        Rotates ``x`` into block coordinates and assembles round 0's send
+        payload without issuing any collective.  Drive the returned
+        :class:`RoundState` with ``start_round`` / ``finish_round`` — one
+        (ppermute, fold) pair per round — then ``rs_end``.  Supported on
+        the uniform circulant backends (``jnp`` / ``fused`` and their
+        ``+int8`` wire forms); baselines, non-uniform counts and
+        alltoallv have no round seam to expose and raise.
+        """
+        self._check_hooks(compress, decompress)
+        self._check_not_a2a("rs_begin")
+        self._check_async("rs_begin")
+        if self.p == 1:
+            return RoundState(plan=self, phase="rs", nrounds=0,
+                              data={"identity": x})
+        _check_wire_payload(self, x)
+        st = RoundState(plan=self, phase="rs", nrounds=len(self.rs_rounds))
+        _ASYNC_IMPLS[(self.backend, "rs")].begin(self, st, x,
+                                                 compress, decompress)
+        return st
+
+    def ag_begin(self, x: Array) -> RoundState:
+        """Open a multi-call allgather of block ``x`` — see
+        :meth:`rs_begin` (allgather replays the skips in reverse and has
+        no reduction, so ``finish_round`` is a pure buffer write)."""
+        self._check_not_a2a("ag_begin")
+        self._check_async("ag_begin")
+        if self.p == 1:
+            return RoundState(plan=self, phase="ag", nrounds=0,
+                              data={"identity": x})
+        _check_wire_payload(self, x)
+        st = RoundState(plan=self, phase="ag", nrounds=len(self.ag_rounds))
+        _ASYNC_IMPLS[(self.backend, "ag")].begin(self, st, x)
+        return st
+
+    def start_round(self, st: RoundState) -> RoundState:
+        """Issue round ``st.k``'s single collective-permute.
+
+        The wire payload (already assembled by ``begin`` or the previous
+        ``finish_round``) is permuted onto ``st.inflight``; no local fold
+        happens here, so work independent of this payload — another
+        bucket's ``finish_round``, the next layer's backward — can sit
+        between ``start_round`` and ``finish_round`` in program order.
+        Mutates and returns ``st``.
+        """
+        if st.plan is not self:
+            raise ValueError("RoundState belongs to a different plan")
+        if st.done:
+            raise ValueError(
+                f"{st.phase} phase complete: all {st.nrounds} rounds "
+                f"finished (call {st.phase}_end)")
+        if st.started:
+            raise ValueError(
+                f"round {st.k} already started; call finish_round() first")
+        _ASYNC_IMPLS[(self.backend, st.phase)].start(self, st)
+        st.started = True
+        return st
+
+    def finish_round(self, st: RoundState) -> RoundState:
+        """Fold round ``st.k``'s received payload and assemble the next
+        round's send buffer (collective-free — the fused backend runs
+        both in one Pallas pass).  Mutates and returns ``st``."""
+        if st.plan is not self:
+            raise ValueError("RoundState belongs to a different plan")
+        if not st.started:
+            raise ValueError(
+                f"round {st.k} has no ppermute in flight; call "
+                f"start_round() first")
+        _ASYNC_IMPLS[(self.backend, st.phase)].finish(self, st)
+        st.inflight = None
+        st.started = False
+        st.k += 1
+        return st
+
+    def rs_end(self, st: RoundState) -> Array:
+        """Extract the reduced block once every RS round is finished."""
+        return self._phase_end(st, "rs")
+
+    def ag_end(self, st: RoundState) -> Array:
+        """Extract the gathered (rank-ordered) buffer once every AG round
+        is finished."""
+        return self._phase_end(st, "ag")
+
+    def _phase_end(self, st: RoundState, phase: str) -> Array:
+        if st.plan is not self:
+            raise ValueError("RoundState belongs to a different plan")
+        if st.phase != phase:
+            raise ValueError(
+                f"state is mid-{st.phase}, not {phase} (use {st.phase}_end)")
+        if st.started or not st.done:
+            left = st.nrounds - st.k
+            raise ValueError(
+                f"{phase}_end with {left} round(s) unfinished "
+                f"(started={st.started})")
+        if "identity" in st.data:
+            return st.data["identity"]
+        return _ASYNC_IMPLS[(self.backend, phase)].end(self, st)
+
+    def reduce_scatter_pipelined(self, xs: Sequence[Array], *,
+                                 compress=None, decompress=None
+                                 ) -> list[Array]:
+        """Reduce-scatter many independent payloads with round-level
+        software pipelining (the bucketed grad-sync driver).
+
+        All payloads share this plan (same p / schedule / backend, so the
+        same round count q); total collectives = ``len(xs) * q`` — exactly
+        one ppermute per payload per round, same as running each payload
+        alone.  The emitted program order is double-buffered: payload
+        b's round-k ppermute is issued BEFORE payload b-1's round-k fold,
+        so each fold sits between two independent collectives and the
+        XLA latency-hiding scheduler can overlap them.
+        """
+        sts = [self.rs_begin(x, compress=compress, decompress=decompress)
+               for x in xs]
+        return self._run_pipelined(sts, "rs")
+
+    def allgather_pipelined(self, xs: Sequence[Array]) -> list[Array]:
+        """Allgather counterpart of :meth:`reduce_scatter_pipelined`."""
+        return self._run_pipelined([self.ag_begin(x) for x in xs], "ag")
+
+    def _run_pipelined(self, sts: list[RoundState], phase: str
+                       ) -> list[Array]:
+        q = max((st.nrounds for st in sts), default=0)
+        for _ in range(q):
+            prev = None
+            for st in sts:
+                self.start_round(st)
+                if prev is not None:
+                    self.finish_round(prev)
+                prev = st
+            if prev is not None:
+                self.finish_round(prev)
+        end = self.rs_end if phase == "rs" else self.ag_end
+        return [end(st) for st in sts]
+
     # -- validation helpers ------------------------------------------------
+
+    def _check_async(self, fn: str) -> None:
+        if (self.backend, "rs") not in _ASYNC_IMPLS:
+            supported = sorted({b for (b, _) in _ASYNC_IMPLS})
+            raise NotImplementedError(
+                f"backend {self.backend!r} has no multi-call round "
+                f"protocol ({fn}); async-capable backends: {supported}")
 
     def _check_not_a2a(self, fn: str) -> None:
         if self.a2a is not None:
@@ -567,61 +781,105 @@ def plan_cache_clear() -> None:
 
 
 # ---------------------------------------------------------------------------
-# Uniform circulant backends (ported verbatim from the kwarg-era loops —
-# identical round structure, ppermute sequence and arithmetic)
+# Uniform circulant backends — multi-call round ops (the one-shot round
+# loops of the kwarg era, split at the (start = ppermute) / (finish =
+# fold + next-send assembly) seam; identical round structure, ppermute
+# sequence and arithmetic in both modes)
 # ---------------------------------------------------------------------------
 
-def _rs_jnp(plan: CollectivePlan, R: Array, compress, decompress) -> Array:
-    """Algorithm 1's round loop, plain jnp ops (always available)."""
-    reduce_fn = resolve_op(plan.spec.op)
-    p = plan.p
-    for pl in plan.rs_rounds:
-        payload = R[pl.lo:pl.hi]
-        if compress is not None:
-            payload = compress(payload)
-        T = compat.ppermute(payload, plan.axis_name, _fwd_perm(p, pl.skip))
-        if decompress is not None:
-            T = decompress(T)
-        nb = pl.nblocks
-        head = reduce_fn(R[:nb], T)
-        R = head if nb == pl.lo else jnp.concatenate([head, R[nb:pl.lo]],
-                                                     axis=0)
-    return R[0]
+def _rotated_blocks(plan: CollectivePlan, x: Array) -> Array:
+    """Rotate ``x`` into block coordinates: R[i] = block of rank (r+i)."""
+    r = lax.axis_index(plan.axis_name)
+    return jnp.roll(plan.layout_for(x.shape[0]).as_blocks(x), -r, axis=0)
 
 
-def _rs_fused(plan: CollectivePlan, R: Array, compress, decompress) -> Array:
-    """Algorithm 1's round loop on the fused Pallas kernel.
+class _RsJnp:
+    """Algorithm 1's rounds, plain jnp ops (always available).
+
+    State: the shrinking rotated block buffer ``R``; round k sends
+    ``R[lo:hi]`` and folds the received blocks into ``R[:nblocks]``.
+    """
+
+    @staticmethod
+    def begin(plan, st, x, compress, decompress):
+        st.data.update(R=_rotated_blocks(plan, x),
+                       compress=compress, decompress=decompress)
+
+    @staticmethod
+    def start(plan, st):
+        pl = st.round
+        payload = st.data["R"][pl.lo:pl.hi]
+        if st.data["compress"] is not None:
+            payload = st.data["compress"](payload)
+        st.inflight = compat.ppermute(payload, plan.axis_name,
+                                      _fwd_perm(plan.p, pl.skip))
+
+    @staticmethod
+    def finish(plan, st):
+        pl, T = st.round, st.inflight
+        if st.data["decompress"] is not None:
+            T = st.data["decompress"](T)
+        R, nb = st.data["R"], pl.nblocks
+        head = resolve_op(plan.spec.op)(R[:nb], T)
+        st.data["R"] = head if nb == pl.lo else jnp.concatenate(
+            [head, R[nb:pl.lo]], axis=0)
+
+    @staticmethod
+    def end(plan, st):
+        return st.data["R"][0]
+
+
+class _RsFused:
+    """Algorithm 1's rounds on the fused Pallas kernel.
 
     The rotated block buffer is viewed as 2-D ``(blocks, block_numel)``;
     after the prologue slice every round is ppermute → fused_round, with
     the kernel emitting both the shrunken live buffer and the next
-    round's contiguous payload.  Identical values and ppermute sequence
+    round's contiguous send payload — the fold/assembly split that makes
+    ``finish`` collective-free.  Identical values and ppermute sequence
     to the jnp path — only the local data movement is fused.
     """
-    p, op = plan.p, plan.spec.op
-    blk_shape = R.shape[1:]
-    R2 = R.reshape(p, -1)
-    plans = plan.rs_rounds
-    live = R2[: plans[0].lo]
-    send = R2[plans[0].lo : plans[0].hi]
-    for k, pl in enumerate(plans):
-        payload = send if compress is None else compress(send)
-        T = compat.ppermute(payload, plan.axis_name, _fwd_perm(p, pl.skip))
-        if decompress is not None:
-            T = decompress(T)
+
+    @staticmethod
+    def begin(plan, st, x, compress, decompress):
+        R = _rotated_blocks(plan, x)
+        R2 = R.reshape(plan.p, -1)
+        first = plan.rs_rounds[0]
+        st.data.update(blk_shape=R.shape[1:],
+                       live=R2[: first.lo],
+                       send=R2[first.lo: first.hi],
+                       compress=compress, decompress=decompress)
+
+    @staticmethod
+    def start(plan, st):
+        payload = (st.data["send"] if st.data["compress"] is None
+                   else st.data["compress"](st.data["send"]))
+        st.inflight = compat.ppermute(payload, plan.axis_name,
+                                      _fwd_perm(plan.p, st.round.skip))
+
+    @staticmethod
+    def finish(plan, st):
+        pl, T, live = st.round, st.inflight, st.data["live"]
+        if st.data["decompress"] is not None:
+            T = st.data["decompress"](T)
         if T.dtype != live.dtype:
             # Match the jnp path, whose concatenate promotes the buffer
             # (e.g. bf16 live vs f32 decompressed payload).
             dt = jnp.result_type(live.dtype, T.dtype)
             live, T = live.astype(dt), T.astype(dt)
-        next_lo = plans[k + 1].lo if k + 1 < len(plans) else pl.lo
+        plans = plan.rs_rounds
+        next_lo = plans[st.k + 1].lo if st.k + 1 < len(plans) else pl.lo
         live, send = fused_round(live, T, nb=pl.nblocks, next_lo=next_lo,
-                                 op=op)
-    return live[0].reshape(blk_shape)
+                                 op=plan.spec.op)
+        st.data.update(live=live, send=send)
+
+    @staticmethod
+    def end(plan, st):
+        return st.data["live"][0].reshape(st.data["blk_shape"])
 
 
-def _rs_wire(plan: CollectivePlan, R: Array) -> Array:
-    """Algorithm 1's round loop on the int8 wire format.
+class _RsWire:
+    """Algorithm 1's rounds on the int8 wire format.
 
     The rotated block buffer is promoted to an f32 (blocks, block_numel)
     accumulation buffer whose columns are padded to a whole number of
@@ -632,43 +890,56 @@ def _rs_wire(plan: CollectivePlan, R: Array) -> Array:
     otherwise (bitwise-identical arithmetic; both jitted).  Round count
     and ppermute sequence match the uncompressed path exactly.
     """
-    p, op = plan.p, plan.spec.op
-    fused = plan.backend == "fused+int8"
-    blk_shape, out_dtype = R.shape[1:], R.dtype
-    R2 = R.reshape(p, -1).astype(jnp.float32)
-    cols = R2.shape[1]
-    g = min(plan.spec.wire_group, cols)
-    R2 = pad2d(R2, 1, g)
-    plans = plan.rs_rounds
-    live = R2[: plans[0].lo]
-    first = R2[plans[0].lo : plans[0].hi]
-    if fused:
-        codes, scales = quantize_rows(first, group=g)
-    else:
-        codes, scales = _kref.quantize_ref(first, group=g)
-    wire = pack_wire(codes, scales)
-    for k, pl in enumerate(plans):
-        Tw = compat.ppermute(wire, plan.axis_name, _fwd_perm(p, pl.skip))
-        rc, rs = unpack_wire(Tw, live.shape[1], group=g)
-        next_lo = plans[k + 1].lo if k + 1 < len(plans) else pl.lo
+
+    @staticmethod
+    def begin(plan, st, x, compress, decompress):
+        fused = plan.backend == "fused+int8"
+        R = _rotated_blocks(plan, x)
+        R2 = R.reshape(plan.p, -1).astype(jnp.float32)
+        cols = R2.shape[1]
+        g = min(plan.spec.wire_group, cols)
+        R2 = pad2d(R2, 1, g)
+        first_round = plan.rs_rounds[0]
+        first = R2[first_round.lo: first_round.hi]
         if fused:
-            live, send = fused_round_dq(live, rc, rs, nb=pl.nblocks,
-                                        next_lo=next_lo, op=op, group=g)
+            codes, scales = quantize_rows(first, group=g)
         else:
-            live, send = _kref.fused_round_dq_ref(live, rc, rs,
-                                                  nb=pl.nblocks,
-                                                  next_lo=next_lo, op=op,
-                                                  group=g)
+            codes, scales = _kref.quantize_ref(first, group=g)
+        st.data.update(blk_shape=R.shape[1:], out_dtype=R.dtype,
+                       cols=cols, g=g, fused=fused,
+                       live=R2[: first_round.lo],
+                       wire=pack_wire(codes, scales))
+
+    @staticmethod
+    def start(plan, st):
+        st.inflight = compat.ppermute(
+            st.data["wire"], plan.axis_name,
+            _fwd_perm(plan.p, st.round.skip))
+
+    @staticmethod
+    def finish(plan, st):
+        pl, live, g = st.round, st.data["live"], st.data["g"]
+        rc, rs = unpack_wire(st.inflight, live.shape[1], group=g)
+        plans = plan.rs_rounds
+        next_lo = plans[st.k + 1].lo if st.k + 1 < len(plans) else pl.lo
+        kern = fused_round_dq if st.data["fused"] else _kref.fused_round_dq_ref
+        live, send = kern(live, rc, rs, nb=pl.nblocks, next_lo=next_lo,
+                          op=plan.spec.op, group=g)
+        st.data["live"] = live
         if send is not None:
-            wire = pack_wire(*send)
-    out = live[0]
-    if cols != R2.shape[1]:
-        out = out[:cols]
-    return out.reshape(blk_shape).astype(out_dtype)
+            st.data["wire"] = pack_wire(*send)
+
+    @staticmethod
+    def end(plan, st):
+        out = st.data["live"][0]
+        cols = st.data["cols"]
+        if cols != out.shape[0]:
+            out = out[:cols]
+        return out.reshape(st.data["blk_shape"]).astype(st.data["out_dtype"])
 
 
-def _ag_plain(plan: CollectivePlan, x: Array) -> Array:
-    """Allgather rounds, uncompressed.
+class _AgPlain:
+    """Allgather rounds, uncompressed (backends ``jnp`` and ``fused``).
 
     Allgather has no ⊕, so its fused form needs no Pallas: the growing
     concat chain (which recopies the whole buffer every round — O(p log p)
@@ -677,30 +948,46 @@ def _ag_plain(plan: CollectivePlan, x: Array) -> Array:
     dynamic-update-slice into an in-place write under jit).  Send payloads
     are buffer prefixes, already contiguous.
     """
-    p = plan.p
-    r = lax.axis_index(plan.axis_name)
-    if plan.backend == "fused":
-        buf = jnp.zeros((p, *x.shape), x.dtype)
-        buf = lax.dynamic_update_slice_in_dim(buf, x[None], 0, axis=0)
-        for pl in plan.ag_rounds:
-            payload = lax.slice_in_dim(buf, 0, pl.nblocks, axis=0)
-            T = compat.ppermute(payload, plan.axis_name,
-                                _bwd_perm(p, pl.skip))
+
+    @staticmethod
+    def begin(plan, st, x):
+        r = lax.axis_index(plan.axis_name)
+        fused = plan.backend == "fused"
+        if fused:
+            buf = jnp.zeros((plan.p, *x.shape), x.dtype)
+            buf = lax.dynamic_update_slice_in_dim(buf, x[None], 0, axis=0)
+        else:
+            buf = x[None]  # (1, blk, *rest): rotated, R[i] = block of (r+i)
+        st.data.update(buf=buf, r=r, fused=fused, blk=x.shape)
+
+    @staticmethod
+    def start(plan, st):
+        pl, buf = st.round, st.data["buf"]
+        payload = (lax.slice_in_dim(buf, 0, pl.nblocks, axis=0)
+                   if st.data["fused"] else buf[:pl.nblocks])
+        st.inflight = compat.ppermute(payload, plan.axis_name,
+                                      _bwd_perm(plan.p, pl.skip))
+
+    @staticmethod
+    def finish(plan, st):
+        pl, T, buf = st.round, st.inflight, st.data["buf"]
+        if st.data["fused"]:
             # Received blocks land at rows [lo, hi) = [skip, prev bound).
-            buf = lax.dynamic_update_slice_in_dim(buf, T, pl.lo, axis=0)
-        out = jnp.roll(buf, r, axis=0)
-        return out.reshape(p * x.shape[0], *x.shape[1:])
-    R = x[None]  # (1, blk, *rest) — rotated coords: R[i] = block of (r+i)
-    for pl in plan.ag_rounds:
-        payload = R[:pl.nblocks]
-        T = compat.ppermute(payload, plan.axis_name, _bwd_perm(p, pl.skip))
-        R = jnp.concatenate([R, T], axis=0)
-    out = jnp.roll(R, r, axis=0)  # un-rotate: out[j] = block of rank j
-    return out.reshape(p * x.shape[0], *x.shape[1:])
+            st.data["buf"] = lax.dynamic_update_slice_in_dim(
+                buf, T, pl.lo, axis=0)
+        else:
+            st.data["buf"] = jnp.concatenate([buf, T], axis=0)
+
+    @staticmethod
+    def end(plan, st):
+        blk = st.data["blk"]
+        # Un-rotate: out[j] = block of rank j.
+        out = jnp.roll(st.data["buf"], st.data["r"], axis=0)
+        return out.reshape(plan.p * blk[0], *blk[1:])
 
 
-def _ag_wire(plan: CollectivePlan, x: Array) -> Array:
-    """Allgather on the int8 wire format.
+class _AgWire:
+    """Allgather rounds on the int8 wire format.
 
     Allgather has no ⊕, so each rank quantizes its own block ONCE; the
     rounds then move the packed int8 wire rows unmodified (every element
@@ -711,40 +998,62 @@ def _ag_wire(plan: CollectivePlan, x: Array) -> Array:
     codes, so the gathered result is bitwise-replicated (Theorem 2's
     invariant survives compression).
     """
-    p = plan.p
-    fused = plan.backend == "fused+int8"
-    r = lax.axis_index(plan.axis_name)
-    x2 = x.reshape(1, -1).astype(jnp.float32)
-    cols = x2.shape[1]
-    g = min(plan.spec.wire_group, cols)
-    x2 = pad2d(x2, 1, g)
-    if fused:
-        codes, scales = quantize_rows(x2, group=g)
-    else:
-        codes, scales = _kref.quantize_ref(x2, group=g)
-    row = pack_wire(codes, scales)                 # (1, wc) int8
-    wc = row.shape[1]
-    if fused:
-        buf = jnp.zeros((p, wc), jnp.int8)
-        buf = lax.dynamic_update_slice_in_dim(buf, row, 0, axis=0)
-        for pl in plan.ag_rounds:
-            payload = lax.slice_in_dim(buf, 0, pl.nblocks, axis=0)
-            T = compat.ppermute(payload, plan.axis_name,
-                                _bwd_perm(p, pl.skip))
-            buf = lax.dynamic_update_slice_in_dim(buf, T, pl.lo, axis=0)
-    else:
-        buf = row
-        for pl in plan.ag_rounds:
-            payload = buf[:pl.nblocks]
-            T = compat.ppermute(payload, plan.axis_name,
-                                _bwd_perm(p, pl.skip))
-            buf = jnp.concatenate([buf, T], axis=0)
-    codes, scales = unpack_wire(buf, x2.shape[1], group=g)
-    vals = _kref.dequant_ref(codes, scales, group=g)   # (p, cols_pad) f32
-    if cols != x2.shape[1]:
-        vals = vals[:, :cols]
-    out = jnp.roll(vals, r, axis=0)  # un-rotate: out[j] = block of rank j
-    return out.reshape(p * x.shape[0], *x.shape[1:]).astype(x.dtype)
+
+    @staticmethod
+    def begin(plan, st, x):
+        fused = plan.backend == "fused+int8"
+        r = lax.axis_index(plan.axis_name)
+        x2 = x.reshape(1, -1).astype(jnp.float32)
+        cols = x2.shape[1]
+        g = min(plan.spec.wire_group, cols)
+        x2 = pad2d(x2, 1, g)
+        if fused:
+            codes, scales = quantize_rows(x2, group=g)
+        else:
+            codes, scales = _kref.quantize_ref(x2, group=g)
+        row = pack_wire(codes, scales)                 # (1, wc) int8
+        if fused:
+            buf = jnp.zeros((plan.p, row.shape[1]), jnp.int8)
+            buf = lax.dynamic_update_slice_in_dim(buf, row, 0, axis=0)
+        else:
+            buf = row
+        st.data.update(buf=buf, r=r, fused=fused, g=g, cols=cols,
+                       padded_cols=x2.shape[1], blk=x.shape,
+                       out_dtype=x.dtype)
+
+    # Rounds move the packed int8 rows exactly like the plain path.
+    start = staticmethod(_AgPlain.start)
+    finish = staticmethod(_AgPlain.finish)
+
+    @staticmethod
+    def end(plan, st):
+        g, cols, blk = st.data["g"], st.data["cols"], st.data["blk"]
+        codes, scales = unpack_wire(st.data["buf"], st.data["padded_cols"],
+                                    group=g)
+        vals = _kref.dequant_ref(codes, scales, group=g)  # (p, cols_pad) f32
+        if cols != st.data["padded_cols"]:
+            vals = vals[:, :cols]
+        out = jnp.roll(vals, st.data["r"], axis=0)  # out[j] = block of j
+        return (out.reshape(plan.p * blk[0], *blk[1:])
+                .astype(st.data["out_dtype"]))
+
+
+#: async backend registry — (backend, phase) → round-step ops.  The
+#: contract: ``begin`` assembles round 0's send payload (no collective),
+#: ``start`` issues exactly one collective-permute onto
+#: ``RoundState.inflight``, ``finish`` is collective-free fold +
+#: next-send assembly, ``end`` extracts the phase result.  Backends
+#: absent here (nonuniform, alltoallv, baselines) only run one-shot.
+_ASYNC_IMPLS: dict[tuple[str, str], type] = {
+    ("jnp", "rs"): _RsJnp,
+    ("fused", "rs"): _RsFused,
+    ("jnp+int8", "rs"): _RsWire,
+    ("fused+int8", "rs"): _RsWire,
+    ("jnp", "ag"): _AgPlain,
+    ("fused", "ag"): _AgPlain,
+    ("jnp+int8", "ag"): _AgWire,
+    ("fused+int8", "ag"): _AgWire,
+}
 
 
 # ---------------------------------------------------------------------------

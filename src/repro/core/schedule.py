@@ -137,6 +137,8 @@ SCHEDULES: dict[str, Callable[[int], tuple[int, ...]]] = {
 
 def get_skips(p: int, schedule: str = "halving", *, group: int | None = None
               ) -> tuple[int, ...]:
+    """Per-round skip distances of ``schedule`` at ``p`` ranks — the
+    s_k of Corollary 2; ``len(get_skips(p, s))`` is the round count."""
     if schedule == "two_level":
         if group is None:
             raise ValueError("two_level schedule needs group=")
@@ -257,6 +259,8 @@ def allgather_plan(p: int, schedule: str = "halving",
 
 
 def total_blocks(plans: Sequence[RoundPlan]) -> int:
+    """Total blocks sent across ``plans`` (Theorem 1 volume: p-1 for a
+    full reduce-scatter plan)."""
     return sum(pl.nblocks for pl in plans)
 
 

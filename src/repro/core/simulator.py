@@ -257,6 +257,9 @@ def ref_alltoall(inputs) -> list[list[np.ndarray]]:
 
 
 def ref_reduce_scatter(inputs, op=np.add):
+    """Oracle: rank r's result block = op-fold of inputs[i][r] over all
+    ranks i, in rank order (the sequential reference the simulated
+    schedules must reproduce)."""
     p = len(inputs)
     out = []
     for r in range(p):
@@ -268,5 +271,7 @@ def ref_reduce_scatter(inputs, op=np.add):
 
 
 def ref_allreduce(inputs, op=np.add):
+    """Oracle allreduce: every rank ends with the full reduced block
+    column (reduce-scatter oracle replicated p times)."""
     col = ref_reduce_scatter(inputs, op)
     return [list(col) for _ in range(len(inputs))]

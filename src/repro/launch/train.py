@@ -58,6 +58,13 @@ def main(argv=None):
                     help="DEPRECATED alias for --wire-dtype (emits a "
                          "DeprecationWarning; the wire format is part of "
                          "the grad-sync CollectiveSpec now)")
+    ap.add_argument("--bucket-bytes", type=int, default=None,
+                    help="bucketed, overlapped grad sync: target bytes per "
+                         "gradient bucket (e.g. 25000000); each bucket runs "
+                         "one circulant RS/AG on the cached plan with rounds "
+                         "software-pipelined across buckets. Default: off "
+                         "(single-shot per leaf, bitwise-identical legacy "
+                         "path). Requires --grad-sync circulant")
     ap.add_argument("--fused-kernel", default="auto",
                     choices=["auto", "on", "off"],
                     help="fused Pallas round kernel for the circulant "
@@ -109,7 +116,8 @@ def main(argv=None):
                           compress=args.compress,  # deprecated alias; warns
                           error_feedback=not args.no_error_feedback,
                           use_fused_kernel={"auto": None, "on": True,
-                                            "off": False}[args.fused_kernel])
+                                            "off": False}[args.fused_kernel],
+                          bucket_bytes=args.bucket_bytes)
     built = build_step(mode, model, opt_cfg, mesh=mesh, recipe=recipe,
                        sync=sync)
 

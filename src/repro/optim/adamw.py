@@ -15,6 +15,9 @@ import jax.numpy as jnp
 
 @dataclass(frozen=True)
 class AdamWConfig:
+    """AdamW + LR-schedule hyperparameters (cosine decay to
+    ``min_lr_ratio`` after ``warmup_steps`` of linear warmup; global-norm
+    clip at ``clip_norm``)."""
     lr: float = 3e-4
     beta1: float = 0.9
     beta2: float = 0.95
@@ -27,18 +30,23 @@ class AdamWConfig:
 
 
 class AdamState(NamedTuple):
+    """Flat-vector optimizer state: fp32 first/second moments + step."""
     m: jax.Array   # fp32
     v: jax.Array   # fp32
     step: jax.Array  # int32 scalar
 
 
 def init_state(n: int) -> AdamState:
+    """Zero-initialized :class:`AdamState` for an ``n``-element flat
+    (shard of a) parameter vector."""
     return AdamState(m=jnp.zeros((n,), jnp.float32),
                      v=jnp.zeros((n,), jnp.float32),
                      step=jnp.zeros((), jnp.int32))
 
 
 def lr_at(cfg: AdamWConfig, step) -> jax.Array:
+    """Learning rate at ``step``: linear warmup then cosine decay to
+    ``cfg.min_lr_ratio * cfg.lr``."""
     step = step.astype(jnp.float32)
     warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
     frac = jnp.clip((step - cfg.warmup_steps)
@@ -67,12 +75,14 @@ def update_shard(cfg: AdamWConfig, state: AdamState, g, p, clip_scale=1.0):
 
 
 def global_norm(tree) -> jax.Array:
+    """L2 norm over every leaf of ``tree`` (fp32 accumulation)."""
     leaves = jax.tree.leaves(tree)
     return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
                         for l in leaves))
 
 
 def clip_scale_from_norm(cfg: AdamWConfig, gnorm) -> jax.Array:
+    """Gradient scale factor implementing global-norm clipping."""
     return jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12))
 
 
@@ -81,12 +91,15 @@ def clip_scale_from_norm(cfg: AdamWConfig, gnorm) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 class TreeAdamState(NamedTuple):
+    """Pytree optimizer state: m/v mirror the param tree (shard exactly
+    like params under GSPMD in fsdp_auto mode)."""
     m: Any
     v: Any
     step: jax.Array
 
 
 def init_tree_state(params) -> TreeAdamState:
+    """Zero-initialized :class:`TreeAdamState` mirroring ``params``."""
     zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     return TreeAdamState(m=zeros,
                          v=jax.tree.map(jnp.copy, zeros),
@@ -94,6 +107,8 @@ def init_tree_state(params) -> TreeAdamState:
 
 
 def update_tree(cfg: AdamWConfig, state: TreeAdamState, grads, params):
+    """One AdamW step on whole pytrees (replicated/GSPMD path).
+    Returns ``(new_params, new_state, grad_norm)``."""
     gnorm = global_norm(grads)
     scale = clip_scale_from_norm(cfg, gnorm)
     step = state.step + 1

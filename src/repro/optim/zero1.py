@@ -60,6 +60,58 @@ from . import adamw
 
 @dataclass(frozen=True)
 class GradSyncConfig:
+    """How zero1 synchronizes gradients and re-gathers parameter shards.
+
+    The config is declarative: it compiles to :class:`CollectiveSpec`
+    objects (:meth:`rs_spec` / :meth:`ag_spec`) and every knob maps onto
+    a spec field or a zero1-side policy.  Fields:
+
+    ``impl``
+        Sync algorithm: ``'circulant'`` (paper Algorithm 1/2; the only
+        impl that supports wire compression and bucketing), ``'ring'``
+        (p-1-round bandwidth baseline), ``'xla'`` (psum_scatter /
+        all_gather), or ``'allreduce'`` (replicated allreduce + full
+        optimizer — the no-ZeRO memory baseline).
+    ``schedule``
+        Corollary-2 skip schedule for the circulant impl: ``'halving'``
+        (default), ``'power2'``, ``'fully_connected'``, ``'sqrt'``.
+    ``wire_dtype``
+        ``None`` (exact) or ``'int8'``: compress every circulant round's
+        send payload onto the packed int8 wire (codes + f32 group scales
+        in one buffer; ~4x fewer β bytes, lossy).
+    ``compress``
+        DEPRECATED alias for ``wire_dtype`` (kept for the kwarg era;
+        emits a DeprecationWarning).
+    ``error_feedback``
+        EF-SGD residual for compressed sync: each rank keeps its local
+        quantization error in ``Zero1State.ef`` and adds it back into
+        the next step's gradient before quantizing.  Only meaningful
+        when the sync is actually lossy (see :attr:`uses_error_feedback`).
+    ``quant_group``
+        Elements per int8 quantization scale group on the wire.
+    ``min_shard_numel``
+        Leaves smaller than this stay replicated and are synced with a
+        plain psum (norms, biases, scalars — <0.1% of parameters).
+    ``rs_dtype``
+        Reduce-scatter payload dtype; ``'bfloat16'`` halves the RS link
+        volume (§Perf A).  Allgather always runs exact in param dtype.
+    ``use_fused_kernel``
+        Route the circulant rounds' fold + send assembly through the
+        fused Pallas kernel (``kernels/fused_round.py``); ``None`` =
+        auto (TPU only).
+    ``bucket_bytes``
+        ``None`` (default) syncs each leaf in one shot — the legacy
+        path, bitwise-identical to pre-bucketing builds.  An int enables
+        BUCKETED, OVERLAPPED sync: the flat gradient vector is
+        partitioned into ~``bucket_bytes``-sized buckets (see
+        :func:`plan_grad_buckets`), each bucket runs one circulant RS
+        (and one AG for the updated shards) on the cached plan, and the
+        rounds are software-pipelined across buckets
+        (``CollectivePlan.reduce_scatter_pipelined``) so bucket b's
+        ppermute overlaps bucket b+1's fold.  Requires
+        ``impl='circulant'``.
+    """
+
     impl: str = "circulant"       # circulant | ring | xla | allreduce
     schedule: str = "halving"     # Corollary-2 schedule for circulant
     wire_dtype: str | None = None  # None | 'int8': compressed circulant
@@ -76,6 +128,9 @@ class GradSyncConfig:
     #                               halves the RS link volume (§Perf A)
     use_fused_kernel: bool | None = None  # fused Pallas round kernel for the
     #                               circulant RS/AG; None = auto (TPU only)
+    bucket_bytes: int | None = None  # None = single-shot per leaf (legacy,
+    #                               bitwise-identical); int = bucketed,
+    #                               software-pipelined sync (circulant only)
 
     def __post_init__(self):
         if self.compress is not None:
@@ -84,6 +139,15 @@ class GradSyncConfig:
                 "wire_dtype=... — it feeds the CollectiveSpec the grad "
                 "sync plans are built from (see GradSyncConfig.rs_spec)",
                 DeprecationWarning, stacklevel=3)
+        if self.bucket_bytes is not None:
+            if self.bucket_bytes <= 0:
+                raise ValueError(
+                    f"bucket_bytes must be positive, got {self.bucket_bytes}")
+            if self.impl != "circulant":
+                raise ValueError(
+                    "bucket_bytes requires impl='circulant' — the bucketed "
+                    "path pipelines circulant plans "
+                    f"(got impl={self.impl!r})")
 
     @property
     def wire(self) -> str | None:
@@ -127,6 +191,9 @@ class GradSyncConfig:
 
 
 class Zero1State(NamedTuple):
+    """ZeRO-1 optimizer state: per-leaf AdamW moments holding only this
+    rank's 1/world shard for sharded (zero) leaves, plus the optional
+    EF-SGD residual tree for the compressed wire."""
     m: object        # pytree: sharded fp32 (zero leaves) / full (tiny)
     v: object
     step: jax.Array
@@ -137,6 +204,8 @@ class Zero1State(NamedTuple):
 
 
 def data_parallel_world_static(mesh_shape: dict, axis_names) -> int:
+    """Product of the data-parallel axis sizes, from static mesh shape
+    (usable outside a mesh context, e.g. for state-spec construction)."""
     p = 1
     for a in axis_names:
         p *= mesh_shape[a]
@@ -155,6 +224,8 @@ def is_zero_leaf(shape, world: int, min_numel: int) -> bool:
 
 
 def leaf_flags(params, world: int, min_numel: int = 1024):
+    """Per-leaf :func:`is_zero_leaf` pytree — True where the optimizer
+    state is sharded 1/world."""
     return jax.tree.map(
         lambda l: is_zero_leaf(l.shape, world, min_numel), params)
 
@@ -223,6 +294,199 @@ def ef_quantize(g, residual, group: int):
     return q, comp - q
 
 
+# ---------------------------------------------------------------------------
+# Bucketed, overlapped grad sync (GradSyncConfig.bucket_bytes)
+# ---------------------------------------------------------------------------
+
+def plan_grad_buckets(shapes: Sequence[tuple], world: int,
+                      bucket_bytes: int, itemsize: int = 4
+                      ) -> list[list[tuple[int, int, int]]]:
+    """Partition the flat gradient vector into size-targeted buckets.
+
+    ``shapes`` are the sharded (zero) leaves' shapes in flat traversal
+    order.  Each leaf's padded leading dim splits into ``world`` blocks
+    of ``R = ld_pad // world`` shard rows; the partitioner walks the
+    leaves in order and greedily fills buckets to ~``bucket_bytes`` of
+    full-gradient volume (one shard row accounts for ``world`` gradient
+    rows — the bytes every rank moves through the wire for it).
+
+    Returns a list of buckets; each bucket is a list of ``(leaf, lo,
+    hi)`` segments meaning shard rows ``[lo, hi)`` of ``shapes[leaf]``.
+    Invariants (tested): segments of one leaf are disjoint, in
+    increasing ``lo`` order across buckets, and cover ``[0, R)``
+    exactly; a leaf larger than ``bucket_bytes`` is split across
+    buckets; a row larger than ``bucket_bytes`` gets a bucket of its
+    own (never an empty bucket).  Static/host-side: the partition
+    depends only on shapes, so it is computed once per compile.
+    """
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be positive, got {bucket_bytes}")
+    buckets: list[list[tuple[int, int, int]]] = []
+    cur: list[tuple[int, int, int]] = []
+    cur_bytes = 0
+    for i, shape in enumerate(shapes):
+        ld = shape[0]
+        rest = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+        R = (ld + (-ld) % world) // world
+        row_bytes = rest * world * itemsize
+        lo = 0
+        while lo < R:
+            room = bucket_bytes - cur_bytes
+            if cur and room < row_bytes:
+                buckets.append(cur)
+                cur, cur_bytes = [], 0
+                room = bucket_bytes
+            take = min(R - lo, max(1, room // row_bytes))
+            cur.append((i, lo, lo + take))
+            cur_bytes += take * row_bytes
+            lo += take
+            if cur_bytes >= bucket_bytes:
+                buckets.append(cur)
+                cur, cur_bytes = [], 0
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def _zero_leaf_meta(flat_g, flat_flags):
+    """(zero-leaf indices, per-leaf trailing-row numel) for bucketing."""
+    zero_idx = [i for i, f in enumerate(flat_flags) if f]
+    rn = {i: max(1, int(np.prod(flat_g[i].shape[1:]))) for i in zero_idx}
+    return zero_idx, rn
+
+
+def _bucket_widths(buckets, zero_idx, rn):
+    """Per-bucket column width (shard numel) in the global block matrix."""
+    return [sum((hi - lo) * rn[zero_idx[li]] for (li, lo, hi) in b)
+            for b in buckets]
+
+
+def _bucket_vectors(blocks, buckets, zero_idx, rn):
+    """Assemble one flat per-bucket vector, interleaved block-major so
+    block ``lin`` of the vector is rank ``lin``'s shard data — the layout
+    the circulant RS/AG block partition expects.
+
+    The partitioner walks leaves and shard rows in order, so every
+    bucket is a CONTIGUOUS column range of the global ``(world, Wtot)``
+    block matrix: one concatenate builds the matrix, then each bucket is
+    a single slice + reshape (op count matters — assembly sits on the
+    training step's critical path)."""
+    G = (blocks[zero_idx[0]] if len(zero_idx) == 1 else
+         jnp.concatenate([blocks[i] for i in zero_idx], axis=1))
+    vecs, off = [], 0
+    for w in _bucket_widths(buckets, zero_idx, rn):
+        vecs.append(G[:, off:off + w].reshape(-1))
+        off += w
+    return vecs
+
+
+def _bucketed_reduce(grads, flags, ef, axis_names, sync: GradSyncConfig,
+                     world: int, rs_dt):
+    """Bucketed, software-pipelined gradient reduce-scatter.
+
+    Per-element arithmetic is IDENTICAL to the per-leaf path (the fold
+    sequence of a circulant RS depends only on the block index, which
+    the bucket layout preserves), so the uncompressed bucketed sync is
+    bitwise-equal to ``reduce_scatter_leaf``; the int8 wire differs only
+    through quantization-group boundaries (within wire tolerances).
+    EF residual accounting is per leaf, exactly as in the one-shot path
+    — each bucket's wire rounds then transport the same compensated
+    rows.  Returns ``(g_red tree, new_ef tree | None)``.
+    """
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_flags = jax.tree.leaves(flags)
+    flat_ef = jax.tree.leaves(ef) if ef is not None else [None] * len(flat_g)
+    zero_idx, rn = _zero_leaf_meta(flat_g, flat_flags)
+    zset = set(zero_idx)
+    out: list = [None] * len(flat_g)
+    new_ef = list(flat_ef)
+    for i, g in enumerate(flat_g):
+        if i not in zset:
+            out[i] = allreduce_leaf(g.astype(jnp.float32), axis_names,
+                                    sync, world)
+    blocks = {}
+    for i in zero_idx:
+        g = flat_g[i]
+        if ef is not None:
+            q, err = ef_quantize(g, flat_ef[i][0], sync.quant_group)
+            new_ef[i] = err[None]
+            g = q
+        gp = _pad_lead(g.astype(rs_dt), world)
+        blocks[i] = gp.reshape(world, -1)
+    buckets = plan_grad_buckets([flat_g[i].shape for i in zero_idx], world,
+                                sync.bucket_bytes,
+                                jnp.dtype(rs_dt).itemsize)
+    vecs = _bucket_vectors(blocks, buckets, zero_idx, rn)
+    spec = sync.rs_spec()
+    for ax in axis_names:
+        vecs = C.reduce_scatter_pipelined(vecs, ax, spec=spec)
+    # Each bucket's RS result is this rank's contiguous column range of
+    # the global block matrix, so concatenating the bucket results in
+    # order gives the rank's full shard vector; per-leaf slices then
+    # fall at the leaf block widths.  Single divide, then L slices.
+    own = vecs[0] if len(vecs) == 1 else jnp.concatenate(vecs)
+    own = (own / world).astype(jnp.float32)
+    off = 0
+    for i in zero_idx:
+        w = blocks[i].shape[1]
+        out[i] = own[off:off + w].reshape(-1, *flat_g[i].shape[1:])
+        off += w
+    g_red = jax.tree.unflatten(tdef, out)
+    if ef is None:
+        return g_red, None
+    return g_red, jax.tree.unflatten(tdef, new_ef)
+
+
+def _bucketed_allgather(local, params, flags, axis_names,
+                        sync: GradSyncConfig, world: int):
+    """Bucketed, software-pipelined allgather of updated param shards.
+
+    ``local`` mirrors ``params``: zero leaves hold this rank's updated
+    shard ``(R, *rest)``, tiny leaves the full replicated update.  Uses
+    the SAME static bucket partition as the grad reduce (same shapes,
+    same itemsize) so plans and bucket geometries are shared.  Allgather
+    is pure transport, so the result is bitwise-equal to per-leaf
+    ``allgather_leaf`` (mixed-dtype buckets promote via ``result_type``
+    and cast back — lossless round trips).
+    """
+    flat_l, tdef = jax.tree.flatten(local)
+    flat_p = jax.tree.leaves(params)
+    flat_flags = jax.tree.leaves(flags)
+    zero_idx, rn = _zero_leaf_meta(flat_p, flat_flags)
+    out = list(flat_l)
+    buckets = plan_grad_buckets([flat_p[i].shape for i in zero_idx], world,
+                                sync.bucket_bytes,
+                                jnp.dtype(sync.rs_dtype).itemsize)
+    # One flat local-shard vector in leaf order (mixed dtypes promote via
+    # result_type and cast back after transport — lossless round trips);
+    # each bucket is a contiguous slice of it (see _bucket_vectors).
+    dt = jnp.result_type(*[flat_l[i].dtype for i in zero_idx])
+    lvec = (flat_l[zero_idx[0]].astype(dt).reshape(-1)
+            if len(zero_idx) == 1 else
+            jnp.concatenate([flat_l[i].astype(dt).reshape(-1)
+                             for i in zero_idx]))
+    vecs, off = [], 0
+    for w in _bucket_widths(buckets, zero_idx, rn):
+        vecs.append(lvec[off:off + w])
+        off += w
+    spec = sync.ag_spec()
+    for ax in reversed(list(axis_names)):
+        vecs = C.allgather_pipelined(vecs, ax, spec=spec)
+    # Gathered bucket b is (world * w_b,) block-major; re-joining the
+    # buckets column-wise rebuilds the global (world, Wtot) block matrix,
+    # from which each leaf is one column-range slice.
+    G = (vecs[0].reshape(world, -1) if len(vecs) == 1 else
+         jnp.concatenate([v.reshape(world, -1) for v in vecs], axis=1))
+    off = 0
+    for i in zero_idx:
+        ld = flat_p[i].shape[0]
+        w = (ld + (-ld) % world) // world * rn[i]
+        out[i] = (G[:, off:off + w].reshape(-1, *flat_p[i].shape[1:])[:ld]
+                  .astype(flat_p[i].dtype))
+        off += w
+    return jax.tree.unflatten(tdef, out)
+
+
 def zero1_step(loss_and_grad: Callable, params, opt: Zero1State, batch, *,
                axis_names: Sequence[str], opt_cfg: adamw.AdamWConfig,
                sync: GradSyncConfig):
@@ -240,6 +504,7 @@ def zero1_step(loss_and_grad: Callable, params, opt: Zero1State, batch, *,
     # --- reduce: shard big leaves (Algorithm 1), psum tiny ones ---
     rs_dt = jnp.dtype(sync.rs_dtype)
     use_ef = sync.uses_error_feedback and opt.ef is not None
+    bucketed = use_zero and sync.bucket_bytes is not None
 
     def reduce_one(g, flag):
         if flag and use_zero:
@@ -248,7 +513,15 @@ def zero1_step(loss_and_grad: Callable, params, opt: Zero1State, batch, *,
             return out.astype(jnp.float32)
         return allreduce_leaf(g.astype(jnp.float32), axis_names, sync, world)
 
-    if use_ef:
+    if bucketed:
+        # Bucketed, pipelined sync: bucket b's round-k ppermute overlaps
+        # bucket b+1's fold (see _bucketed_reduce; bucket_bytes=None
+        # keeps the per-leaf one-shot path below, bitwise-identical).
+        g_red, ef_out = _bucketed_reduce(
+            grads, flags, opt.ef if use_ef else None, axis_names, sync,
+            world, rs_dt)
+        new_ef = ef_out if use_ef else opt.ef
+    elif use_ef:
         # Compressed sync with error feedback: compensate, quantize, and
         # carry the rounding error (see ef_quantize).  ``e`` arrives as
         # this rank's (1, *leaf) shard of the (world, *leaf) state.
@@ -307,7 +580,9 @@ def zero1_step(loss_and_grad: Callable, params, opt: Zero1State, batch, *,
         delta = -lr * ((m2 / bc1) / (jnp.sqrt(v2 / bc2) + opt_cfg.eps)
                        + opt_cfg.weight_decay * p_loc.astype(jnp.float32))
         new_loc = (p_loc.astype(jnp.float32) + delta).astype(p.dtype)
-        if flag and use_zero:
+        if flag and use_zero and not bucketed:
+            # Bucketed mode defers the gather: shards from all leaves are
+            # re-bucketed and allgathered pipelined below.
             new_p = allgather_leaf(new_loc, p.shape[0], axis_names, sync)
         else:
             new_p = new_loc
@@ -319,6 +594,9 @@ def zero1_step(loss_and_grad: Callable, params, opt: Zero1State, batch, *,
     new_params = jax.tree.map(lambda o: o[0], out, is_leaf=istup)
     new_m = jax.tree.map(lambda o: o[1], out, is_leaf=istup)
     new_v = jax.tree.map(lambda o: o[2], out, is_leaf=istup)
+    if bucketed:
+        new_params = _bucketed_allgather(new_params, params, flags,
+                                         axis_names, sync, world)
 
     mloss = loss
     for ax in axis_names:

@@ -93,6 +93,34 @@ def build_zero1(model: ModelApi, mesh: Mesh, recipe: ShardingRecipe,
         assert_verified(_plan(sync.ag_spec(), p=mesh.shape[ax],
                               axis_name=ax))
 
+    # Bucketed sync: compute the static bucket partition from the model's
+    # abstract param shapes NOW (jax.eval_shape — no allocation) so a bad
+    # bucket_bytes / partition fails at build time, not mid-trace, and
+    # assert every bucket's segments are well-formed.  The RS/AG plans
+    # verified above are the ones each bucket executes (plan geometry is
+    # shape-independent, so one cached plan serves every bucket).
+    if sync.bucket_bytes is not None:
+        from repro.optim.zero1 import is_zero_leaf, plan_grad_buckets
+        abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        zshapes = [l.shape for l in jax.tree.leaves(abs_params)
+                   if is_zero_leaf(l.shape, world, sync.min_shard_numel)]
+        buckets = plan_grad_buckets(zshapes, world, sync.bucket_bytes,
+                                    jnp.dtype(sync.rs_dtype).itemsize)
+        covered = {}
+        for b in buckets:
+            if not b:
+                raise ValueError("bucket partitioner produced empty bucket")
+            for (li, lo, hi) in b:
+                if not 0 <= lo < hi:
+                    raise ValueError(f"bad segment ({li}, {lo}, {hi})")
+                covered[li] = covered.get(li, 0) + (hi - lo)
+        for li, shape in enumerate(zshapes):
+            rows = (shape[0] + (-shape[0]) % world) // world
+            if covered.get(li, 0) != rows:
+                raise ValueError(
+                    f"bucket partition covers {covered.get(li, 0)}/{rows} "
+                    f"shard rows of leaf {li} {shape}")
+
     # Expert-parallel MoE dispatch exchanges over cfg.ep_axis INSIDE the
     # step, so that axis must be manual too — and its alltoall(v) plans
     # can fail fast / pre-warm here, like the grad-sync plans above.

@@ -1,0 +1,144 @@
+"""Subprocess worker: multi-call (async) round protocol + pipelined
+drivers on N fake CPU devices.
+
+Checks that the software-pipelined executors (`reduce_scatter_pipelined`
+/ `allgather_pipelined`) are BITWISE-equal to the one-shot methods on
+every async-capable backend (they run the same ops, split at the round
+seam), that manual out-of-order interleavings of start_round /
+finish_round across two payloads still produce one-shot results, and
+that the lowered HLO of a pipelined B-payload RS contains exactly
+B * ceil(log2 p) collective-permutes (2x for allreduce) — the per-bucket
+round-count invariant of the overlap gate.
+
+Run:  python tests/_async_checks.py <ndev>
+"""
+import os
+import sys
+
+NDEV = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+import re  # noqa: E402 — strip inherited count: XLA keeps the LAST flag
+_inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                    os.environ.get("XLA_FLAGS", ""))
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={NDEV} " + _inherited)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import compat  # noqa: E402
+from repro.analysis.hlo_budget import (  # noqa: E402
+    count_collective_permutes)
+from repro.core import CollectiveSpec, plan  # noqa: E402
+from repro.core.schedule import ceil_log2  # noqa: E402
+
+mesh = compat.make_mesh((NDEV,), ("x",))
+rng = np.random.default_rng(7)
+p = NDEV
+q = ceil_log2(p)
+# Three payload geometries: different block sizes, one with a trailing dim.
+SHAPES = [(p * 6,), (p * 3,), (p * 4, 2)]
+
+
+def run_sharded(fn, xs_global):
+    """Run fn(per-rank payload list) under shard_map; inputs are (p, n)
+    global arrays sharded on axis 0, unwrapped to v[0] per rank."""
+    f = jax.jit(compat.shard_map(
+        lambda *vs: tuple(o[None] for o in fn([v[0] for v in vs])),
+        mesh=mesh, in_specs=tuple(P("x") for _ in xs_global),
+        out_specs=tuple(P("x") for _ in xs_global),
+        check_vma=False))  # pallas_call has no shard_map replication rule
+    return [np.asarray(o) for o in f(*xs_global)]
+
+
+def check(name, cond=True):
+    if not cond:
+        raise AssertionError(f"FAILED: {name}")
+    print(f"ok: {name}")
+
+
+def payloads():
+    return [rng.standard_normal((p, *s)).astype(np.float32) for s in SHAPES]
+
+
+SPECS = [
+    ("jnp", CollectiveSpec()),
+    ("fused", CollectiveSpec(use_fused_kernel=True)),
+    ("jnp+int8", CollectiveSpec(wire_dtype="int8", wire_group=8)),
+    ("fused+int8", CollectiveSpec(wire_dtype="int8", wire_group=8,
+                                  use_fused_kernel=True)),
+]
+
+for label, spec in SPECS:
+    pl = plan(spec, p=p, axis_name="x")
+    xs = payloads()
+
+    one = run_sharded(lambda vs: [pl.reduce_scatter(v) for v in vs], xs)
+    pipe = run_sharded(lambda vs: pl.reduce_scatter_pipelined(vs), xs)
+    for a, b in zip(one, pipe):
+        assert np.array_equal(a, b), (label, a.shape)
+    check(f"pipelined RS bitwise == one-shot [{label}] (p={p})")
+
+    # Allgather: feed each rank a block, compare gathered buffers.
+    blocks = [x[:, : x.shape[1] // p] if x.ndim == 2
+              else x[:, : x.shape[1] // p, :] for x in xs]
+    one = run_sharded(lambda vs: [pl.allgather(v) for v in vs], blocks)
+    pipe = run_sharded(lambda vs: pl.allgather_pipelined(vs), blocks)
+    for a, b in zip(one, pipe):
+        assert np.array_equal(a, b), (label, a.shape)
+    check(f"pipelined AG bitwise == one-shot [{label}] (p={p})")
+
+
+# Manual out-of-order interleaving: start both payloads, then finish in
+# swapped order, per round — a schedule _run_pipelined never emits — must
+# still be bitwise one-shot (round states are independent).
+pl = plan(CollectiveSpec(), p=p, axis_name="x")
+xs = payloads()[:2]
+
+
+def manual_interleave(vs):
+    sts = [pl.rs_begin(v) for v in vs]
+    while not sts[0].done:
+        pl.start_round(sts[0])
+        pl.start_round(sts[1])
+        pl.finish_round(sts[1])
+        pl.finish_round(sts[0])
+    return [pl.rs_end(st) for st in sts]
+
+
+one = run_sharded(lambda vs: [pl.reduce_scatter(v) for v in vs], xs)
+man = run_sharded(manual_interleave, xs)
+for a, b in zip(one, man):
+    assert np.array_equal(a, b)
+check(f"manual out-of-order interleaving bitwise == one-shot (p={p})")
+
+
+# HLO round budget: a pipelined B-payload RS lowers to exactly B*q
+# collective-permutes; RS+AG (allreduce) to 2*B*q.  This is the
+# per-bucket invariant the `overlap` bench gate asserts.
+B = len(SHAPES)
+
+
+def lower_count(fn, shapes):
+    f = jax.jit(compat.shard_map(
+        lambda *vs: tuple(o[None] for o in fn([v[0] for v in vs])),
+        mesh=mesh, in_specs=tuple(P("x") for _ in shapes),
+        out_specs=tuple(P("x") for _ in shapes), check_vma=False))
+    avals = [jax.ShapeDtypeStruct((p, *s), jnp.float32) for s in shapes]
+    return count_collective_permutes(f.lower(*avals).as_text())
+
+
+n_rs = lower_count(lambda vs: pl.reduce_scatter_pipelined(vs), SHAPES)
+check(f"pipelined RS HLO collective-permutes == B*q = {B * q} "
+      f"(got {n_rs})", n_rs == B * q)
+
+n_ar = lower_count(
+    lambda vs: pl.allgather_pipelined(pl.reduce_scatter_pipelined(vs)),
+    SHAPES)
+check(f"pipelined AR HLO collective-permutes == 2*B*q = {2 * B * q} "
+      f"(got {n_ar})", n_ar == 2 * B * q)
+
+print("ALL ASYNC CHECKS PASSED")

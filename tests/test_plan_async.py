@@ -1,0 +1,131 @@
+"""Multi-call (async) round protocol of CollectivePlan.
+
+Device-free here: protocol-order errors (start twice, finish before
+start, end early, cross-plan states), backends without a round seam
+raising NotImplementedError, and the p == 1 identity path (including the
+pipelined drivers).  Execution equivalence — pipelined bitwise ==
+one-shot per backend, manual interleavings, per-payload HLO round
+budgets — runs in ``tests/_async_checks.py`` on fake devices (one
+subprocess per axis size, including a non-power-of-two p)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import CollectiveSpec, RoundState, plan
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+AX = "x"
+
+
+def _plan(p, **kw):
+    return plan(CollectiveSpec(**kw), p=p, axis_name=AX)
+
+
+# ---------------------------------------------------------------------------
+# Protocol-order errors (validated before any collective is traced)
+# ---------------------------------------------------------------------------
+
+def test_start_after_done_raises():
+    pl = _plan(4)
+    st = RoundState(plan=pl, phase="rs", nrounds=2, k=2)
+    with pytest.raises(ValueError, match="phase complete"):
+        pl.start_round(st)
+
+
+def test_double_start_raises():
+    pl = _plan(4)
+    st = RoundState(plan=pl, phase="rs", nrounds=2, started=True)
+    with pytest.raises(ValueError, match="already started"):
+        pl.start_round(st)
+
+
+def test_finish_before_start_raises():
+    pl = _plan(4)
+    st = RoundState(plan=pl, phase="rs", nrounds=2)
+    with pytest.raises(ValueError, match="no ppermute in flight"):
+        pl.finish_round(st)
+
+
+def test_end_with_rounds_left_raises():
+    pl = _plan(4)
+    st = RoundState(plan=pl, phase="rs", nrounds=2, k=1)
+    with pytest.raises(ValueError, match="unfinished"):
+        pl.rs_end(st)
+
+
+def test_end_wrong_phase_raises():
+    pl = _plan(4)
+    st = RoundState(plan=pl, phase="rs", nrounds=2, k=2)
+    with pytest.raises(ValueError, match="mid-rs"):
+        pl.ag_end(st)
+
+
+def test_foreign_state_raises():
+    pl_a = _plan(4)
+    pl_b = _plan(4, schedule="power2")
+    st = RoundState(plan=pl_b, phase="rs", nrounds=2)
+    with pytest.raises(ValueError, match="different plan"):
+        pl_a.start_round(st)
+
+
+# ---------------------------------------------------------------------------
+# Backends without a round seam
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["ring", "xla"])
+def test_baseline_backends_have_no_async(kind):
+    pl = plan(CollectiveSpec(kind=kind), p=4, axis_name=AX)
+    with pytest.raises(NotImplementedError, match="multi-call"):
+        pl.rs_begin(np.zeros(8, np.float32))
+    with pytest.raises(NotImplementedError, match="multi-call"):
+        pl.ag_begin(np.zeros(2, np.float32))
+
+
+def test_nonuniform_has_no_async():
+    pl = _plan(4, counts=(3, 1, 4, 1))
+    with pytest.raises(NotImplementedError, match="async-capable"):
+        pl.rs_begin(np.zeros(9, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# p == 1 identity (fully device-free, including the pipelined drivers)
+# ---------------------------------------------------------------------------
+
+def test_p1_identity_roundtrip():
+    pl = _plan(1)
+    x = np.arange(6, dtype=np.float32)
+    st = pl.rs_begin(x)
+    assert st.done and st.nrounds == 0
+    with pytest.raises(ValueError, match="phase complete"):
+        pl.start_round(st)
+    assert pl.rs_end(st) is x
+
+
+def test_p1_pipelined_identity():
+    pl = _plan(1)
+    xs = [np.arange(4, dtype=np.float32), np.ones((2, 3), np.float32)]
+    outs = pl.reduce_scatter_pipelined(xs)
+    assert all(o is x for o, x in zip(outs, xs))
+    outs = pl.allgather_pipelined(xs)
+    assert all(o is x for o, x in zip(outs, xs))
+
+
+# ---------------------------------------------------------------------------
+# Execution equivalence on fake devices (p = 8 and a non-power-of-two 6)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ndev", [8, 6])
+def test_async_execution_subprocess(ndev):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_async_checks.py"), str(ndev)],
+        capture_output=True, text=True, timeout=1200, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"async checks failed (ndev={ndev}):\n--- stdout ---\n"
+            f"{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    assert "ALL ASYNC CHECKS PASSED" in proc.stdout
