@@ -1,0 +1,115 @@
+"""Subprocess worker for bench_elastic: the full elastic drill measured
+end-to-end on 8 fake CPU devices.
+
+Per spec it emits CSV rows with:
+
+  drill_shrink      mid-run rank loss at world 4 -> drain/re-plan/
+                    reshard/resume at 3, with 2 transient checkpoint-IO
+                    faults injected at the drain (absorbed = the retry
+                    machinery worked).  within_boundary flags
+                    lost_steps <= ckpt_every (recovery resumed from the
+                    last step boundary's checkpoint);
+  drill_grow        voluntary resize 2 -> 4 at a step boundary via a
+                    synchronous drain checkpoint: lost_steps must be 0;
+  trajectory_shrink / trajectory_grow
+                    post-resize loss trajectory vs an uninterrupted p'
+                    run restored from the SAME checkpoint through the
+                    same resize path: f32 rows must be bitwise
+                    (bitwise flag), and max |dloss| is reported;
+  trajectory_int8   the shrink drill on the int8 wire + error feedback
+                    (exercises the EF mass-conservation resize):
+                    within_tol vs the documented 0.05 envelope;
+  replan            per-spec re-plan + static-verify latency at the new
+                    world (verified flag; within_budget vs
+                    REPLAN_BUDGET_US per spec — re-planning is
+                    microseconds of trace-time table rebuilds, never a
+                    topology rewrite);
+  recovery_steps    recovery-step accounting across the drills: total
+                    lost (re-run) steps, worst single drill.
+
+Emits CSV rows on stdout; the gate logic lives in benchmarks/ci_gate.py.
+"""
+import os
+import sys
+
+import re  # noqa: E402 — strip inherited count: XLA keeps the LAST flag
+_inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                    os.environ.get("XLA_FLAGS", ""))
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + _inherited)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.elastic import run_drill  # noqa: E402
+
+#: per-spec re-plan + assert_verified budget.  Measured ~100-300us on
+#: CPU; 100ms keeps the claim honest (re-planning is trace-time work,
+#: orders below a single training step) with huge headroom for loaded
+#: CI runners.
+REPLAN_BUDGET_US = 100_000.0
+CKPT_EVERY = 3
+
+
+def emit(name, us, derived=""):
+    print(f"elastic/{name},{us:.3f},{derived}")
+
+
+def report_drill(tag, res, tol=None):
+    rep = res["report"]
+    lost = res["lost_steps"]
+    boundary_ok = (lost == 0) if res["kind"] == "grow" \
+        else (0 <= lost <= CKPT_EVERY)
+    emit(f"drill_{tag}", rep.total_s * 1e6,
+         f"world={res['world']};new_world={res['new_world']};"
+         f"event_step={res['event_step']};resumed={res['resumed_step']};"
+         f"lost_steps={lost};within_boundary={boundary_ok};"
+         f"io_absorbed={rep.io_failures};evicted={rep.evicted};"
+         f"restarted={rep.restarted};fired={'+'.join(res['fired'])}")
+    if tol is None:
+        emit(f"trajectory_{tag}", rep.total_s * 1e6,
+             f"bitwise={res['bitwise']};max_err={res['max_abs_diff']:.3g};"
+             f"n_steps={len(res['post'])}")
+    else:
+        emit(f"trajectory_{tag}", rep.total_s * 1e6,
+             f"within_tol={res['max_abs_diff'] <= tol};"
+             f"max_err_int8={res['max_abs_diff']:.3g};tol={tol};"
+             f"n_steps={len(res['post'])}")
+    return rep
+
+
+def main():
+    common = dict(arch="qwen3-1.7b", scale_down=True, steps=8, seq_len=16,
+                  global_batch=12, ckpt_every=CKPT_EVERY)
+
+    shrink = run_drill(world=4, shrink_at_step=5, fail_rank=2, io_faults=2,
+                       **common)
+    rep_s = report_drill("shrink", shrink)
+    assert rep_s.io_failures == 2, rep_s.io_failures
+
+    grow = run_drill(world=2, grow_at_step=4, grow_to=4, **common)
+    rep_g = report_drill("grow", grow)
+
+    # int8 wire + EF: the resize path that folds per-rank residual mass.
+    # The documented envelope for compressed-sync trajectory deltas is
+    # 0.05 (docs/architecture.md) — the ref run shares the resize path,
+    # so the observed delta is 0, but the gate keeps the envelope honest.
+    int8 = run_drill(world=4, shrink_at_step=5, fail_rank=1,
+                     wire_dtype="int8", **common)
+    report_drill("int8", int8, tol=0.05)
+
+    for rep, tag in ((rep_s, "shrink"), (rep_g, "grow")):
+        for r in rep.replans:
+            ok = r.plan_us <= REPLAN_BUDGET_US
+            emit(f"replan_{tag}_p{r.old_p}to{r.new_p}", r.plan_us,
+                 f"verified={r.verified};within_budget={ok};"
+                 f"budget_us={REPLAN_BUDGET_US:.0f};"
+                 f"kind={r.spec.kind}")
+    assert rep_s.replans and rep_g.replans
+
+    losts = [shrink["lost_steps"], grow["lost_steps"], int8["lost_steps"]]
+    emit("recovery_steps", 0.0,
+         f"total_lost={sum(losts)};worst={max(losts)};drills={len(losts)};"
+         f"ckpt_every={CKPT_EVERY}")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,7 +34,15 @@ budget violation, which this gate surfaces as failures), parses the CSV into ``B
   (``cp_delta == 0``); the pipelined drivers are bitwise-equal to the one-shot path; the
   bucketed step stays within ``OVERLAP_RATIO_MAX`` of the unbucketed step (median of paired
   reps at the launcher-default seq_len); and the bucketed int8+EF trajectory stays inside the
-  documented wire tolerance (``within_tol``).
+  documented wire tolerance (``within_tol``);
+* elastic drill rows (``elastic/``): the mid-run shrink (rank loss at world 4 -> 3, with
+  transient checkpoint-IO faults injected during recovery) and grow (2 -> 4) drills both
+  resume ``within_boundary`` (lost steps <= ckpt_every; zero for the grow path's synchronous
+  drain checkpoint) without falling back to a clean restart; every re-planned spec passes
+  ``assert_verified`` within the per-spec latency budget (``within_budget``); and the
+  post-resize loss trajectory matches an uninterrupted p' run restored from the same
+  checkpoint — f32 bitwise (generic ``bitwise`` check), int8+EF inside the documented 0.05
+  envelope (``within_tol``).
 
 Usage:  PYTHONPATH=src python -m benchmarks.ci_gate [--out BENCH_ci.json]
 Exit code 0 iff every check passes.
@@ -66,7 +74,7 @@ A2A_RATIO_MAX = 1.5
 # work and the paired-rep median sits at ~1.0, so 1.05 catches a real
 # serialization regression (a lost overlap seam lands well above it).
 OVERLAP_RATIO_MAX = 1.05
-ONLY = "rounds,kernels,wire,plans,a2a,overlap,analysis"
+ONLY = "rounds,kernels,wire,plans,a2a,overlap,elastic,analysis"
 
 
 def parse_csv(text: str) -> list[dict]:
@@ -160,6 +168,37 @@ def check(rows: list[dict]) -> list[str]:
                     f"{f.get('max_err_int8')} outside wire tolerance "
                     f"{f.get('tol')}"
                 )
+        if row["name"].startswith("elastic/"):
+            f = row["fields"]
+            if "within_boundary" in f and f["within_boundary"] != "True":
+                failures.append(
+                    f"{row['name']}: lost_steps={f.get('lost_steps')} — "
+                    f"recovery must resume from the last step-boundary "
+                    f"checkpoint (<= ckpt_every; 0 for grow)"
+                )
+            if "restarted" in f and f["restarted"] != "False":
+                failures.append(
+                    f"{row['name']}: drill fell back to a clean restart "
+                    f"(drain -> re-plan -> reshard -> resume must succeed "
+                    f"in-process)"
+                )
+            if "verified" in f and f["verified"] != "True":
+                failures.append(
+                    f"{row['name']}: re-planned spec failed "
+                    f"assert_verified at the new world"
+                )
+            if "within_budget" in f and f["within_budget"] != "True":
+                failures.append(
+                    f"{row['name']}: re-plan + verify took "
+                    f"{row['us_per_call']:.0f}us > budget "
+                    f"{f.get('budget_us')}us per spec"
+                )
+            if "within_tol" in f and f["within_tol"] != "True":
+                failures.append(
+                    f"{row['name']}: int8+EF post-resize trajectory err "
+                    f"{f.get('max_err_int8')} outside the documented "
+                    f"envelope {f.get('tol')}"
+                )
         if row["name"].startswith("analysis/"):
             f = row["fields"]
             if f.get("findings", "0") != "0":
@@ -212,6 +251,14 @@ def check(rows: list[dict]) -> list[str]:
                 "overlap/trajectory"):
         if req not in names:
             failures.append(f"no {req} bucketed-overlap row produced")
+    for req in ("elastic/drill_shrink", "elastic/drill_grow",
+                "elastic/trajectory_shrink", "elastic/trajectory_grow",
+                "elastic/trajectory_int8", "elastic/recovery_steps"):
+        if req not in names:
+            failures.append(f"no {req} elastic-drill row produced")
+    if not any(n.startswith("elastic/replan_") for n in names):
+        failures.append("no elastic/replan_* per-spec re-plan latency rows "
+                        "produced")
     for pass_name in ("verify", "jaxpr", "hlo", "repo"):
         if f"analysis/{pass_name}" not in names:
             failures.append(f"no analysis/{pass_name} static-analysis row "

@@ -26,6 +26,10 @@ and the Corollary-2 schedule family.  Benchmarks:
                pipelined drivers bitwise == one-shot, bucketed ZeRO-1
                step within 1.05x of unbucketed, trajectory within wire
                tolerances
+  elastic      rank-failure drills: mid-run shrink (4->3, injected rank
+               loss + transient ckpt-IO faults) and grow (2->4) resume
+               within one step boundary; re-plan+verify latency per spec;
+               post-resize trajectory vs uninterrupted p' reference
   roofline     re-emit the dry-run roofline table (reads reports/dryrun)
 
 Output: ``name,us_per_call,derived`` CSV rows.
@@ -165,6 +169,23 @@ def bench_overlap():
                           text=True, timeout=1200, env=env)
     if proc.returncode != 0:
         emit("overlap/ERROR", 0.0, proc.stderr[-200:].replace("\n", " "))
+        return
+    print(proc.stdout, end="")
+
+
+# ---------------------------------------------------------------------------
+def bench_elastic():
+    """Elastic fault-tolerance gate: shrink/grow drills resume within a
+    step boundary with verified re-plans and a reference-matching
+    post-resize trajectory.  Subprocess (needs fake devices)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    worker = os.path.join(here, "_elastic_worker.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, worker], capture_output=True,
+                          text=True, timeout=1800, env=env)
+    if proc.returncode != 0:
+        emit("elastic/ERROR", 0.0, proc.stderr[-200:].replace("\n", " "))
         return
     print(proc.stdout, end="")
 
@@ -387,6 +408,7 @@ BENCHES = {
     "plans": bench_plans,
     "a2a": bench_a2a,
     "overlap": bench_overlap,
+    "elastic": bench_elastic,
     "analysis": bench_analysis,
     "roofline": bench_roofline,
 }

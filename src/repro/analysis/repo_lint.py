@@ -223,8 +223,36 @@ def _rule_public_docstring(tree, rel: str) -> list[Finding]:
     return out
 
 
+_FT_DIR = "src/repro/ft/"
+_WORLD_READS = ("device_count", "local_device_count", "process_count",
+                "devices", "local_devices", "axis_size", "process_index")
+
+
+def _rule_ft_world(tree, rel: str) -> list[Finding]:
+    """Rank/world-size reads inside ``repro.ft`` must go through
+    ``ElasticController.world``: during a resize the runtime's device
+    count and the logical world disagree by construction, so a direct
+    ``jax.device_count()``-style read in fault-tolerance code is a
+    latent split-brain bug."""
+    if not rel.startswith(_FT_DIR):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        if name in _WORLD_READS:
+            out.append(_finding(
+                "ft-world-via-controller", rel, node.lineno,
+                f"{name}() read inside ft/ — the live world must come "
+                f"from ElasticController.world (runtime device counts "
+                f"are stale mid-resize)"))
+    return out
+
+
 _RULES = (_rule_jax_experimental, _rule_pallas_call, _rule_bare_impl,
-          _rule_hlo_counter, _rule_spec_funnel, _rule_public_docstring)
+          _rule_hlo_counter, _rule_spec_funnel, _rule_public_docstring,
+          _rule_ft_world)
 
 
 # ---------------------------------------------------------------------------

@@ -1,1 +1,2 @@
-from .manager import CheckpointManager, config_fingerprint, reshard_flat  # noqa: F401
+from .manager import (CheckpointError, CheckpointManager,  # noqa: F401
+                      config_fingerprint, reshard_flat)

@@ -5,14 +5,25 @@ Layout:  <dir>/step_<N>/arrays.npz + manifest.json
             length (for elastic re-shard validation).
 
 * Atomic: written to step_<N>.tmp then os.rename'd — a crash never leaves
-  a half-checkpoint that restore() would pick up.
+  a half-checkpoint that restore() would pick up.  Stale ``step_<N>.tmp``
+  directories (and final dirs missing their manifest) left by a crash
+  are swept at startup so retention pruning never trips over them.
 * Async: ``save_async`` snapshots to host memory synchronously (cheap) and
   writes on a background thread, double-buffered — the step loop never
-  blocks on disk.
+  blocks on disk.  A background write failure is surfaced as a
+  :class:`CheckpointError` on the NEXT ``save``/``save_async``/``wait``
+  call (never swallowed).
 * Elastic: optimizer m/v are stored as FULL flat vectors (gathered from
   shards); ``restore`` re-shards to ANY data-parallel world size — scaling
   from e.g. 4 hosts to 2 or 8 between runs changes nothing but slicing.
+  ``restore(None, ...)`` falls back to the previous completed checkpoint
+  when the newest one is truncated/corrupt (an explicit ``step`` never
+  falls back — the caller asked for that exact checkpoint).
 * Retention: keep_last completed checkpoints (older ones pruned).
+* Fault injection: an optional ``io_hook(step)`` runs before every
+  write/read — ``ft.FailurePlan.io_hook`` raises transient
+  ``CheckpointIOError``\\ s through it, which the elastic controller's
+  bounded retry/backoff must absorb.
 
 On multi-host deployments each host would write its own process-local
 shard files; the manifest/atomic-rename/cursor discipline is identical.
@@ -24,11 +35,21 @@ import json
 import os
 import shutil
 import threading
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A (possibly background) checkpoint write failed; carries the step
+    whose save failed as ``.step``.  Chained from the original error."""
+
+    def __init__(self, step: int, cause: BaseException):
+        super().__init__(f"checkpoint save of step {step} failed: {cause!r}")
+        self.step = step
 
 
 def _tree_to_flat_dict(tree, prefix="p"):
@@ -49,12 +70,33 @@ class Snapshot:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep_last: int = 3):
+    def __init__(self, directory: str, keep_last: int = 3,
+                 io_hook: Callable[[int], None] | None = None):
         self.dir = directory
         self.keep_last = keep_last
+        self.io_hook = io_hook
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
+        self._sweep_stale()
+
+    def _sweep_stale(self) -> list[str]:
+        """Remove crash leftovers: ``step_<N>.tmp`` dirs (a write died
+        before the atomic rename) and final dirs missing their manifest
+        (should be impossible under the rename discipline, but a partial
+        copy restored from external storage can produce one).  Returns
+        the swept names (for logging/tests)."""
+        swept = []
+        for name in sorted(os.listdir(self.dir)):
+            path = os.path.join(self.dir, name)
+            if not (name.startswith("step_") and os.path.isdir(path)):
+                continue
+            stale = name.endswith(".tmp") or not os.path.exists(
+                os.path.join(path, "manifest.json"))
+            if stale:
+                shutil.rmtree(path, ignore_errors=True)
+                swept.append(name)
+        return swept
 
     # -- save ---------------------------------------------------------------
 
@@ -71,6 +113,8 @@ class CheckpointManager:
         return Snapshot(int(step), arrays, manifest)
 
     def _write(self, snap: Snapshot):
+        if self.io_hook is not None:
+            self.io_hook(snap.step)
         final = os.path.join(self.dir, f"step_{snap.step}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
@@ -91,19 +135,28 @@ class CheckpointManager:
                           ignore_errors=True)
 
     def save(self, step, params, opt_flat: dict, extra: dict | None = None):
-        self._write(self._snapshot(step, params, opt_flat, extra or {}))
+        self.wait()  # surface a pending async failure before writing more
+        try:
+            self._write(self._snapshot(step, params, opt_flat, extra or {}))
+        except CheckpointError:
+            raise
+        except BaseException as e:
+            raise CheckpointError(int(step), e) from e
 
     def save_async(self, step, params, opt_flat: dict,
                    extra: dict | None = None):
-        """Snapshot now (device->host copy), write in background."""
+        """Snapshot now (device->host copy), write in background.
+
+        Surfaces the PREVIOUS background write's failure (if any) as a
+        :class:`CheckpointError` before starting the new write."""
         self.wait()  # double-buffer: at most one outstanding write
         snap = self._snapshot(step, params, opt_flat, extra or {})
 
         def run():
             try:
                 self._write(snap)
-            except BaseException as e:  # surfaced on next wait()
-                self._error = e
+            except BaseException as e:  # surfaced on next save*/wait call
+                self._error = CheckpointError(snap.step, e)
 
         self._thread = threading.Thread(target=run, daemon=True)
         self._thread.start()
@@ -131,16 +184,54 @@ class CheckpointManager:
         steps = self.completed_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int | None, params_template):
-        """Returns (step, params, opt_arrays dict, manifest)."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+    def _read(self, step: int):
+        """Raw (manifest, npz) of one checkpoint dir; raises on any
+        corruption (truncated manifest, bad zip, missing keys)."""
         d = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         data = np.load(os.path.join(d, "arrays.npz"))
+        data.files  # force the zip directory read — surfaces truncation
+        return manifest, data
+
+    def restore(self, step: int | None, params_template):
+        """Returns (step, params, opt_arrays dict, manifest).
+
+        ``step=None`` restores the newest checkpoint, falling back to
+        the previous completed one if the newest is truncated/corrupt
+        (each skip warns).  An explicit ``step`` never falls back.
+        Template-shape mismatches are caller errors and always raise.
+        """
+        if step is None:
+            candidates = list(reversed(self.completed_steps()))
+            if not candidates:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        else:
+            candidates = [step]
+        manifest = data = None
+        errors = []
+        for i, s in enumerate(candidates):
+            # The io_hook runs OUTSIDE the corruption fallback: a hook
+            # failure models a TRANSIENT IO fault (retryable — the
+            # elastic controller's backoff owns it), not a corrupt
+            # checkpoint, so it must propagate instead of silently
+            # falling back to an older step.
+            if self.io_hook is not None:
+                self.io_hook(s)
+            try:
+                manifest, data = self._read(s)
+                step = s
+                break
+            except Exception as e:
+                errors.append((s, e))
+                if i + 1 < len(candidates):
+                    warnings.warn(
+                        f"checkpoint step_{s} is unreadable ({e!r}); "
+                        f"falling back to step_{candidates[i + 1]}",
+                        RuntimeWarning, stacklevel=2)
+        if data is None:
+            raise CheckpointError(candidates[-1], errors[-1][1]) \
+                from errors[-1][1]
         leaves, treedef = jax.tree.flatten(params_template)
         if len(leaves) != manifest["n_param_leaves"]:
             raise ValueError(

@@ -747,6 +747,53 @@ def run_hierarchical(p: int, verbose: bool = False) -> dict | None:
 
 
 # ---------------------------------------------------------------------------
+# Elastic re-plan conformance (device-free)
+# ---------------------------------------------------------------------------
+
+def run_elastic_replan(p: int, verbose: bool = False) -> dict:
+    """Every uniform sweep spec must re-plan cleanly at resized worlds —
+    shrink, grow, and odd p' (the any-p property the elastic controller
+    leans on) — passing the same static verifier ``build_zero1`` runs as
+    pre-flight, and selective invalidation of the old world's cache
+    entries must not disturb the fresh plans.  Pure schedule work: no
+    devices, microseconds per (spec, p').
+    """
+    from repro.analysis.verify import assert_verified
+    from repro.core.plan import plan
+
+    specs = []
+    for case in sweep_cases(p):
+        sp = case_spec(case, p)
+        # counts/group are sized for THIS p — an elastic re-plan carries
+        # the SAME spec to a new world, so only world-free specs apply
+        # (grad-sync specs are exactly this shape).
+        if sp.counts is None and sp.group is None and sp not in specs:
+            specs.append(sp)
+    worlds = sorted({w for w in (max(2, p - 1), p + 1, 3, 2 * p)
+                     if w != p})
+    n_replans = 0
+    for sp in specs:
+        plan(sp, p=p, axis_name=AXIS)  # the "old world" entry
+        for p2 in worlds:
+            assert_verified(plan(sp, p=p2, axis_name=AXIS))
+            n_replans += 1
+        evicted = plan.invalidate(p=p, axis_name=AXIS)
+        assert evicted >= 1, f"{sp}: old-world plan not evicted"
+        for p2 in worlds:  # fresh plans survive the selective eviction
+            assert plan(sp, p=p2, axis_name=AXIS) is \
+                plan(sp, p=p2, axis_name=AXIS), \
+                f"{sp}: p'={p2} plan lost cache identity after invalidate"
+        # rebuilding the evicted world must verify again (p -> p' -> p)
+        assert_verified(plan(sp, p=p, axis_name=AXIS))
+    if verbose:
+        print(f"ok: elastic re-plan p={p} -> p'={worlds}: "
+              f"{len(specs)} specs x {len(worlds)} worlds verified, "
+              f"selective eviction clean")
+    return {"n_specs": len(specs), "worlds": worlds,
+            "n_replans": n_replans}
+
+
+# ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
 
@@ -768,8 +815,10 @@ def run_sweep(p: int, mesh=None, verbose: bool = False) -> dict:
     nonuni = run_nonuniform(p, mesh, verbose=verbose)
     a2a = run_alltoall(p, mesh, verbose=verbose)
     hier = run_hierarchical(p, verbose=verbose)
+    elastic = run_elastic_replan(p, verbose=verbose)
     return {"p": p, "n_cases": len(cases), "rounds": rounds,
-            "nonuniform": nonuni, "alltoall": a2a, "hierarchical": hier}
+            "nonuniform": nonuni, "alltoall": a2a, "hierarchical": hier,
+            "elastic": elastic}
 
 
 def main(argv=None) -> int:
@@ -787,10 +836,12 @@ def main(argv=None) -> int:
                  f"{hier['n_cases']} cases" if hier else "")
     nonuni = report["nonuniform"]
     a2a = report["alltoall"]
+    el = report["elastic"]
     print(f"CONFORMANCE OK (p={p}, {report['n_cases']} cases, "
           f"{len(report['rounds'])} schedules, "
           f"{nonuni['n_cases']} non-uniform cases, "
-          f"{a2a['n_cases']} alltoall cases{hier_note})")
+          f"{a2a['n_cases']} alltoall cases, "
+          f"{el['n_replans']} elastic re-plans{hier_note})")
     return 0
 
 

@@ -705,9 +705,87 @@ def _resolve_backend(spec: CollectiveSpec) -> str:
     return "jnp"
 
 
-@functools.lru_cache(maxsize=4096)
+class _PlanCache:
+    """LRU memo for compiled plans with SELECTIVE invalidation.
+
+    ``functools.lru_cache`` almost suffices, but the elastic runtime
+    (ft/elastic.py) resizes the live world and wants to evict every plan
+    compiled for a rank set that no longer exists — both as memory
+    hygiene across many resize events and as a hard guarantee that no
+    consumer keeps executing a plan whose ``p`` predates the re-plan.
+    Same observable API as the lru_cache it replaces: ``info()`` returns
+    a CacheInfo-shaped tuple (hits/misses/maxsize/currsize) and entries
+    are identical objects across hits (``plan(s, ...) is plan(s, ...)``).
+    """
+
+    class CacheInfo(tuple):
+        """hits / misses / maxsize / currsize, attribute-accessible."""
+        __slots__ = ()
+
+        def __new__(cls, hits, misses, maxsize, currsize):
+            return tuple.__new__(cls, (hits, misses, maxsize, currsize))
+
+        hits = property(lambda s: s[0])
+        misses = property(lambda s: s[1])
+        maxsize = property(lambda s: s[2])
+        currsize = property(lambda s: s[3])
+
+        def __repr__(self):
+            return (f"CacheInfo(hits={s[0]}, misses={s[1]}, "
+                    f"maxsize={s[2]}, currsize={s[3]})"
+                    if (s := tuple(self)) else "CacheInfo()")
+
+    def __init__(self, maxsize: int = 4096):
+        self.maxsize = maxsize
+        self._data: dict = {}
+        self._hits = 0
+        self._misses = 0
+
+    def get(self, key, build):
+        try:
+            val = self._data.pop(key)
+            self._data[key] = val  # re-insert: LRU recency order
+            self._hits += 1
+            return val
+        except KeyError:
+            self._misses += 1
+            val = build()
+            self._data[key] = val
+            while len(self._data) > self.maxsize:
+                self._data.pop(next(iter(self._data)))
+            return val
+
+    def info(self):
+        return self.CacheInfo(self._hits, self._misses, self.maxsize,
+                              len(self._data))
+
+    def clear(self):
+        self._data.clear()
+        self._hits = self._misses = 0
+
+    def invalidate(self, p: int | None = None,
+                   axis_name: str | None = None) -> int:
+        """Evict every cached plan matching the given filters (``None``
+        matches everything); returns the number evicted."""
+        doomed = [k for k in self._data
+                  if (p is None or k[1] == p)
+                  and (axis_name is None or k[2] == axis_name)]
+        for k in doomed:
+            del self._data[k]
+        return len(doomed)
+
+
+_PLAN_CACHE = _PlanCache(maxsize=4096)
+
+
 def _plan_cached(spec: CollectiveSpec, p: int, axis_name: str
                  ) -> CollectivePlan:
+    return _PLAN_CACHE.get((spec, p, axis_name),
+                           lambda: _build_plan(spec, p, axis_name))
+
+
+def _build_plan(spec: CollectiveSpec, p: int, axis_name: str
+                ) -> CollectivePlan:
     backend = _resolve_backend(spec)
     if spec.kind in _BASELINE_KINDS:
         return CollectivePlan(
@@ -763,11 +841,14 @@ def plan(spec: CollectiveSpec | None = None, p: int | None = None,
 
 
 # Cache introspection rides on plan() itself: ``plan.cache_stats()`` /
-# ``plan.clear()``.  Both proxy the lru_cache on _plan_cached, so an
-# identity assertion like ``plan(s, ...) is plan(s, ...)`` plus a
-# hits/misses delta from cache_stats() observes the same cache.
-plan.cache_stats = _plan_cached.cache_info
-plan.clear = _plan_cached.cache_clear
+# ``plan.clear()`` / ``plan.invalidate(p=..., axis_name=...)``.  All
+# proxy the one _PlanCache behind _plan_cached, so an identity assertion
+# like ``plan(s, ...) is plan(s, ...)`` plus a hits/misses delta from
+# cache_stats() observes the same cache the elastic controller evicts
+# from after a world resize.
+plan.cache_stats = _PLAN_CACHE.info
+plan.clear = _PLAN_CACHE.clear
+plan.invalidate = _PLAN_CACHE.invalidate
 
 
 def plan_cache_info():

@@ -1,2 +1,6 @@
 from .watchdog import Watchdog, WatchdogConfig  # noqa: F401
-from .failures import FailureInjector, SimulatedFailure  # noqa: F401
+from .failures import (CheckpointIOError, FailureInjector,  # noqa: F401
+                       FailurePlan, FaultEvent, RankFailure, SimulatedFailure)
+from .elastic import (PHASES, ElasticAbort, ElasticConfig,  # noqa: F401
+                      ElasticController, RecoveryReport, ReplanRecord,
+                      active_specs)

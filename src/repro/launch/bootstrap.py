@@ -1,0 +1,202 @@
+"""Shared train-session bootstrap — ONE place a runnable session is built.
+
+``launch.train`` (the classic CLI driver), ``launch.elastic`` (the
+rank-failure drill harness) and the tests all need the same sequence:
+resolve the arch config, build the mesh/recipe, compile the step
+function, init params + optimizer state, wire the data pipeline.  Before
+the elastic runtime existed that lived inline in ``launch.train.main``;
+the elastic controller has to rebuild a session MID-RUN at a different
+world size (over a device SUBSET — the survivors of a shrink, the
+enlarged set of a grow), so the bootstrap is factored out here and both
+entry points ride it.
+
+The restore path is world-aware: :func:`restore_session` reads any
+checkpoint and, when it was written at a different data-parallel world,
+remaps the optimizer state through
+:func:`repro.optim.zero1.resize_zero1_state` (m/v slice + re-pad, EF
+mass conservation) before placing it on the session's mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.configs import get_config
+from repro.data import for_model
+from repro.launch import mesh as meshlib
+from repro.models import ShardingRecipe, build
+from repro.optim.adamw import AdamWConfig
+from repro.optim.zero1 import GradSyncConfig, resize_zero1_state
+from repro.train import build as build_step
+
+
+@dataclass
+class Session:
+    """Everything a training loop needs, bundled.
+
+    ``params``/``opt`` are the LIVE state — :func:`run_step` advances
+    them in place.  ``world`` is the data-parallel world this session
+    was built for (the dp mesh extent; 1 in single mode).
+    """
+
+    cfg: Any
+    mode: str
+    mesh: Any
+    recipe: Any
+    model: Any
+    opt_cfg: AdamWConfig
+    sync: GradSyncConfig
+    built: Any
+    pipe: Any
+    world: int
+    params: Any = None
+    opt: Any = None
+
+    def use_mesh(self):
+        from repro import compat
+        return compat.use_mesh(self.mesh) if self.mesh is not None \
+            else _null_ctx()
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def build_session(*, arch: str, scale_down: bool = False, steps: int = 100,
+                  seq_len: int = 128, global_batch: int = 8,
+                  dp: int = 1, mp: int = 1, mode: str | None = None,
+                  grad_sync: str = "circulant", schedule: str = "halving",
+                  wire_dtype: str | None = None, error_feedback: bool = True,
+                  use_fused_kernel: bool | None = None,
+                  bucket_bytes: int | None = None,
+                  moe_dispatch: str | None = None,
+                  lr: float = 3e-4, warmup: int = 20,
+                  compress: str | None = None,
+                  devices=None, seed: int = 0,
+                  init_state: bool = True) -> Session:
+    """Build a runnable :class:`Session` for a ``dp × mp`` mesh.
+
+    ``devices`` may be an explicit device subset (default: the first
+    ``dp*mp`` of the runtime's) — the elastic harness passes the
+    surviving set when rebuilding at p′ < device_count.  With
+    ``init_state=False`` params/opt stay ``None`` (for callers about to
+    restore them from a checkpoint anyway).
+    """
+    cfg = get_config(arch)
+    if scale_down:
+        cfg = cfg.scaled_down()
+    if moe_dispatch is not None:
+        if not cfg.is_moe:
+            raise ValueError(
+                f"moe_dispatch given but {arch} is not a MoE arch")
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, moe_dispatch=moe_dispatch)
+    mode = mode or ("single" if dp * mp == 1 else "zero1")
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=warmup, total_steps=steps)
+    pipe = for_model(cfg, seq_len=seq_len, global_batch=global_batch)
+
+    mesh = recipe = None
+    if mode != "single":
+        if devices is None:
+            if dp * mp > jax.device_count():
+                raise RuntimeError(
+                    f"mesh {dp}x{mp} needs {dp * mp} devices, have "
+                    f"{jax.device_count()} (set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={dp * mp})")
+            devices = jax.devices()[:dp * mp]
+        elif len(devices) != dp * mp:
+            raise ValueError(
+                f"mesh {dp}x{mp} needs {dp * mp} devices, got "
+                f"{len(devices)}")
+        mesh = meshlib.make_mesh((dp, mp), ("data", "model"),
+                                 devices=devices)
+        recipe = ShardingRecipe(data_axes=("data",), model_axis="model")
+    model = build(cfg, recipe=recipe)
+    sync = GradSyncConfig(impl=grad_sync, schedule=schedule,
+                          wire_dtype=wire_dtype,
+                          compress=compress,  # deprecated alias; warns
+                          error_feedback=error_feedback,
+                          use_fused_kernel=use_fused_kernel,
+                          bucket_bytes=bucket_bytes)
+    built = build_step(mode, model, opt_cfg, mesh=mesh, recipe=recipe,
+                       sync=sync)
+    sess = Session(cfg=cfg, mode=mode, mesh=mesh, recipe=recipe, model=model,
+                   opt_cfg=opt_cfg, sync=sync, built=built, pipe=pipe,
+                   world=dp if mode != "single" else 1)
+    if init_state:
+        sess.params = model.init(jax.random.PRNGKey(seed))
+        sess.opt = built.init_opt(sess.params)
+        if mode == "zero1":
+            sess.opt = jax.device_put(sess.opt,
+                                      built.opt_spec(sess.params))
+    return sess
+
+
+def place_batch(sess: Session, batch: dict) -> dict:
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    if sess.mesh is not None:
+        batch = {k: jax.device_put(
+            v, NamedSharding(sess.mesh, sess.built.batch_spec))
+            for k, v in batch.items()}
+    return batch
+
+
+def run_step(sess: Session, step: int) -> dict:
+    """One optimizer step at ``step``'s data-cursor batch; advances
+    ``sess.params``/``sess.opt`` in place and returns the metrics."""
+    batch = place_batch(sess, sess.pipe.batch_at(step))
+    sess.params, sess.opt, metrics = sess.built.step_fn(
+        sess.params, sess.opt, batch)
+    return metrics
+
+
+def opt_flat(sess: Session) -> dict:
+    """Checkpoint form of the optimizer state: gathered host arrays,
+    keyed ``leaf_<i>`` in tree-flatten order (the layout
+    :func:`restore_session` and ``launch.train`` both use)."""
+    return {f"leaf_{i}": np.asarray(l)
+            for i, l in enumerate(jax.tree.leaves(sess.opt))}
+
+
+def restore_session(sess: Session, mgr, step: int | None = None
+                    ) -> tuple[int, dict]:
+    """Restore ``mgr``'s checkpoint into ``sess``, resizing across
+    world-size changes; returns ``(resumed_step, manifest)``.
+
+    The checkpoint's optimizer leaves are GLOBAL (gathered) arrays, so a
+    world mismatch is handled entirely on host: unflatten into the
+    saved-world :class:`Zero1State` (its treedef does not depend on
+    world — only the EF presence, which ``sess.sync`` determines), run
+    ``resize_zero1_state`` to ``sess.world``, then place on the mesh.
+    """
+    s, params, opt_arrs, man = mgr.restore(step, sess.params)
+    sess.params = params
+    n = sum(1 for k in opt_arrs if k.startswith("leaf_"))
+    treedef = jax.tree.structure(sess.opt)
+    if n != treedef.num_leaves:
+        raise ValueError(
+            f"checkpoint has {n} optimizer leaves, session expects "
+            f"{treedef.num_leaves} — sync/arch mismatch?")
+    leaves = [np.asarray(opt_arrs[f"leaf_{i}"]) for i in range(n)]
+    state = jax.tree.unflatten(treedef, leaves)
+    if sess.mode == "zero1":
+        saved_world = int(man.get("world", sess.world))
+        if saved_world != sess.world:
+            state = resize_zero1_state(state, sess.params, sess.world,
+                                       sess.sync)
+        state = jax.device_put(
+            jax.tree.map(jnp.asarray, state),
+            sess.built.opt_spec(sess.params))
+    else:
+        state = jax.tree.map(jnp.asarray, state)
+    sess.opt = state
+    return s, man

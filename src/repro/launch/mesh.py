@@ -29,8 +29,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return compat.make_mesh(shape, axes, devices=devices)
 
 
-def make_mesh(shape, axes) -> Mesh:
-    return compat.make_mesh(tuple(shape), tuple(axes))
+def make_mesh(shape, axes, *, devices=None) -> Mesh:
+    """Mesh over ``devices`` (default: the runtime's).  An explicit
+    subset is how the elastic harness builds a p′ < device_count mesh
+    after a resize — the surviving rank set, not the physical total."""
+    return compat.make_mesh(tuple(shape), tuple(axes), devices=devices)
 
 
 def _axis_size(mesh: Mesh, entry) -> int:

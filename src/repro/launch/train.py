@@ -12,25 +12,12 @@ the single entry point a cluster scheduler invokes on every host.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding
-
-from repro import compat
 from repro.checkpoint import CheckpointManager, config_fingerprint
-from repro.configs import ALIASES, get_config
-from repro.data import for_model
+from repro.configs import ALIASES
 from repro.ft import FailureInjector, Watchdog
-from repro.launch import mesh as meshlib
-from repro.models import ShardingRecipe, build
-from repro.optim.adamw import AdamWConfig
-from repro.optim.zero1 import GradSyncConfig
-from repro.train import build as build_step
+from repro.launch import bootstrap
 
 
 def main(argv=None):
@@ -84,76 +71,40 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.scale_down:
-        cfg = cfg.scaled_down()
-    if args.moe_dispatch is not None:
-        if not cfg.is_moe:
-            raise SystemExit(
-                f"--moe-dispatch given but {args.arch} is not a MoE arch")
-        import dataclasses as _dc
-        cfg = _dc.replace(cfg, moe_dispatch=args.moe_dispatch)
     d, m = (int(x) for x in args.mesh.split("x"))
-    mode = args.mode or ("single" if d * m == 1 else "zero1")
-    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=args.warmup,
-                          total_steps=args.steps)
-    pipe = for_model(cfg, seq_len=args.seq_len,
-                     global_batch=args.global_batch)
+    try:
+        sess = bootstrap.build_session(
+            arch=args.arch, scale_down=args.scale_down, steps=args.steps,
+            seq_len=args.seq_len, global_batch=args.global_batch,
+            dp=d, mp=m, mode=args.mode, grad_sync=args.grad_sync,
+            schedule=args.schedule, wire_dtype=args.wire_dtype,
+            error_feedback=not args.no_error_feedback,
+            use_fused_kernel={"auto": None, "on": True,
+                              "off": False}[args.fused_kernel],
+            bucket_bytes=args.bucket_bytes,
+            moe_dispatch=args.moe_dispatch,
+            lr=args.lr, warmup=args.warmup,
+            compress=args.compress)  # deprecated alias; warns
+    except (RuntimeError, ValueError) as e:
+        raise SystemExit(str(e)) from e
 
-    mesh = None
-    recipe = None
-    if mode != "single":
-        if d * m > jax.device_count():
-            raise SystemExit(
-                f"mesh {args.mesh} needs {d*m} devices, have "
-                f"{jax.device_count()} (set XLA_FLAGS="
-                f"--xla_force_host_platform_device_count={d*m})")
-        mesh = meshlib.make_mesh((d, m), ("data", "model"))
-        recipe = ShardingRecipe(data_axes=("data",), model_axis="model")
-    model = build(cfg, recipe=recipe)
-    sync = GradSyncConfig(impl=args.grad_sync, schedule=args.schedule,
-                          wire_dtype=args.wire_dtype,
-                          compress=args.compress,  # deprecated alias; warns
-                          error_feedback=not args.no_error_feedback,
-                          use_fused_kernel={"auto": None, "on": True,
-                                            "off": False}[args.fused_kernel],
-                          bucket_bytes=args.bucket_bytes)
-    built = build_step(mode, model, opt_cfg, mesh=mesh, recipe=recipe,
-                       sync=sync)
-
-    params = model.init(jax.random.PRNGKey(0))
-    opt = built.init_opt(params)
-    if mode == "zero1":
-        opt = jax.device_put(opt, built.opt_spec(params))
     start = 0
-    opt_leaves, opt_treedef = jax.tree.flatten(opt)
-
     mgr = None
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir)
         if mgr.latest_step() is not None:
-            start, params, opt_arrs, man = mgr.restore(None, params)
-            opt = jax.tree.unflatten(
-                opt_treedef, [jnp.asarray(opt_arrs[f"leaf_{i}"])
-                              for i in range(len(opt_leaves))])
+            start, man = bootstrap.restore_session(sess, mgr)
             print(f"resumed from step {start} "
                   f"(manifest cursor {man.get('data_cursor')})")
 
     injector = FailureInjector(fail_at_step=args.fail_at_step)
     wd = Watchdog()
-    ctx = compat.use_mesh(mesh) if mesh is not None else _null_ctx()
     losses = []
-    with ctx:
+    with sess.use_mesh():
         for step in range(start, args.steps):
             injector.check(step)
             t0 = time.time()
-            batch = pipe.batch_at(step)
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            if mesh is not None:
-                batch = {k: jax.device_put(
-                    v, NamedSharding(mesh, built.batch_spec))
-                    for k, v in batch.items()}
-            params, opt, metrics = built.step_fn(params, opt, batch)
+            metrics = bootstrap.run_step(sess, step)
             dt = time.time() - t0
             status = wd.observe(step, dt)
             losses.append(float(metrics["loss"]))
@@ -163,26 +114,16 @@ def main(argv=None):
                       f"lr {float(metrics['lr']):.2e}  {dt*1e3:.0f}ms "
                       f"[{status}]")
             if mgr and (step + 1) % args.ckpt_every == 0:
-                leaves = jax.tree.leaves(opt)
                 mgr.save_async(
-                    step + 1, params,
-                    {f"leaf_{i}": np.asarray(l)
-                     for i, l in enumerate(leaves)},
+                    step + 1, sess.params, bootstrap.opt_flat(sess),
                     {"data_cursor": step + 1,
-                     "config": config_fingerprint(cfg),
-                     "mesh": args.mesh, "arch": args.arch})
+                     "config": config_fingerprint(sess.cfg),
+                     "mesh": args.mesh, "arch": args.arch,
+                     "world": sess.world})
     if mgr:
         mgr.wait()
     print(f"final loss: {losses[-1]:.4f} (start {losses[0]:.4f})")
     return losses
-
-
-class _null_ctx:
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *a):
-        return False
 
 
 if __name__ == "__main__":

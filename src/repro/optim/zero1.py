@@ -639,6 +639,70 @@ def init_zero1_state(params, world: int, sync: GradSyncConfig) -> Zero1State:
                       step=jnp.zeros((), jnp.int32), ef=ef)
 
 
+def resize_zero1_state(state: Zero1State, params, new_world: int,
+                       sync: GradSyncConfig) -> Zero1State:
+    """Remap a GLOBAL (gathered) :class:`Zero1State` to a new data-parallel
+    world size — the elastic reshard step (ft/elastic.py).
+
+    Inputs are the checkpointed, host-side global views: zero leaves'
+    ``m``/``v`` are ``(ld_pad_old, *rest)`` (leading dim padded to the
+    OLD world), tiny leaves are full replicas.  Only the leaf's true
+    leading dim (from ``params``) and the NEW world matter:
+
+    * ``m``/``v``: drop the old padding rows (``[:ld]`` — padded rows
+      are zero by construction: padded gradient rows are zero, so the
+      moments never leave zero there) and re-pad to the new world's
+      multiple.  A leaf whose :func:`is_zero_leaf` flag flips between
+      worlds is handled by the same slice+pad (tiny leaves store exactly
+      ``ld`` rows).  The round trip p→p′→p is lossless.
+    * ``ef`` (EF-SGD residuals, ``(old_world, *leaf)`` — one full-leaf
+      residual per rank): resized by MASS CONSERVATION — row 0 of the
+      new ``(new_world, *leaf)`` state is the sum over all old rank
+      rows, remaining rows zero.  Semantics: each rank adds its residual
+      into its local gradient before quantization and the reduce-scatter
+      SUMS ranks, so only the total ``sum_r ef_r`` enters the reduced
+      gradient; per-rank attribution carries no information across a
+      resize (the rank set itself changed).  Shrink and grow are the
+      same operation, and the residual mass survives p→p′→p exactly.
+    * ``step``: unchanged.
+    """
+    if new_world < 1:
+        raise ValueError(f"new_world must be >= 1, got {new_world}")
+    use_zero = sync.impl != "allreduce"
+
+    def rs_mv(mv, l):
+        if not l.shape:
+            return jnp.asarray(mv)  # scalar leaf: always replicated
+        ld = l.shape[0]
+        arr = np.asarray(mv)[:ld]
+        if use_zero and is_zero_leaf(l.shape, new_world,
+                                     sync.min_shard_numel):
+            pad = (-ld) % new_world
+            if pad:
+                arr = np.concatenate(
+                    [arr, np.zeros((pad, *arr.shape[1:]), arr.dtype)])
+        return jnp.asarray(arr)
+
+    def rs_ef(e, l):
+        rows = new_world if (use_zero and is_zero_leaf(
+            l.shape, new_world, sync.min_shard_numel)) else 1
+        out = np.zeros((rows, *l.shape), np.float32)
+        out[0] = np.asarray(e, np.float32).sum(axis=0)
+        return jnp.asarray(out)
+
+    new_m = jax.tree.map(rs_mv, state.m, params)
+    new_v = jax.tree.map(rs_mv, state.v, params)
+    new_ef = None
+    if state.ef is not None:
+        if not sync.uses_error_feedback:
+            raise ValueError(
+                "state carries EF residuals but sync does not use error "
+                "feedback — resize would silently drop residual mass")
+        new_ef = jax.tree.map(rs_ef, state.ef, params)
+    return Zero1State(m=new_m, v=new_v, step=jnp.asarray(state.step),
+                      ef=new_ef)
+
+
 def zero1_state_specs(params, world: int, sync: GradSyncConfig,
                       collective_axes):
     """Manual-axis PartitionSpecs for the optimizer state (dim 0 over the

@@ -50,6 +50,33 @@ def flat_param_len(params, world: int) -> int:
     return n + ((-n) % world)
 
 
+def collective_specs(sync: GradSyncConfig, model_cfg=None,
+                     ep_world: int | None = None
+                     ) -> tuple[tuple[str, Any], ...]:
+    """Every :class:`CollectiveSpec` a zero1 step executes, as
+    ``(role, spec)`` pairs.
+
+    Role ``"data"``: the grad-sync reduce-scatter/allgather pair — one
+    plan per data axis.  Role ``"ep"``: the MoE expert-dispatch
+    alltoall(v) pair, present only when ``model_cfg`` uses
+    ``moe_dispatch='ep'`` (``ep_world`` is that axis's size).  This is
+    the ONE enumeration both the ``build_zero1`` pre-flight and the
+    elastic controller's re-plan (``ft.elastic.active_specs``) consume,
+    so a spec added to the step cannot silently skip either verifier.
+    """
+    out: list[tuple[str, Any]] = [("data", sync.rs_spec()),
+                                  ("data", sync.ag_spec())]
+    if model_cfg is not None and getattr(model_cfg, "is_moe", False) \
+            and getattr(model_cfg, "moe_dispatch", "global") == "ep":
+        if ep_world is None:
+            raise ValueError(
+                "moe_dispatch='ep' config needs ep_world to enumerate its "
+                "dispatch specs")
+        from repro.models.dispatch import ep_collective_specs
+        out += [("ep", sp) for sp in ep_collective_specs(model_cfg, ep_world)]
+    return tuple(out)
+
+
 # ---------------------------------------------------------------------------
 # single (no mesh)
 # ---------------------------------------------------------------------------
@@ -88,10 +115,8 @@ def build_zero1(model: ModelApi, mesh: Mesh, recipe: ShardingRecipe,
     from repro.analysis.verify import assert_verified
     from repro.core.plan import plan as _plan
     for ax in collective_axes:
-        assert_verified(_plan(sync.rs_spec(), p=mesh.shape[ax],
-                              axis_name=ax))
-        assert_verified(_plan(sync.ag_spec(), p=mesh.shape[ax],
-                              axis_name=ax))
+        for role, sp in collective_specs(sync):
+            assert_verified(_plan(sp, p=mesh.shape[ax], axis_name=ax))
 
     # Bucketed sync: compute the static bucket partition from the model's
     # abstract param shapes NOW (jax.eval_shape — no allocation) so a bad
@@ -132,10 +157,11 @@ def build_zero1(model: ModelApi, mesh: Mesh, recipe: ShardingRecipe,
             raise ValueError(
                 f"moe_dispatch='ep' exchanges over mesh axis {ep_axis!r}, "
                 f"which is not in mesh {dict(mesh.shape)}")
-        from repro.models.dispatch import ep_collective_specs
-        for sp in ep_collective_specs(model.cfg, mesh.shape[ep_axis]):
-            assert_verified(_plan(sp, p=mesh.shape[ep_axis],
-                                  axis_name=ep_axis))
+        for role, sp in collective_specs(sync, model.cfg,
+                                         mesh.shape[ep_axis]):
+            if role == "ep":
+                assert_verified(_plan(sp, p=mesh.shape[ep_axis],
+                                      axis_name=ep_axis))
 
     # Inside the manual region the data axes are already per-shard: the
     # inner model must only constrain over the AUTO (model) axis.  On JAX

@@ -227,6 +227,22 @@ def test_repo_lint_rules_fire(tmp_path):
         "hlo-counter-outside-budget", "bare-impl-string"}
 
 
+def test_repo_lint_ft_world_via_controller(tmp_path):
+    """Rank/world-size reads inside ft/ must go through
+    ElasticController.world — runtime device counts are stale
+    mid-resize.  The same read OUTSIDE ft/ is fine."""
+    from repro.analysis import repo_lint
+    bad = ("import jax\n"
+           "p = jax.device_count()\n"
+           "q = jax.local_device_count()\n")
+    _write(tmp_path, "src/repro/ft/sneaky.py", bad)
+    _write(tmp_path, "src/repro/launch/fine.py", bad)
+    findings = repo_lint.lint_repo(tmp_path)
+    hits = [f for f in findings if f.rule == "ft-world-via-controller"]
+    assert len(hits) == 2
+    assert all(f.where.startswith("src/repro/ft/sneaky.py") for f in hits)
+
+
 def test_repo_lint_ratchet_waives_and_shrinks(tmp_path):
     from repro.analysis import repo_lint
     _write(tmp_path, "src/bad.py", "import jax.experimental.pallas\n")

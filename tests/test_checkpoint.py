@@ -1,5 +1,6 @@
 """Checkpoint manager: atomic save/restore, async double-buffering,
-retention, elastic resharding, and exact-resume training."""
+retention, elastic resharding, crash-leftover sweeping, corruption
+fallback, transient-IO fault injection, and exact-resume training."""
 import os
 
 import jax
@@ -7,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, reshard_flat
+from repro.checkpoint import CheckpointError, CheckpointManager, reshard_flat
+from repro.ft import CheckpointIOError
 from repro.configs import get_config
 from repro.data import for_model
 from repro.models import build
@@ -64,6 +66,79 @@ def test_elastic_reshard_flat():
     odd = np.arange(7.0)
     shards = [reshard_flat(odd, 4, r) for r in range(4)]
     np.testing.assert_array_equal(np.concatenate(shards)[:7], odd)
+
+
+def test_sweep_stale_crash_leftovers(setup):
+    """A crash mid-write leaves step_<N>.tmp (or a manifest-less final
+    dir from a partial external copy); a fresh manager sweeps both so
+    retention and restore never trip over them."""
+    cfg, model, params, d = setup
+    CheckpointManager(d).save(3, params, {})
+    os.makedirs(os.path.join(d, "step_5.tmp"))
+    os.makedirs(os.path.join(d, "step_7"))  # no manifest.json inside
+    mgr = CheckpointManager(d)
+    assert mgr.completed_steps() == [3]
+    assert not os.path.exists(os.path.join(d, "step_5.tmp"))
+    assert not os.path.exists(os.path.join(d, "step_7"))
+
+
+def test_background_save_error_surfaces_on_next_call(setup):
+    """An async write failure is never swallowed: the NEXT save/wait
+    raises CheckpointError carrying the FAILED step."""
+    cfg, model, params, d = setup
+    boom = [True]
+
+    def hook(step):
+        if boom[0]:
+            boom[0] = False
+            raise CheckpointIOError(f"injected at step {step}")
+
+    mgr = CheckpointManager(d, io_hook=hook)
+    mgr.save_async(4, params, {})
+    with pytest.raises(CheckpointError) as ei:
+        mgr.wait()
+    assert ei.value.step == 4
+    mgr.save(5, params, {})  # error consumed; manager still usable
+    assert mgr.latest_step() == 5
+
+
+def test_restore_falls_back_on_corrupt_newest(setup):
+    """restore(None) skips a truncated newest checkpoint (with a
+    warning) and restores the previous completed one; an explicit step
+    never falls back — the caller asked for that exact checkpoint."""
+    cfg, model, params, d = setup
+    mgr = CheckpointManager(d)
+    mgr.save(1, params, {"tag": np.int32(1)}, {"data_cursor": 1})
+    mgr.save(2, params, {"tag": np.int32(2)}, {"data_cursor": 2})
+    with open(os.path.join(d, "step_2", "arrays.npz"), "wb") as f:
+        f.write(b"not a zip file")  # truncation/corruption stand-in
+    with pytest.warns(RuntimeWarning, match="step_2 is unreadable"):
+        step, _, opt, man = mgr.restore(None, params)
+    assert step == 1 and int(opt["tag"]) == 1 and man["data_cursor"] == 1
+    with pytest.raises(Exception):
+        mgr.restore(2, params)  # explicit step: surface the corruption
+
+
+def test_restore_transient_io_fault_propagates_not_falls_back(setup):
+    """A transient io_hook failure during restore is RETRYABLE (the
+    elastic controller's backoff owns it) — it must propagate, not be
+    mistaken for corruption and silently fall back to an older step."""
+    cfg, model, params, d = setup
+    mgr = CheckpointManager(d)
+    mgr.save(1, params, {})
+    mgr.save(2, params, {})
+    flaky = [True]
+
+    def hook(step):
+        if flaky[0]:
+            flaky[0] = False
+            raise CheckpointIOError("flaky mount")
+
+    mgr.io_hook = hook
+    with pytest.raises(CheckpointIOError):
+        mgr.restore(None, params)
+    step, _, _, _ = mgr.restore(None, params)  # the retry succeeds
+    assert step == 2  # ...at the NEWEST step, not a fallback
 
 
 def test_exact_resume_trajectory(setup, tmp_path):

@@ -1,18 +1,37 @@
-"""Fault-tolerance: watchdog straggler policy on synthetic traces + the
+"""Fault-tolerance: watchdog straggler policy on synthetic traces, the
 failure-injection restart drill (training survives a mid-run crash and
-reproduces the uninterrupted loss trajectory)."""
+reproduces the uninterrupted loss trajectory), rank-level failure plans,
+the elastic controller's drain -> re-plan -> reshard -> resume state
+machine (fake clock: retry/backoff, deadline, restart fallback), and the
+ZeRO-1 reshard round-trip semantics (m/v lossless at any p -> p' -> p,
+EF residual mass conservation).
+
+The full elastic drill on fake devices runs in a subprocess
+(``tests/_elastic_checks.py``) so this process keeps seeing one device.
+"""
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointError, CheckpointManager
 from repro.configs import get_config
 from repro.data import for_model
-from repro.ft import FailureInjector, SimulatedFailure, Watchdog, WatchdogConfig
+from repro.ft import (CheckpointIOError, ElasticAbort, ElasticConfig,
+                      ElasticController, FailureInjector, FailurePlan,
+                      FaultEvent, RankFailure, SimulatedFailure, Watchdog,
+                      WatchdogConfig, active_specs)
 from repro.models import build
 from repro.optim.adamw import AdamWConfig
+from repro.optim.zero1 import (GradSyncConfig, Zero1State,
+                               resize_zero1_state)
 from repro.train import build as build_step
+
+HERE = os.path.dirname(os.path.abspath(__file__))
 
 
 def test_watchdog_flags_stragglers():
@@ -84,6 +103,341 @@ def test_restart_drill(tmp_path):
     tail = trainer(6)
     assert len(tail) == 2  # steps 4, 5
     np.testing.assert_allclose(tail, ref[4:], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Watchdog: baseline-poisoning regressions
+# ---------------------------------------------------------------------------
+
+def test_watchdog_rebaselines_after_action():
+    """A legitimate regime shift performed BY the straggler action (e.g.
+    a schedule switch) must not be flagged forever: after on_straggler
+    fires the watchdog re-learns the new step-time regime."""
+    actions = []
+    wd = Watchdog(cfg=WatchdogConfig(warmup=3, patience=2),
+                  on_straggler=lambda s, dt: actions.append(s))
+    statuses = []
+    for step in range(40):
+        dt = 1.0 + 0.001 * ((step * 7919) % 13 - 6)  # healthy jitter
+        if step >= 15:
+            dt = 2.5 + 0.001 * ((step * 7919) % 13 - 6)  # new regime
+        statuses.append(wd.observe(step, dt))
+    assert actions, "regime shift should have tripped the action once"
+    assert wd.rebaselines, "action must re-baseline the statistics"
+    # after the re-learned warmup, the 2.5s regime is the new healthy
+    post = statuses[wd.rebaselines[0] + wd.cfg.warmup + 2:]
+    assert post and all(s == "OK" for s in post), post
+
+
+def test_watchdog_sigma_floor_survives_constant_warmup():
+    """A constant-duration warmup leaves EWVAR ~ 0; the min_rel_sigma
+    floor must keep the first micro-jitter step from z-scoring to inf."""
+    wd = Watchdog(cfg=WatchdogConfig(warmup=5))
+    for i in range(5):
+        wd.observe(i, 1.0)  # exactly constant
+    assert wd.observe(5, 1.02) == "OK"  # 2% jitter is healthy
+
+
+# ---------------------------------------------------------------------------
+# FailurePlan: rank-level fault schedules
+# ---------------------------------------------------------------------------
+
+def test_failure_plan_rank_loss_fires_once():
+    fp = FailurePlan(events=(FaultEvent(step=3, kind="rank_loss", rank=2),))
+    fp.check(2)  # nothing scheduled here
+    with pytest.raises(RankFailure) as ei:
+        fp.check(3)
+    assert ei.value.rank == 2 and ei.value.step == 3
+    fp.check(3)  # a dead rank stays dead: recovery re-visiting step 3
+    #              must not re-kill it
+    assert len(fp.fired) == 1
+
+
+def test_failure_plan_slow_link_window():
+    fp = FailurePlan(events=(
+        FaultEvent(step=4, kind="slow_link", delay_s=0.5, duration=3),
+        FaultEvent(step=5, kind="slow_link", delay_s=0.25, duration=1)))
+    assert fp.slow_delay(3) == 0.0
+    assert fp.slow_delay(4) == 0.5
+    assert fp.slow_delay(5) == 0.75  # overlapping windows sum
+    assert fp.slow_delay(6) == 0.5
+    assert fp.slow_delay(7) == 0.0
+
+
+def test_failure_plan_io_hook_is_transient():
+    fp = FailurePlan(events=(
+        FaultEvent(step=2, kind="ckpt_io", duration=2),))
+    fp.io_hook(1)  # not armed yet
+    for _ in range(2):  # exactly `duration` IO ops fail...
+        with pytest.raises(CheckpointIOError):
+            fp.io_hook(3)
+    fp.io_hook(3)  # ...then IO heals (transient by construction)
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(step=1, kind="meteor_strike")
+    with pytest.raises(ValueError):
+        FaultEvent(step=-1)
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="slow_link", delay_s=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# ElasticController: the recovery state machine with a fake clock
+# ---------------------------------------------------------------------------
+
+class FakeTime:
+    """Injectable clock/sleep: sleep() advances the clock and records
+    durations, so backoff schedules are asserted without real waiting."""
+
+    def __init__(self):
+        self.now = 0.0
+        self.sleeps = []
+
+    def clock(self):
+        return self.now
+
+    def sleep(self, s):
+        self.sleeps.append(s)
+        self.now += s
+
+
+def _controller(world=4, **cfg_kw):
+    ft = FakeTime()
+    cfg = ElasticConfig(**cfg_kw)
+    return ElasticController(world, cfg, clock=ft.clock,
+                             sleep=ft.sleep), ft
+
+
+def test_elastic_config_validation():
+    with pytest.raises(ValueError):
+        ElasticConfig(min_world=0)
+    with pytest.raises(ValueError):
+        ElasticConfig(min_world=4, max_world=2)
+    with pytest.raises(ValueError):
+        ElasticConfig(recovery_deadline_s=0.0)
+
+
+def test_propose_world_dedup_clamp_abort():
+    ctl, _ = _controller(world=8, min_world=4, max_world=6)
+    assert ctl.propose_world([3]) == 6  # 7 survivors clamped to max_world
+    assert ctl.propose_world([1, 2, 1, 2]) == 6  # duplicates counted once
+    assert ctl.propose_world([0, 1, 2, 3]) == 4
+    with pytest.raises(ElasticAbort):
+        ctl.propose_world([0, 1, 2, 3, 4])  # 3 survivors < min_world
+
+
+def test_recover_retries_transient_io_with_backoff():
+    ctl, ft = _controller(world=4, io_retries=3, io_backoff_s=0.1)
+    attempts = []
+
+    def drain(step):
+        attempts.append(step)
+        if len(attempts) < 3:
+            raise CheckpointIOError("flaky mount")
+        return step
+
+    rep, payload = ctl.recover(6, 3, [], drain=drain,
+                               reshard=lambda w: f"resharded@{w}")
+    assert payload == "resharded@3" and ctl.world == 3
+    assert rep.drained == 6 and rep.io_failures == 2
+    assert not rep.restarted
+    assert ft.sleeps == [0.1, 0.2]  # exponential backoff, per attempt
+    assert [n for n, _ in rep.phases] == list(
+        ("drain", "replan", "reshard", "resume"))
+
+
+def test_recover_exhausted_io_falls_back_to_restart():
+    ctl, _ = _controller(world=4, io_retries=1, io_backoff_s=0.01)
+
+    def bad_reshard(w):
+        raise CheckpointIOError("disk on fire")
+
+    rep, payload = ctl.recover(3, 2, [], drain=lambda s: s,
+                               reshard=bad_reshard,
+                               restart=lambda: "clean-restart")
+    assert rep.restarted and payload == "clean-restart"
+    assert rep.io_failures == 2  # 1 + io_retries attempts
+    assert ctl.world == 2  # the restart relaunches at the new world
+
+
+def test_recover_deadline_triggers_restart():
+    ctl, ft = _controller(world=4, recovery_deadline_s=5.0)
+
+    def slow_drain(step):
+        ft.now += 10.0  # blows the whole-recovery deadline
+        return step
+
+    rep, payload = ctl.recover(3, 3, [], drain=slow_drain,
+                               reshard=lambda w: "never reached",
+                               restart=lambda: "restarted")
+    assert rep.restarted and payload == "restarted"
+
+
+def test_recover_aborts_without_restart_hook():
+    ctl, _ = _controller(world=4, io_retries=0)
+    with pytest.raises(ElasticAbort):
+        ctl.recover(3, 3, [], drain=lambda s: (_ for _ in ()).throw(
+            CheckpointIOError("gone")), reshard=lambda w: w)
+    assert ctl.world == 4  # failed recovery adopts nothing
+    assert ctl.reports and ctl.reports[-1].io_failures == 1
+
+
+def test_recover_rejects_out_of_bounds_world():
+    ctl, _ = _controller(world=4, min_world=2, max_world=6)
+    for bad in (1, 7):
+        with pytest.raises(ElasticAbort):
+            # caller error, NEVER the restart-fallback path
+            ctl.recover(0, bad, [], drain=lambda s: s,
+                        reshard=lambda w: w, restart=lambda: "no")
+    assert not ctl.reports or not any(r.restarted for r in ctl.reports)
+
+
+def test_recover_retries_background_checkpoint_error():
+    """A failed async save surfaces as CheckpointError on the drain's
+    mgr.wait() — the retry machinery must cover it like an OSError."""
+    ctl, _ = _controller(world=2, io_retries=2, io_backoff_s=0.0)
+    calls = []
+
+    def drain(step):
+        calls.append(step)
+        if len(calls) == 1:
+            raise CheckpointError(step, OSError("bg write died"))
+        return step
+
+    rep, _ = ctl.recover(4, 1, [], drain=drain, reshard=lambda w: w)
+    assert rep.io_failures == 1 and rep.drained == 4
+
+
+def test_replan_verifies_and_evicts_old_world_plans():
+    from repro.core.plan import plan
+    sync = GradSyncConfig()
+    specs = active_specs(sync)
+    assert specs, "default sync must expose data-axis specs"
+    for sp in specs:  # warm the cache at the old world
+        plan(sp, p=4, axis_name="data")
+    ctl, _ = _controller(world=4)
+    rep, _ = ctl.recover(5, 3, specs, drain=lambda s: s,
+                         reshard=lambda w: w)
+    assert len(rep.replans) == len(specs)
+    assert all(r.verified and r.old_p == 4 and r.new_p == 3
+               for r in rep.replans)
+    # rs_spec == ag_spec for the default sync -> one shared cache entry
+    assert rep.evicted == len(set(specs))
+    assert rep.replan_us >= 0.0
+
+
+def test_replan_noop_resize_does_not_evict_fresh_plans():
+    ctl, _ = _controller(world=4)
+    sync = GradSyncConfig()
+    rep, _ = ctl.recover(5, 4, active_specs(sync), drain=lambda s: s,
+                         reshard=lambda w: w)
+    assert rep.evicted == 0  # a no-op "resize" keeps its own plans
+
+
+def test_active_specs_excludes_model_parallel_roles():
+    sync = GradSyncConfig()
+    specs = active_specs(sync)
+    from repro.train.steps import collective_specs
+    assert set(specs) == {sp for role, sp in collective_specs(sync)
+                          if role == "data"}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 reshard round-trip semantics (the reshard phase's contract)
+# ---------------------------------------------------------------------------
+
+def _global_state(params, world, sync, with_ef):
+    """Synthetic GLOBAL (gathered) Zero1State at `world`: zero leaves
+    padded to the world multiple with ZERO pad rows (as checkpoints
+    store them), EF residuals one full-leaf row per rank."""
+    from repro.optim.zero1 import is_zero_leaf
+    rng = np.random.default_rng(0)
+
+    def mv(l):
+        if not l.shape:
+            return jnp.asarray(rng.normal(size=()).astype(np.float32))
+        arr = rng.normal(size=l.shape).astype(np.float32)
+        if is_zero_leaf(l.shape, world, sync.min_shard_numel):
+            pad = (-l.shape[0]) % world
+            if pad:
+                arr = np.concatenate(
+                    [arr, np.zeros((pad, *arr.shape[1:]), arr.dtype)])
+        return jnp.asarray(arr)
+
+    ef = None
+    if with_ef:
+        ef = jax.tree.map(lambda l: jnp.asarray(rng.normal(
+            size=(world, *l.shape)).astype(np.float32)), params)
+    return Zero1State(m=jax.tree.map(mv, params),
+                      v=jax.tree.map(mv, params),
+                      step=jnp.asarray(7, jnp.int32), ef=ef)
+
+
+@pytest.mark.parametrize("p,p2", [(4, 3), (4, 2), (2, 5), (3, 4), (5, 3)])
+def test_resize_zero1_mv_roundtrip_lossless(p, p2):
+    """m/v survive p -> p' -> p bitwise — including GROW (p' > p) and
+    odd worlds on both sides (the any-p claim applied to state)."""
+    sync = GradSyncConfig()
+    params = {"big": jnp.zeros((10, 128)), "tiny": jnp.zeros((4,)),
+              "scalar": jnp.zeros(())}
+    s0 = _global_state(params, p, sync, with_ef=False)
+    s1 = resize_zero1_state(s0, params, p2, sync)
+    s2 = resize_zero1_state(s1, params, p, sync)
+    for a, b in zip(jax.tree.leaves((s0.m, s0.v)),
+                    jax.tree.leaves((s2.m, s2.v))):
+        assert jnp.array_equal(a, b), (a.shape, b.shape)
+    assert int(s2.step) == 7
+    # shapes at p' are padded to the NEW world's multiple
+    assert s1.m["big"].shape[0] % p2 == 0
+
+
+@pytest.mark.parametrize("p,p2", [(4, 3), (2, 5)])
+def test_resize_zero1_ef_mass_conservation(p, p2):
+    """EF residuals resize by MASS CONSERVATION: only sum_r ef_r enters
+    the reduced gradient, so the total is folded into row 0 and must
+    survive p -> p' -> p exactly; per-rank attribution is meaningless
+    across a resize (the rank set itself changed)."""
+    sync = GradSyncConfig(wire_dtype="int8")
+    params = {"big": jnp.zeros((10, 128))}
+    s0 = _global_state(params, p, sync, with_ef=True)
+    mass0 = np.asarray(s0.ef["big"]).sum(axis=0)
+    s1 = resize_zero1_state(s0, params, p2, sync)
+    assert s1.ef["big"].shape[0] == p2
+    np.testing.assert_array_equal(np.asarray(s1.ef["big"]).sum(axis=0),
+                                  mass0)
+    np.testing.assert_array_equal(np.asarray(s1.ef["big"])[1:], 0.0)
+    s2 = resize_zero1_state(s1, params, p, sync)
+    np.testing.assert_array_equal(np.asarray(s2.ef["big"]).sum(axis=0),
+                                  mass0)
+
+
+def test_resize_zero1_refuses_to_drop_ef_mass():
+    """Resizing EF-carrying state under a sync with no error feedback
+    would silently discard residual mass — it must raise instead."""
+    sync_ef = GradSyncConfig(wire_dtype="int8")
+    params = {"big": jnp.zeros((10, 128))}
+    s0 = _global_state(params, 4, sync_ef, with_ef=True)
+    with pytest.raises(ValueError):
+        resize_zero1_state(s0, params, 2, GradSyncConfig())
+
+
+# ---------------------------------------------------------------------------
+# The full elastic drill (subprocess: needs 8 fake devices)
+# ---------------------------------------------------------------------------
+
+def test_elastic_drill_end_to_end():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_elastic_checks.py")],
+        capture_output=True, text=True, timeout=1200, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"elastic checks failed:\n--- stdout ---\n{proc.stdout}\n"
+            f"--- stderr ---\n{proc.stderr}")
+    assert "ALL ELASTIC CHECKS PASSED" in proc.stdout
 
 
 def test_data_pipeline_seekable_and_deterministic():
