@@ -1,0 +1,139 @@
+"""Subprocess worker for bench_serve: continuous-batching serving gate
+on 8 fake CPU devices.
+
+Rows emitted:
+
+  throughput        steady-state scheduler tokens/s over a staggered
+                    request mix (second run; the first run eats compile);
+  latency           p50 / p99 per-decode-boundary latency of the same
+                    run (a boundary = evict + admit (with any B=1
+                    prefills) + one batched paged decode);
+  parity            bitwise flag: every request's scheduler token stream
+                    == the one-shot ``ServeEngine.generate`` stream for
+                    that request alone (greedy; the continuous-batching
+                    invariant);
+  broadcast_rounds_pP
+                    HLO collective-permute count of the
+                    ``kind="broadcast"`` plan under shard_map at p ∈
+                    {5, 8} vs ceil(log2 p) — cp_delta must be 0 (Träff
+                    arXiv:2407.18004's round-optimal all-broadcast);
+  weight_fanout     multi-replica weight push over the broadcast plan:
+                    3 replicas, all leaves reconstructed bitwise
+                    (``ReplicaSet.push_weights`` asserts per-leaf).
+
+Emits CSV rows on stdout; the gate logic lives in benchmarks/ci_gate.py.
+"""
+import os
+import sys
+import time
+
+import re  # noqa: E402 — strip inherited count: XLA keeps the LAST flag
+_inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                    os.environ.get("XLA_FLAGS", ""))
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + _inherited)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import compat  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.core import collectives as C  # noqa: E402
+from repro.core import conformance as conf  # noqa: E402
+from repro.core.schedule import ceil_log2  # noqa: E402
+from repro.core.spec import CollectiveSpec  # noqa: E402
+from repro.models import build  # noqa: E402
+from repro.serve import ReplicaSet, Scheduler, ServeEngine  # noqa: E402
+
+MAX_LEN = 24
+MAX_BATCH = 3
+KV_BLOCK = 4
+# (prompt_len, max_new) mix: more requests than slots, uneven lengths ->
+# staggered admissions, early evictions, block reuse mid-run.
+REQUESTS = [(8, 4), (5, 6), (11, 3), (7, 5), (9, 4), (6, 6)]
+
+
+def emit(name, us, derived=""):
+    print(f"serve/{name},{us:.3f},{derived}")
+
+
+def drive(sched, prompts):
+    """Submit the mix, drive to idle, return per-boundary latencies."""
+    rids = [sched.submit(tok, mn) for tok, (_, mn) in zip(prompts, REQUESTS)]
+    lat = []
+    while not sched.idle:
+        t0 = time.perf_counter()
+        sched.step()
+        lat.append(time.perf_counter() - t0)
+    return rids, sched.run(), np.asarray(lat)
+
+
+def bench_scheduler():
+    cfg = get_config("internlm2-1.8b").scaled_down(n_layers=2, vocab_size=64)
+    model = build(cfg, recipe=None, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model=model, params=params, max_len=MAX_LEN)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 64, (pl,)).astype(np.int32)
+               for pl, _ in REQUESTS]
+
+    refs = [engine.generate(tok[None], mn)[0]
+            for tok, (_, mn) in zip(prompts, REQUESTS)]
+
+    drive(Scheduler(engine, MAX_BATCH, KV_BLOCK), prompts)  # compile pass
+    sched = Scheduler(engine, MAX_BATCH, KV_BLOCK)
+    t0 = time.perf_counter()
+    rids, done, lat = drive(sched, prompts)
+    total_s = time.perf_counter() - t0
+
+    n_tok = sum(len(done[r]) for r in rids)
+    emit("throughput", total_s * 1e6,
+         f"tokens_per_s={n_tok / total_s:.1f};tokens={n_tok};"
+         f"requests={len(rids)};max_batch={MAX_BATCH};"
+         f"decode_steps={sched.n_decode_steps};"
+         f"prefills={sched.n_prefills};kv_block={KV_BLOCK}")
+    emit("latency", float(np.mean(lat)) * 1e6,
+         f"p50_ms={np.percentile(lat, 50) * 1e3:.3f};"
+         f"p99_ms={np.percentile(lat, 99) * 1e3:.3f};"
+         f"boundaries={lat.size}")
+    bitwise = all(np.array_equal(done[r], ref)
+                  for r, ref in zip(rids, refs))
+    emit("parity", 0.0,
+         f"bitwise={bitwise};requests={len(rids)};"
+         f"vs=one_shot_generate")
+    return model, params
+
+
+def bench_broadcast_rounds():
+    spec = CollectiveSpec(kind="broadcast", schedule="power2")
+    for p in (5, 8):
+        mesh = compat.make_mesh((p,), ("x",), devices=jax.devices()[:p])
+        fn = lambda v: C.broadcast(v, "x", spec=spec)  # noqa: E731
+        t0 = time.perf_counter()
+        cp = conf.count_collective_permutes(mesh, p, fn)
+        us = (time.perf_counter() - t0) * 1e6
+        theory = ceil_log2(p)
+        emit(f"broadcast_rounds_p{p}", us,
+             f"cp={cp};theory={theory};cp_delta={cp - theory};"
+             f"schedule=power2")
+
+
+def bench_weight_fanout(model, params):
+    rs = ReplicaSet(model, max_len=MAX_LEN, replicas=3)
+    t0 = time.perf_counter()
+    stats = rs.push_weights(params)   # asserts per-leaf bitwise equality
+    us = (time.perf_counter() - t0) * 1e6
+    emit("weight_fanout", us,
+         f"bitwise=True;replicas=3;rounds={stats['rounds']};"
+         f"leaves={stats['n_leaves']};bytes={stats['bytes']}")
+
+
+def main():
+    model, params = bench_scheduler()
+    bench_broadcast_rounds()
+    bench_weight_fanout(model, params)
+
+
+if __name__ == "__main__":
+    main()

@@ -42,7 +42,13 @@ budget violation, which this gate surfaces as failures), parses the CSV into ``B
   ``assert_verified`` within the per-spec latency budget (``within_budget``); and the
   post-resize loss trajectory matches an uninterrupted p' run restored from the same
   checkpoint — f32 bitwise (generic ``bitwise`` check), int8+EF inside the documented 0.05
-  envelope (``within_tol``).
+  envelope (``within_tol``);
+* serving rows (``serve/``): the continuous-batching scheduler reports steady-state
+  throughput (tokens/s) and p50/p99 per-boundary latency; every request's scheduler token
+  stream is bitwise-identical to one-shot ``generate`` (the ``parity`` row's generic
+  ``bitwise`` flag); the ``kind="broadcast"`` weight fan-out lowers to exactly ceil(log2 p)
+  collective-permutes (``cp_delta == 0``) and the 3-replica weight push reconstructs every
+  leaf bit-exactly.
 
 Usage:  PYTHONPATH=src python -m benchmarks.ci_gate [--out BENCH_ci.json]
 Exit code 0 iff every check passes.
@@ -74,7 +80,7 @@ A2A_RATIO_MAX = 1.5
 # work and the paired-rep median sits at ~1.0, so 1.05 catches a real
 # serialization regression (a lost overlap seam lands well above it).
 OVERLAP_RATIO_MAX = 1.05
-ONLY = "rounds,kernels,wire,plans,a2a,overlap,elastic,analysis"
+ONLY = "rounds,kernels,wire,plans,a2a,overlap,elastic,serve,analysis"
 
 
 def parse_csv(text: str) -> list[dict]:
@@ -199,6 +205,25 @@ def check(rows: list[dict]) -> list[str]:
                     f"{f.get('max_err_int8')} outside the documented "
                     f"envelope {f.get('tol')}"
                 )
+        if row["name"].startswith("serve/"):
+            f = row["fields"]
+            if "cp_delta" in f and f["cp_delta"] != "0":
+                failures.append(
+                    f"{row['name']}: {f.get('cp')} collective-permutes, "
+                    f"want {f.get('theory')} (broadcast weight fan-out "
+                    f"must keep one ppermute per round, ceil(log2 p) "
+                    f"total)"
+                )
+            if "tokens_per_s" in f and float(f["tokens_per_s"]) <= 0:
+                failures.append(
+                    f"{row['name']}: non-positive serving throughput "
+                    f"({f.get('tokens_per_s')} tokens/s)"
+                )
+            if "p99_ms" in f and float(f["p99_ms"]) <= 0:
+                failures.append(
+                    f"{row['name']}: non-positive p99 decode-boundary "
+                    f"latency"
+                )
         if row["name"].startswith("analysis/"):
             f = row["fields"]
             if f.get("findings", "0") != "0":
@@ -258,6 +283,13 @@ def check(rows: list[dict]) -> list[str]:
             failures.append(f"no {req} elastic-drill row produced")
     if not any(n.startswith("elastic/replan_") for n in names):
         failures.append("no elastic/replan_* per-spec re-plan latency rows "
+                        "produced")
+    for req in ("serve/throughput", "serve/latency", "serve/parity",
+                "serve/weight_fanout"):
+        if req not in names:
+            failures.append(f"no {req} serving row produced")
+    if not any(n.startswith("serve/broadcast_rounds_") for n in names):
+        failures.append("no serve/broadcast_rounds_* round-count rows "
                         "produced")
     for pass_name in ("verify", "jaxpr", "hlo", "repo"):
         if f"analysis/{pass_name}" not in names:

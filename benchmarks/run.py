@@ -30,6 +30,11 @@ and the Corollary-2 schedule family.  Benchmarks:
                loss + transient ckpt-IO faults) and grow (2->4) resume
                within one step boundary; re-plan+verify latency per spec;
                post-resize trajectory vs uninterrupted p' reference
+  serve        continuous-batching serving: steady-state tokens/s and
+               p50/p99 per-boundary latency over a staggered request
+               mix, bitwise scheduler-vs-one-shot parity, and the
+               broadcast plan's HLO collective-permutes == ceil(log2 p)
+               weight fan-out gate
   roofline     re-emit the dry-run roofline table (reads reports/dryrun)
 
 Output: ``name,us_per_call,derived`` CSV rows.
@@ -186,6 +191,24 @@ def bench_elastic():
                           text=True, timeout=1800, env=env)
     if proc.returncode != 0:
         emit("elastic/ERROR", 0.0, proc.stderr[-200:].replace("\n", " "))
+        return
+    print(proc.stdout, end="")
+
+
+# ---------------------------------------------------------------------------
+def bench_serve():
+    """Serving gate: continuous-batching throughput + per-boundary p50/
+    p99 latency, bitwise scheduler-vs-one-shot parity, and the
+    ``kind="broadcast"`` weight-fan-out round counts (HLO collective-
+    permutes == ceil(log2 p)).  Subprocess (needs fake devices)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    worker = os.path.join(here, "_serve_worker.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, worker], capture_output=True,
+                          text=True, timeout=1800, env=env)
+    if proc.returncode != 0:
+        emit("serve/ERROR", 0.0, proc.stderr[-200:].replace("\n", " "))
         return
     print(proc.stdout, end="")
 
@@ -409,6 +432,7 @@ BENCHES = {
     "a2a": bench_a2a,
     "overlap": bench_overlap,
     "elastic": bench_elastic,
+    "serve": bench_serve,
     "analysis": bench_analysis,
     "roofline": bench_roofline,
 }

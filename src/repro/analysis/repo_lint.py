@@ -25,6 +25,11 @@ Each rule encodes an invariant the codebase converged on the hard way:
   docstring (these two packages are the library surface the docs tree
   maps to the paper; an undocumented public callable there is a docs
   regression, ratcheted shrink-only like everything else).
+* ``serve-collectives-via-plan`` — modules under ``src/repro/serve/``
+  never call ``lax.ppermute``-family collectives directly: serving
+  communicates only through the ``plan()``/``as_spec`` dispatchers, so
+  every collective it issues carries the verified round structure the
+  serving CI gates assert against.
 
 Adding a rule: write a ``_rule_*`` visitor hook below, give it a stable
 kebab-case id, and (if the repo already violates it) run
@@ -172,7 +177,8 @@ def _rule_hlo_counter(tree, rel: str) -> list[Finding]:
 
 
 _WRAPPER_PREFIXES = ("circulant_", "hierarchical_")
-_DISPATCHERS = {"reduce_scatter", "allreduce", "allgather", "alltoall"}
+_DISPATCHERS = {"reduce_scatter", "allreduce", "allgather", "alltoall",
+                "broadcast"}
 _FUNNEL_CALLS = {"plan", "_dispatch", "as_spec"}
 
 
@@ -250,9 +256,35 @@ def _rule_ft_world(tree, rel: str) -> list[Finding]:
     return out
 
 
+_SERVE_DIR = "src/repro/serve/"
+_RAW_COLLECTIVES = ("ppermute", "psum", "psum_scatter", "pmax", "pmin",
+                    "all_gather", "all_to_all")
+
+
+def _rule_serve_collectives(tree, rel: str) -> list[Finding]:
+    """Serving modules get collectives only via ``plan()`` / ``as_spec``
+    dispatchers: a raw ``lax.ppermute``-family call inside
+    ``repro.serve`` bypasses the verified plan layer (round counts,
+    exactly-once delivery) that the serving gates assert against."""
+    if not rel.startswith(_SERVE_DIR):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        if name in _RAW_COLLECTIVES:
+            out.append(_finding(
+                "serve-collectives-via-plan", rel, node.lineno,
+                f"raw {name}() inside serve/ — serving communicates "
+                f"only through plan()/as_spec dispatchers (the "
+                f"verified collective layer)"))
+    return out
+
+
 _RULES = (_rule_jax_experimental, _rule_pallas_call, _rule_bare_impl,
           _rule_hlo_counter, _rule_spec_funnel, _rule_public_docstring,
-          _rule_ft_world)
+          _rule_ft_world, _rule_serve_collectives)
 
 
 # ---------------------------------------------------------------------------

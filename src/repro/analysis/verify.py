@@ -21,6 +21,10 @@ with no devices:
 * **Alltoall(v)** — the A2A round tables route every (src, dst) entry
   to its destination exactly once along the Bruck hop trajectories,
   with wire widths equal to ``cost_model.alltoallv_round_widths``.
+* **Broadcast** (Träff, arXiv:2407.18004) — a block-level replay of the
+  AG rounds shows every rank receives every block exactly once (no
+  double delivery even at non-power-of-two p, where binomial trees
+  fail) and ends holding all p blocks, in the schedule's round count.
 
 All checks run against the plan's OWN fields (not regenerated ones), so
 a corrupted plan — dropped skip, swapped table rows, inflated width,
@@ -217,6 +221,66 @@ def _check_delivery(pl: CollectivePlan, where: str) -> list[Finding]:
             "incomplete-reduction", where,
             f"final block holds {len(shape[0])}/{p} contributions; "
             f"missing source offsets {missing}"))
+    return out
+
+
+def _check_broadcast(pl: CollectivePlan, where: str) -> list[Finding]:
+    """Block-level replay of the AG rounds in absolute coordinates.
+
+    ``have[r]`` = absolute blocks held by rank r (initially its own).
+    Round k with skip s ships rank r's rotated prefix to (r - s) mod p;
+    rotated index i on rank r is absolute block (r + i) mod p.  Every
+    send must be held, every delivery must be NEW (the broadcast paper's
+    exactly-once invariant), and all ranks must end with all p blocks.
+    """
+    p = pl.p
+    out: list[Finding] = []
+    if len(pl.ag_rounds) != len(pl.ag_send_blocks) or \
+            len(pl.ag_rounds) != len(pl.ag_recv_blocks):
+        out.append(_finding(
+            "round-structure", where,
+            f"inconsistent ag structure: {len(pl.ag_rounds)} rounds, "
+            f"{len(pl.ag_send_blocks)} send windows, "
+            f"{len(pl.ag_recv_blocks)} recv windows"))
+        return out
+    have = [{r} for r in range(p)]
+    for k, (rp, win, recv) in enumerate(zip(pl.ag_rounds, pl.ag_send_blocks,
+                                            pl.ag_recv_blocks)):
+        s = rp.skip
+        if not (0 < s < p):
+            return out  # already flagged by self-send
+        if tuple(recv) != tuple(i + s for i in win):
+            out.append(_finding(
+                "window-mismatch", where,
+                f"ag round {k}: recv window {recv} is not the send "
+                f"window shifted by skip {s}"))
+        moved = []
+        for r in range(p):
+            blocks = {(r + i) % p for i in win}
+            miss = blocks - have[r]
+            if miss:
+                out.append(_finding(
+                    "send-before-receive", where,
+                    f"ag round {k}: rank {r} sends blocks {sorted(miss)} "
+                    f"it does not hold yet"))
+            moved.append((r, (r - s) % p, blocks))
+        for src, dst, blocks in moved:
+            dup = blocks & have[dst]
+            if dup:
+                out.append(_finding(
+                    "duplicate-delivery", where,
+                    f"ag round {k}: rank {dst} receives blocks "
+                    f"{sorted(dup)} it already holds (every rank must "
+                    f"receive every block exactly once)"))
+            have[dst] |= blocks
+    full = set(range(p))
+    for r in range(p):
+        if have[r] != full:
+            miss = sorted(full - have[r])
+            out.append(_finding(
+                "incomplete-broadcast", where,
+                f"rank {r} ends holding {len(have[r])}/{p} blocks; "
+                f"missing {miss[:8]}"))
     return out
 
 
@@ -458,6 +522,10 @@ def verify_plan(pl: CollectivePlan) -> list[Finding]:
         return []
     out = _check_rounds(pl, where)
     out += _check_partition(pl, where)
+    if pl.spec.kind == "broadcast":
+        # Broadcast runs the AG phase only: the delivery claim is the
+        # block-level exactly-once replay, not the RS fold simulation.
+        return out + _check_broadcast(pl, where)
     out += _check_delivery(pl, where)
     if pl.layout is not None:
         out += _check_nonuniform(pl, where)
@@ -507,6 +575,8 @@ def registry_specs(p: int) -> list[CollectiveSpec]:
         specs.append(CollectiveSpec(counts=counts))
     for counts in alltoallv_counts_cases(p).values():
         specs.append(CollectiveSpec(counts=counts))
+    for sched in OPTIMAL_SCHEDULES:
+        specs.append(CollectiveSpec(kind="broadcast", schedule=sched))
     for kind in _BASELINE_KINDS:
         specs.append(CollectiveSpec(kind=kind))
     return specs

@@ -46,7 +46,7 @@ from jax import lax
 from repro import compat
 from .plan import BlockLayout, _fwd_perm, plan, resolve_op
 from .spec import DEFAULT_WIRE_GROUP as DEFAULT_GROUP
-from .spec import WIRE_DTYPES, CollectiveSpec  # noqa: F401  (re-exports)
+from .spec import WIRE_DTYPES, CollectiveSpec, as_spec  # noqa: F401  (re-exports)
 
 Array = jax.Array
 ReduceFn = Callable[[Array, Array], Array]
@@ -405,6 +405,17 @@ def alltoall(x, axis_name, impl=None, *,
     p×p ``counts`` matrix runs the ragged alltoallv table backend."""
     return _dispatch(x, axis_name, impl, spec, A2A_IMPLS, "alltoall",
                      "alltoall", kw)
+
+
+def broadcast(x, axis_name, *, spec: CollectiveSpec | None = None, **kw):
+    """All-broadcast dispatcher (Träff, arXiv:2407.18004): every rank's
+    block ``x`` (blk, *rest) reaches every rank — returns (p*blk, *rest)
+    in rank order, bitwise-replicated — in ceil(log2 p) rounds, one
+    ppermute per round.  Bare kwargs (``schedule=``...) build the
+    ``kind="broadcast"`` spec in place; the serving replicas' weight
+    fan-out is the primary consumer."""
+    s = as_spec(spec if spec is not None else "broadcast", **kw)
+    return plan(s, axis_name=axis_name).broadcast(x)
 
 
 def reduce_scatter_pipelined(xs: Sequence[Array], axis_name: str, *,

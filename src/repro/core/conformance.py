@@ -794,6 +794,58 @@ def run_elastic_replan(p: int, verbose: bool = False) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Broadcast plan kind (Träff, arXiv:2407.18004) — all-broadcast
+# ---------------------------------------------------------------------------
+
+BROADCAST_SCHEDULES = OPTIMAL_SCHEDULES + ("fully_connected",)
+
+
+def run_broadcast(p: int, mesh, verbose: bool = False) -> dict:
+    """``kind="broadcast"`` conformance: numeric exactly-once delivery
+    and HLO round counts.
+
+    Per schedule × dtype: every rank contributes a (BLK, 2) block; the
+    gathered (p*BLK, 2) output must hold rank j's block at row-block j,
+    BITWISE, and be replicated across ranks (payloads move uncompressed
+    — weight fan-out must be bit-exact).  The lowered HLO must contain
+    exactly one collective-permute per schedule round — ceil(log2 p)
+    for halving/power2, the broadcast paper's lower bound at any p.
+    """
+    from repro.analysis.verify import assert_verified
+    from repro.core.plan import plan
+    rng = np.random.default_rng(777 + p)
+    n_cases = 0
+    rounds: dict[str, int] = {}
+    for sched in BROADCAST_SCHEDULES:
+        spec = CollectiveSpec(kind="broadcast", schedule=sched)
+        assert_verified(plan(spec, p=p, axis_name=AXIS))
+        fn = lambda v, spec=spec: C.broadcast(v, AXIS, spec=spec)
+        for dtype in ("float32", "int32"):
+            xg = (rng.standard_normal((p, BLK, 2)).astype(dtype)
+                  if dtype == "float32" else
+                  rng.integers(-50, 50, (p, BLK, 2)).astype(dtype))
+            out = np.asarray(_shmap1(mesh, fn)(jnp.asarray(xg)))
+            want = xg.reshape(p * BLK, 2)
+            for r in range(p):
+                np.testing.assert_array_equal(
+                    out[r].reshape(p * BLK, 2), want,
+                    err_msg=f"broadcast[{sched}:{dtype}] p={p} rank {r}")
+            n_cases += 1
+        want_rounds = schedule_rounds(p, sched)
+        if sched in OPTIMAL_SCHEDULES:
+            assert want_rounds == ceil_log2(p)
+        n_cp = count_collective_permutes(mesh, p, fn)
+        assert n_cp == want_rounds, \
+            (f"broadcast[{sched}] p={p}: {n_cp} collective-permutes, "
+             f"want {want_rounds} (one ppermute per round)")
+        rounds[sched] = n_cp
+        if verbose:
+            print(f"ok: broadcast[{sched}] p={p}: bitwise all-delivery, "
+                  f"HLO cp={n_cp} (ceil_log2={ceil_log2(p)})")
+    return {"n_cases": n_cases, "rounds": rounds}
+
+
+# ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
 
@@ -814,11 +866,12 @@ def run_sweep(p: int, mesh=None, verbose: bool = False) -> dict:
                   f"(ceil_log2={ceil_log2(p)})")
     nonuni = run_nonuniform(p, mesh, verbose=verbose)
     a2a = run_alltoall(p, mesh, verbose=verbose)
+    bcast = run_broadcast(p, mesh, verbose=verbose)
     hier = run_hierarchical(p, verbose=verbose)
     elastic = run_elastic_replan(p, verbose=verbose)
     return {"p": p, "n_cases": len(cases), "rounds": rounds,
-            "nonuniform": nonuni, "alltoall": a2a, "hierarchical": hier,
-            "elastic": elastic}
+            "nonuniform": nonuni, "alltoall": a2a, "broadcast": bcast,
+            "hierarchical": hier, "elastic": elastic}
 
 
 def main(argv=None) -> int:
@@ -836,11 +889,13 @@ def main(argv=None) -> int:
                  f"{hier['n_cases']} cases" if hier else "")
     nonuni = report["nonuniform"]
     a2a = report["alltoall"]
+    bcast = report["broadcast"]
     el = report["elastic"]
     print(f"CONFORMANCE OK (p={p}, {report['n_cases']} cases, "
           f"{len(report['rounds'])} schedules, "
           f"{nonuni['n_cases']} non-uniform cases, "
           f"{a2a['n_cases']} alltoall cases, "
+          f"{bcast['n_cases']} broadcast cases, "
           f"{el['n_replans']} elastic re-plans{hier_note})")
     return 0
 

@@ -437,6 +437,42 @@ class CollectivePlan:
         w = self.reduce_scatter(x, compress=compress, decompress=decompress)
         return self.allgather(w)
 
+    def broadcast(self, x: Array) -> Array:
+        """Round-optimal all-broadcast (Träff, arXiv:2407.18004).
+
+        Every rank contributes its block ``x`` of shape ``(blk, *rest)``
+        and receives ``(p*blk, *rest)`` — row-block j is rank j's
+        contribution, bitwise-replicated on all ranks — in
+        ``ceil(log2 p)`` rounds with exactly one ppermute per round.
+        Structurally this is Algorithm 2's allgather phase run standalone
+        (the reversed skip stack, no reduction ⊕), which is precisely the
+        broadcast paper's schedule: with the root's message pre-scattered
+        into p blocks, all-broadcast completes the root broadcast, and
+        the round count meets the ceil(log2 p) lower bound at ANY p
+        (a binomial tree double-delivers at non-powers of two).
+
+        Weight fan-out to serving replicas (``serve/replica.py``) is the
+        consumer: payloads move uncompressed (bit-exact), so
+        ``wire_dtype`` and ``use_fused_kernel`` are rejected at spec
+        construction.
+        """
+        self._check_not_a2a("broadcast")
+        impl = _ASYNC_IMPLS.get((self.backend, "ag"))
+        if impl is None:
+            raise ValueError(
+                f"backend {self.backend!r} does not implement broadcast; "
+                f"use kind='broadcast' (or any uniform circulant backend)")
+        if self.p == 1:
+            return x
+        # ag_begin's _check_async requires an "rs" impl (the paired-phase
+        # protocol); the broadcast backend is AG-only, so open the state
+        # directly and drive the shared round protocol.
+        st = RoundState(plan=self, phase="ag", nrounds=len(self.ag_rounds))
+        impl.begin(self, st, x)
+        while not st.done:
+            self.finish_round(self.start_round(st))
+        return self.ag_end(st)
+
     def alltoall(self, x: Array) -> Array:
         """All-to-all by concatenation (paper §4): Algorithm 1 with ⊕ =
         concat.
@@ -661,6 +697,10 @@ def _resolve_backend(spec: CollectiveSpec) -> str:
     ``_resolve_op``/``_check_wire`` decision tables live on)."""
     if spec.kind in _BASELINE_KINDS:
         return spec.kind
+    if spec.kind == "broadcast":
+        # Spec validation already rejected wire_dtype / use_fused_kernel;
+        # counts= requires kind='circulant', so nothing else to check.
+        return "broadcast"
     if spec.counts_matrix:
         if spec.wire_dtype is not None:
             raise ValueError(
@@ -1134,6 +1174,10 @@ _ASYNC_IMPLS: dict[tuple[str, str], type] = {
     ("fused", "ag"): _AgPlain,
     ("jnp+int8", "ag"): _AgWire,
     ("fused+int8", "ag"): _AgWire,
+    # kind="broadcast" (Träff arXiv:2407.18004) is the AG phase run
+    # standalone: no ("broadcast", "rs") entry exists on purpose — the
+    # plan's only operation is CollectivePlan.broadcast.
+    ("broadcast", "ag"): _AgPlain,
 }
 
 
@@ -1433,6 +1477,7 @@ BACKENDS: dict[str, tuple[str, ...]] = {
     "fused+int8": ("reduce_scatter", "allgather", "allreduce"),
     "nonuniform": ("reduce_scatter", "allgather", "allreduce"),
     "alltoallv": ("alltoall",),
+    "broadcast": ("broadcast",),
     "ring": ("reduce_scatter", "allreduce"),
     "recursive_halving": ("reduce_scatter",),
     "xla": ("reduce_scatter", "allgather", "allreduce", "alltoall"),

@@ -30,7 +30,7 @@ from dataclasses import dataclass, replace
 from typing import Callable
 
 #: implementation families plan() knows how to compile.
-KINDS = ("circulant", "ring", "recursive_halving", "xla")
+KINDS = ("circulant", "broadcast", "ring", "recursive_halving", "xla")
 
 #: wire formats understood by the circulant backends (None = uncompressed).
 WIRE_DTYPES = (None, "int8")
@@ -45,8 +45,10 @@ class CollectiveSpec:
     """Everything needed to *plan* a collective, nothing needed to run it.
 
     kind:             implementation family (``circulant`` is the paper's;
-                      ``ring`` / ``recursive_halving`` / ``xla`` are the
-                      A/B baselines).
+                      ``broadcast`` is Träff's round-optimal all-broadcast
+                      sibling, arXiv:2407.18004; ``ring`` /
+                      ``recursive_halving`` / ``xla`` are the A/B
+                      baselines).
     schedule:         Corollary-2 skip schedule name (circulant only).
     group:            intra-group size for the ``two_level`` schedule.
     op:               reduction ⊕ — a name (``add``/``max``/``min``) or a
@@ -86,6 +88,18 @@ class CollectiveSpec:
                 f"unknown wire_dtype {self.wire_dtype!r}; have {WIRE_DTYPES}")
         if self.wire_group < 1:
             raise ValueError(f"wire_group must be >= 1, got {self.wire_group}")
+        if self.kind == "broadcast":
+            # Broadcast rides the allgather phase only: no reduction op
+            # semantics, no per-rank counts, no wire compression (weights
+            # fan out bit-exact).  Reject knobs that imply otherwise.
+            if self.wire_dtype is not None:
+                raise ValueError(
+                    "kind='broadcast' distributes payloads bit-exactly; "
+                    "wire_dtype compression is not supported")
+            if self.use_fused_kernel:
+                raise ValueError(
+                    "kind='broadcast' has no fold step; the fused round "
+                    "kernel does not apply (use_fused_kernel=True invalid)")
         if self.counts is not None:
             if self.kind != "circulant":
                 raise ValueError(
@@ -144,6 +158,8 @@ class CollectiveSpec:
             if self.counts is not None:
                 tag = "a2av" if self.counts_matrix else "counts"
                 bits.append(f"{tag}={len(self.counts)}")
+        elif self.kind == "broadcast":
+            bits.append(self.schedule)
         return ":".join(bits)
 
 

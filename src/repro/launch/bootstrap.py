@@ -1,4 +1,4 @@
-"""Shared train-session bootstrap — ONE place a runnable session is built.
+"""Shared session bootstrap — ONE place a runnable session is built.
 
 ``launch.train`` (the classic CLI driver), ``launch.elastic`` (the
 rank-failure drill harness) and the tests all need the same sequence:
@@ -9,6 +9,12 @@ the elastic controller has to rebuild a session MID-RUN at a different
 world size (over a device SUBSET — the survivors of a shrink, the
 enlarged set of a grow), so the bootstrap is factored out here and both
 entry points ride it.
+
+``launch.serve`` rides the same config/device/mesh resolution through
+:func:`build_serve_session`, which assembles the inference stack
+instead: a :class:`repro.serve.ReplicaSet` of engines (optionally on an
+expert-parallel mesh for MoE decode) with the initial weights fanned out
+over the ``kind="broadcast"`` plan.
 
 The restore path is world-aware: :func:`restore_session` reads any
 checkpoint and, when it was written at a different data-parallel world,
@@ -71,6 +77,32 @@ class _null_ctx:
         return False
 
 
+def resolve_cfg(arch: str, *, scale_down: bool = False,
+                moe_dispatch: str | None = None):
+    """Arch-name → config, with the scale-down and MoE-dispatch knobs
+    every entry point exposes resolved identically."""
+    cfg = get_config(arch)
+    if scale_down:
+        cfg = cfg.scaled_down()
+    if moe_dispatch is not None:
+        if not cfg.is_moe:
+            raise ValueError(
+                f"moe_dispatch given but {arch} is not a MoE arch")
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, moe_dispatch=moe_dispatch)
+    return cfg
+
+
+def require_devices(n: int, what: str):
+    """First ``n`` runtime devices, with the XLA_FLAGS hint every
+    launcher prints when the host platform is under-provisioned."""
+    if n > jax.device_count():
+        raise RuntimeError(
+            f"{what} needs {n} devices, have {jax.device_count()} "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count={n})")
+    return jax.devices()[:n]
+
+
 def build_session(*, arch: str, scale_down: bool = False, steps: int = 100,
                   seq_len: int = 128, global_batch: int = 8,
                   dp: int = 1, mp: int = 1, mode: str | None = None,
@@ -91,15 +123,8 @@ def build_session(*, arch: str, scale_down: bool = False, steps: int = 100,
     ``init_state=False`` params/opt stay ``None`` (for callers about to
     restore them from a checkpoint anyway).
     """
-    cfg = get_config(arch)
-    if scale_down:
-        cfg = cfg.scaled_down()
-    if moe_dispatch is not None:
-        if not cfg.is_moe:
-            raise ValueError(
-                f"moe_dispatch given but {arch} is not a MoE arch")
-        import dataclasses as _dc
-        cfg = _dc.replace(cfg, moe_dispatch=moe_dispatch)
+    cfg = resolve_cfg(arch, scale_down=scale_down,
+                      moe_dispatch=moe_dispatch)
     mode = mode or ("single" if dp * mp == 1 else "zero1")
     opt_cfg = AdamWConfig(lr=lr, warmup_steps=warmup, total_steps=steps)
     pipe = for_model(cfg, seq_len=seq_len, global_batch=global_batch)
@@ -107,12 +132,7 @@ def build_session(*, arch: str, scale_down: bool = False, steps: int = 100,
     mesh = recipe = None
     if mode != "single":
         if devices is None:
-            if dp * mp > jax.device_count():
-                raise RuntimeError(
-                    f"mesh {dp}x{mp} needs {dp * mp} devices, have "
-                    f"{jax.device_count()} (set XLA_FLAGS="
-                    f"--xla_force_host_platform_device_count={dp * mp})")
-            devices = jax.devices()[:dp * mp]
+            devices = require_devices(dp * mp, f"mesh {dp}x{mp}")
         elif len(devices) != dp * mp:
             raise ValueError(
                 f"mesh {dp}x{mp} needs {dp * mp} devices, got "
@@ -139,6 +159,65 @@ def build_session(*, arch: str, scale_down: bool = False, steps: int = 100,
             sess.opt = jax.device_put(sess.opt,
                                       built.opt_spec(sess.params))
     return sess
+
+
+@dataclass
+class ServeSession:
+    """The serving counterpart of :class:`Session`: config + engines.
+
+    ``replica_set`` holds ``replicas`` data-parallel engines whose
+    weights were fanned out via the broadcast plan (``push_stats``
+    records leaf count / payload bytes / rounds); ``ep_mesh`` is the
+    expert-parallel mesh MoE decode runs on (None otherwise).
+    """
+
+    cfg: Any
+    model: Any
+    params: Any
+    replica_set: Any
+    ep_mesh: Any
+    push_stats: dict
+
+    @property
+    def engine(self):
+        """Engine 0 — the one-replica view (scheduler benches use it)."""
+        return self.replica_set.engines[0]
+
+
+def build_serve_session(*, arch: str, max_len: int,
+                        scale_down: bool = False,
+                        temperature: float = 0.0,
+                        moe_dispatch: str | None = None,
+                        ep_devices: int = 2, replicas: int = 1,
+                        broadcast_schedule: str = "power2",
+                        seed: int = 0) -> ServeSession:
+    """Build the serving stack with the SAME config/device resolution as
+    :func:`build_session` — arch aliasing, scale-down, MoE dispatch
+    override, device-count validation with the XLA_FLAGS hint.
+
+    Weights are initialized once and pushed to every replica through the
+    ``kind="broadcast"`` plan (bitwise-verified fan-out); with
+    ``moe_dispatch="ep"`` each engine decodes inside a shard_map over the
+    expert-parallel mesh, exchanging dispatch buffers via the circulant
+    alltoall plan.
+    """
+    from repro.serve import ReplicaSet
+    cfg = resolve_cfg(arch, scale_down=scale_down,
+                      moe_dispatch=moe_dispatch)
+    ep_mesh = None
+    if moe_dispatch == "ep":
+        devs = require_devices(ep_devices, f"--moe-dispatch ep x{ep_devices}")
+        ep_mesh = meshlib.make_mesh((ep_devices,), (cfg.ep_axis,),
+                                    devices=devs)
+    if replicas > 1:
+        require_devices(replicas, f"{replicas} serving replicas")
+    model = build(cfg, recipe=None, remat=False)
+    params = model.init(jax.random.PRNGKey(seed))
+    rs = ReplicaSet(model, max_len, replicas, temperature=temperature,
+                    schedule=broadcast_schedule, engine_mesh=ep_mesh)
+    stats = rs.push_weights(params)
+    return ServeSession(cfg=cfg, model=model, params=params,
+                        replica_set=rs, ep_mesh=ep_mesh, push_stats=stats)
 
 
 def place_batch(sess: Session, batch: dict) -> dict:

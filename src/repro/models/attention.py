@@ -60,12 +60,22 @@ def causal_mask(s: int, window: int = 0) -> jax.Array:
 
 def decode_mask(s_max: int, pos, window: int = 0) -> jax.Array:
     """Mask over a cache of length s_max for the single query at ``pos``.
-    pos: scalar int array."""
+
+    pos: scalar int array → (1, s_max) mask, or (B,) per-request
+    positions (continuous batching: every slot decodes at its own
+    offset) → (B, 1, 1, 1, s_max), broadcasting against the sdpa score
+    layout (b, k, g, s, t)."""
     k = jnp.arange(s_max)
-    ok = k <= pos
+    if pos.ndim == 0:
+        ok = k <= pos
+        if window > 0:
+            ok &= k > pos - window
+        return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None, :]
+    ok = k[None, :] <= pos[:, None]
     if window > 0:
-        ok &= k > pos - window
-    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None, :]
+        ok &= k[None, :] > (pos - window)[:, None]
+    return jnp.where(ok, 0.0, NEG_INF).astype(
+        jnp.float32)[:, None, None, None, :]
 
 
 # ---------------------------------------------------------------------------
@@ -171,15 +181,28 @@ def project_memory(p, cfg: ModelConfig, memory):
 
 def decode_self_attention(p, cfg: ModelConfig, x, cache: KVCache, pos,
                           window: int = 0, recipe=None):
-    """One-token decode: x (B,1,d), cache (B,S_max,Hkv,dh), pos scalar.
-    Appends projected kv at ``pos`` and attends over the cache."""
+    """One-token decode: x (B,1,d), cache (B,S_max,Hkv,dh).
+
+    ``pos`` is a scalar (the whole batch decodes at one offset — the
+    one-shot ``generate`` path) or a (B,) vector of per-request offsets
+    (continuous batching, where staggered arrivals put every slot at its
+    own position).  Appends projected kv at ``pos`` and attends over the
+    cache; the scalar and vector paths compute identical values when all
+    entries of the vector equal the scalar."""
     positions = pos[None, None] if pos.ndim == 0 else pos[:, None]
     q = _project_q(p, cfg, x, positions)
     k_new, v_new = _project_kv(p, cfg, x, positions)
-    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
-                                            pos, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
-                                            pos, axis=1)
+    if pos.ndim == 0:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), pos, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), pos, axis=1)
+    else:
+        upd = jax.vmap(
+            lambda c, n, q_: jax.lax.dynamic_update_slice_in_dim(
+                c, n, q_, axis=0))
+        k = upd(cache.k, k_new.astype(cache.k.dtype), pos)
+        v = upd(cache.v, v_new.astype(cache.v.dtype), pos)
     mask = decode_mask(k.shape[1], pos, window)
     out = sdpa(q, k, v, mask)
     return jnp.einsum("bthk,hkd->btd", out, p["wo"]), KVCache(k, v)

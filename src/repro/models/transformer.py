@@ -286,7 +286,9 @@ def _decode_layer(lp, cfg, x, layer_cache, pos, is_global: bool, recipe):
 
 
 def decode_step(params, cfg: ModelConfig, cache, token, pos, recipe=None):
-    """token: (B,) int32; pos: scalar int32.  Returns (cache, logits)."""
+    """token: (B,) int32; pos: scalar int32 (whole batch at one offset)
+    or (B,) int32 per-request offsets (continuous batching).  Returns
+    (cache, logits)."""
     x = params["embed"][token][:, None].astype(dtype_of(cfg))
 
     if cfg.family == "hybrid":

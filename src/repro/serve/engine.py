@@ -27,6 +27,29 @@ from repro import compat
 from repro.models import ModelApi
 
 
+def eos_done_mask(nxt, done, eos_id):
+    """Advance per-request done masks for one sampled step.
+
+    ``nxt``: (B,) sampled tokens; ``done``: (B,) bool mask of finished
+    requests; ``eos_id``: None (no early exit), an int, or a (B,)
+    per-request id vector where ``< 0`` means "no eos for this row".
+    Finished rows keep emitting their eos token (so the output stays
+    rectangular) and newly-eos rows join the mask.  Both the one-shot
+    ``generate`` early-exit and the scheduler's eviction path run on
+    this mask.
+    """
+    if eos_id is None:
+        return nxt, done
+    eos = jnp.asarray(eos_id, jnp.int32)
+    if eos.ndim == 0:
+        nxt = jnp.where(done, eos, nxt)
+        done = done | (nxt == eos)
+    else:
+        nxt = jnp.where(done & (eos >= 0), eos, nxt)
+        done = done | ((eos >= 0) & (nxt == eos))
+    return nxt, done
+
+
 def build_serve_fns(model: ModelApi, max_len: int, mesh=None):
     def prefill(params, tokens, extras):
         return model.prefill(params, tokens, max_len, **extras)
@@ -63,8 +86,16 @@ class ServeEngine:
             self.model, self.max_len, mesh=self.mesh)
 
     def generate(self, tokens: np.ndarray, max_new_tokens: int,
-                 extras: dict | None = None, key=None) -> np.ndarray:
-        """tokens: (B, S) prompt batch -> (B, max_new_tokens) completions."""
+                 extras: dict | None = None, key=None,
+                 eos_id: int | None = None) -> np.ndarray:
+        """tokens: (B, S) prompt batch -> (B, max_new_tokens) completions.
+
+        With ``eos_id``, rows that sample it stop consuming decode
+        steps: finished rows are frozen to ``eos_id`` (the output stays
+        (B, max_new_tokens)) and the loop exits as soon as every row's
+        done mask is set — the same mask the continuous-batching
+        scheduler uses to evict finished requests mid-batch.
+        """
         extras = extras or {}
         b, s = tokens.shape
         if s + max_new_tokens > self.max_len:
@@ -73,6 +104,7 @@ class ServeEngine:
                                         extras)
         out = []
         key = key if key is not None else jax.random.PRNGKey(0)
+        done = jnp.zeros((b,), bool)
         for i in range(max_new_tokens):
             if self.temperature > 0:
                 key, sub = jax.random.split(key)
@@ -80,8 +112,12 @@ class ServeEngine:
                                              axis=-1)
             else:
                 nxt = jnp.argmax(logits, axis=-1)
-            nxt = nxt.astype(jnp.int32)
+            nxt, done = eos_done_mask(nxt.astype(jnp.int32), done, eos_id)
             out.append(np.asarray(nxt))
+            if eos_id is not None and bool(done.all()):
+                out.extend([np.full((b,), eos_id, np.int32)]
+                           * (max_new_tokens - i - 1))
+                break
             cache, logits = self.decode_fn(self.params, cache, nxt,
                                            jnp.asarray(s + i, jnp.int32))
         return np.stack(out, axis=1)

@@ -1,0 +1,177 @@
+"""Paged KV cache: fixed-size blocks, per-request block tables, free-list
+allocator.
+
+The one-shot engine sizes a dense ``(L, B, max_len, Hkv, dh)`` cache per
+batch; a serving workload with staggered arrivals wastes most of it
+(every slot reserves ``max_len`` rows forever).  The paged cache keeps
+ONE pool of fixed-size blocks shared by all in-flight requests:
+
+* :class:`BlockAllocator` — host-side free list.  Blocks freed on
+  eviction are reused by later admissions; the allocator tracks the live
+  set so a double-free or an alias of a live block is an error, not a
+  silent corruption (tested in ``tests/test_serve.py``).
+* :class:`PagedKVCache` — the device-side pool ``(L, num_blocks,
+  block_size, Hkv, dh)`` plus pure functional views: ``gather`` builds
+  the dense per-step decode view from a ``(B, blocks_per_req)`` block
+  table (bitwise-identical rows to a dense cache holding the same
+  tokens), ``write_prefill`` scatters one request's prefilled rows into
+  its blocks, ``write_token`` scatters only the single decoded position
+  per slot back into the pool.
+
+Block 0 is the reserved SCRATCH block: inactive scheduler slots point
+their whole table at it, so padded decode lanes write garbage somewhere
+harmless instead of into a live request.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OutOfBlocks(RuntimeError):
+    """Raised when an admission asks for more blocks than are free (the
+    scheduler treats this as "keep the request queued")."""
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` fixed-size cache blocks.
+
+    Block ``scratch`` (default 0) is never handed out — it is the dummy
+    target for inactive batch slots.  ``alloc``/``free`` maintain a live
+    set; freeing a block twice, freeing scratch, or allocating a block
+    that is somehow still live raises instead of aliasing.
+    """
+
+    def __init__(self, num_blocks: int, scratch: int = 0):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (1 scratch), got {num_blocks}")
+        self.num_blocks = num_blocks
+        self.scratch = scratch
+        self._free = [b for b in range(num_blocks) if b != scratch]
+        self._live: set[int] = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        """Take ``n`` blocks off the free list (FIFO reuse order)."""
+        if n > len(self._free):
+            raise OutOfBlocks(f"need {n} blocks, {len(self._free)} free")
+        taken, self._free = self._free[:n], self._free[n:]
+        clash = self._live & set(taken)
+        if clash:
+            raise RuntimeError(f"allocator handed out live blocks {clash}")
+        self._live |= set(taken)
+        return taken
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            if b == self.scratch:
+                raise ValueError("cannot free the scratch block")
+            if b not in self._live:
+                raise ValueError(f"double free of block {b}")
+            self._live.discard(b)
+            self._free.append(b)
+
+
+@dataclass(frozen=True)
+class PagedKVCache:
+    """Device-side block pool; all mutators return a new instance
+    (functional, jit-friendly)."""
+
+    k: jax.Array   # (L, num_blocks, block_size, Hkv, dh)
+    v: jax.Array
+    block_size: int
+
+    @classmethod
+    def create(cls, cfg, num_blocks: int, block_size: int) -> "PagedKVCache":
+        """Zeroed pool sized from the model config (attention KV only —
+        the hybrid family's recurrent mamba state is per-slot constant
+        size and has no paging to do)."""
+        from repro.models.layers import dtype_of
+        if cfg.family == "hybrid":
+            raise NotImplementedError(
+                "paged KV serving does not cover the hybrid family yet "
+                "(its mamba state is unpaged by construction)")
+        shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads,
+                 cfg.head_dim)
+        z = jnp.zeros(shape, dtype_of(cfg))
+        return cls(k=z, v=z, block_size=block_size)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.k.shape[1]
+
+    def gather(self, tables) -> dict:
+        """Dense decode view for one step.
+
+        ``tables``: (B, blocks_per_req) int32 block table — row b lists
+        slot b's blocks in sequence order.  Returns the ``{"k", "v"}``
+        cache dict of shape (L, B, blocks_per_req*block_size, Hkv, dh)
+        the model's ``decode_step`` consumes; rows holding the same
+        tokens as a dense cache are bitwise-identical to it.
+        """
+        tables = jnp.asarray(tables, jnp.int32)
+        b, nb = tables.shape
+
+        def g(s):
+            t = s[:, tables]              # (L, B, nb, bs, Hkv, dh)
+            return t.reshape(s.shape[0], b, nb * self.block_size,
+                             *s.shape[3:])
+        return {"k": g(self.k), "v": g(self.v)}
+
+    def write_prefill(self, blocks: Sequence[int], dense) -> "PagedKVCache":
+        """Scatter ONE prefilled request into its blocks.
+
+        ``dense``: the request's cache dict with batch dim stripped —
+        k/v of shape (L, S_cap, Hkv, dh), S_cap == len(blocks) *
+        block_size (prompt rows written, tail rows zero).
+        """
+        idx = jnp.asarray(list(blocks), jnp.int32)
+        nb = idx.shape[0]
+
+        def w(s, d):
+            d = d.reshape(d.shape[0], nb, self.block_size, *d.shape[2:])
+            return s.at[:, idx].set(d.astype(s.dtype))
+        return replace(self, k=w(self.k, dense["k"]), v=w(self.v, dense["v"]))
+
+    def write_token(self, tables, dense, pos) -> "PagedKVCache":
+        """Scatter each slot's single decoded position back to the pool.
+
+        ``dense``: the (L, B, S_cap, Hkv, dh) cache dict returned by
+        ``decode_step`` on the gathered view; ``pos``: (B,) per-slot
+        positions just written.  Only row ``pos[b]`` of slot b moves —
+        block ``tables[b, pos[b]//bs]``, offset ``pos[b] % bs``.
+        """
+        tables = jnp.asarray(tables, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        bidx = jnp.take_along_axis(
+            tables, (pos // self.block_size)[:, None], axis=1)[:, 0]
+        off = pos % self.block_size
+
+        def w(s, d):
+            vec = jnp.take_along_axis(
+                d, pos[None, :, None, None, None], axis=2)[:, :, 0]
+            return s.at[:, bidx, off].set(vec.astype(s.dtype))
+        return replace(self, k=w(self.k, dense["k"]), v=w(self.v, dense["v"]))
+
+
+def blocks_per_request(max_len: int, block_size: int) -> int:
+    """Block-table length covering ``max_len`` rows; requires exact
+    divisibility so the gathered view's length equals the dense cache's
+    (the bitwise-parity contract with one-shot generation)."""
+    if max_len % block_size:
+        raise ValueError(
+            f"max_len {max_len} must be a multiple of kv_block_size "
+            f"{block_size} (gathered view must match the dense cache)")
+    return max_len // block_size
+
+
+def scratch_table(blocks_per_req: int, scratch: int = 0) -> np.ndarray:
+    """Block table of an INACTIVE slot: every entry the scratch block."""
+    return np.full((blocks_per_req,), scratch, np.int32)

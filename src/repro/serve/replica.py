@@ -1,0 +1,149 @@
+"""Multi-replica data-parallel serving: broadcast-plan weight fan-out.
+
+A serving deployment runs ``replicas`` copies of the model and splits
+request traffic across them.  The one collective such a deployment needs
+at weight-push time is a BROADCAST of the (new) parameters from the rank
+that holds them to every replica — which is exactly the standalone
+allgather phase of the paper's circulant construction, exposed here as
+the ``kind="broadcast"`` plan (Träff, arXiv:2407.18004: all-broadcast in
+ceil(log2 p) rounds for any p, one ppermute per round).
+
+``ReplicaSet.push_weights`` shards every parameter leaf over a
+``(replicas,)`` mesh, runs the broadcast plan so each replica
+reconstructs the full leaf, and asserts the reconstruction is BITWISE
+identical across replicas before handing the params to the per-replica
+engines — the plan moves payload bits untouched (``wire_dtype``
+compression is rejected for this kind at spec level), so any mismatch is
+a routing bug, not rounding.
+
+All communication goes through ``plan()``-backed dispatchers (enforced
+by repo-lint's ``serve-collectives-via-plan`` rule); this module never
+issues a raw ``ppermute``.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import collectives as C
+from repro.core.spec import CollectiveSpec
+from repro.models import ModelApi
+
+from .engine import ServeEngine
+
+REP_AXIS = "rep"
+
+
+class ReplicaSet:
+    """``replicas`` data-parallel :class:`ServeEngine` copies.
+
+    ``devices`` picks the mesh ranks for the weight fan-out (default: the
+    first ``replicas`` runtime devices).  ``engine_mesh`` is forwarded to
+    every engine — the MoE ``ep``-axis mesh for expert-parallel decode —
+    and is independent of the fan-out mesh.  ``schedule`` selects the
+    broadcast plan's schedule ("power2"/"halving" give the optimal
+    ceil(log2 p) rounds at every p).
+    """
+
+    def __init__(self, model: ModelApi, max_len: int, replicas: int, *,
+                 temperature: float = 0.0, schedule: str = "power2",
+                 devices: Sequence[Any] | None = None, engine_mesh=None):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        self.replicas = replicas
+        self.spec = CollectiveSpec(kind="broadcast", schedule=schedule)
+        if replicas > 1:
+            devs = list(devices) if devices is not None \
+                else jax.devices()[:replicas]
+            if len(devs) < replicas:
+                raise ValueError(
+                    f"{replicas} replicas need {replicas} devices, have "
+                    f"{len(devs)} (set xla_force_host_platform_device_count)")
+            self.mesh = compat.make_mesh((replicas,), (REP_AXIS,),
+                                         devices=devs[:replicas])
+        else:
+            self.mesh = None
+        self.engines = [
+            ServeEngine(model=model, params=None, max_len=max_len,
+                        temperature=temperature, mesh=engine_mesh)
+            for _ in range(replicas)]
+
+    # -- weight distribution -----------------------------------------------
+
+    def _fan_out_leaf(self, leaf) -> jax.Array:
+        """One leaf through the broadcast plan: shard rows over the rep
+        mesh, all-broadcast so every rank reconstructs all rows, assert
+        the p reconstructions are bitwise identical, return one."""
+        p = self.replicas
+        arr = jnp.asarray(leaf)
+        flat = arr.ravel()
+        n = flat.size
+        pad = (-n) % p
+        if pad:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((pad,), flat.dtype)])
+        rows = flat.reshape(p, -1)
+
+        fn = compat.shard_map(
+            lambda v: C.broadcast(v, REP_AXIS, spec=self.spec),
+            mesh=self.mesh, in_specs=(P(REP_AXIS),),
+            out_specs=P(REP_AXIS), check_vma=False)
+        stacked = np.asarray(jax.jit(fn)(rows)).reshape(p, p, -1)
+        for r in range(1, p):
+            if not np.array_equal(stacked[r], stacked[0]):
+                raise AssertionError(
+                    f"replica {r} reconstructed different weight bits "
+                    f"than replica 0 (broadcast must be bit-exact)")
+        return jnp.asarray(stacked[0]).reshape(-1)[:n].reshape(
+            arr.shape).astype(arr.dtype)
+
+    def push_weights(self, params) -> dict:
+        """Fan ``params`` out to every replica engine; returns stats
+        (leaf count, payload bytes, broadcast rounds per leaf)."""
+        from repro.core.plan import plan
+        from repro.core.schedule import ceil_log2
+        leaves, treedef = jax.tree.flatten(params)
+        if self.replicas == 1:
+            for e in self.engines:
+                e.params = params
+            return {"n_leaves": len(leaves), "rounds": 0}
+        out = [self._fan_out_leaf(leaf) for leaf in leaves]
+        full = jax.tree.unflatten(treedef, out)
+        for e in self.engines:
+            e.params = full
+        pl = plan(self.spec, p=self.replicas, axis_name=REP_AXIS)
+        rounds = len(pl.ag_rounds)
+        assert self.spec.schedule != "power2" or \
+            rounds == ceil_log2(self.replicas)
+        return {
+            "n_leaves": len(leaves),
+            "bytes": sum(int(np.asarray(v).nbytes) for v in out),
+            "rounds": rounds,
+        }
+
+    # -- request dispatch --------------------------------------------------
+
+    def generate(self, tokens: np.ndarray, max_new_tokens: int,
+                 extras: dict | None = None,
+                 eos_id: int | None = None) -> np.ndarray:
+        """Split a (B, S) prompt batch round-robin across replicas and
+        reassemble the (B, max_new_tokens) completions in order.  Every
+        replica holds identical (bitwise-verified) weights, so the
+        output is independent of the split."""
+        if any(e.params is None for e in self.engines):
+            raise RuntimeError("call push_weights before generate")
+        b = tokens.shape[0]
+        parts = [list(range(r, b, self.replicas))
+                 for r in range(self.replicas)]
+        out = np.zeros((b, max_new_tokens), np.int32)
+        for eng, rows in zip(self.engines, parts):
+            if not rows:
+                continue
+            out[rows] = eng.generate(tokens[rows], max_new_tokens,
+                                     extras=extras, eos_id=eos_id)
+        return out

@@ -185,6 +185,14 @@ def test_spec_validation_errors():
         CollectiveSpec(counts=(0, 0))
     with pytest.raises(ValueError, match="circulant"):
         CollectiveSpec(kind="ring", counts=(1, 2))
+    # broadcast moves payload bits verbatim: no compression, no fold
+    # kernel, no per-rank counts
+    with pytest.raises(ValueError, match="wire_dtype"):
+        CollectiveSpec(kind="broadcast", wire_dtype="int8")
+    with pytest.raises(ValueError, match="fused"):
+        CollectiveSpec(kind="broadcast", use_fused_kernel=True)
+    with pytest.raises(ValueError, match="circulant"):
+        CollectiveSpec(kind="broadcast", counts=(1, 2))
 
 
 def test_plan_validation_errors():
@@ -224,13 +232,54 @@ def test_backend_registry():
     assert _plan(4, counts=(1, 2, 3, 4)).backend == "nonuniform"
     assert _plan(4, counts=((1,) * 4,) * 4).backend == "alltoallv"
     assert _plan(4, kind="ring").backend == "ring"
+    assert _plan(4, kind="broadcast").backend == "broadcast"
     for backend, collectives in BACKENDS.items():
-        # every backend implements reduce_scatter except the
-        # alltoall-only table backend
+        # every backend implements reduce_scatter except the two
+        # single-collective ones (alltoall tables, all-broadcast)
         if backend == "alltoallv":
             assert collectives == ("alltoall",)
+        elif backend == "broadcast":
+            assert collectives == ("broadcast",)
         else:
             assert "reduce_scatter" in collectives
+
+
+# ---------------------------------------------------------------------------
+# Broadcast plans (kind="broadcast": standalone allgather phase,
+# Träff arXiv:2407.18004 — ceil(log2 p) rounds at every p)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", (2, 3, 4, 5, 8))
+@pytest.mark.parametrize("schedule", ("halving", "power2"))
+def test_broadcast_plan_structure(p, schedule):
+    """The broadcast plan's allgather tables deliver every non-resident
+    block exactly once in ceil(log2 p) rounds, and the static verifier's
+    exactly-once replay accepts it."""
+    from repro.analysis import verify
+    pl = _plan(p, kind="broadcast", schedule=schedule)
+    assert pl.backend == "broadcast"
+    assert len(pl.ag_rounds) == ceil_log2(p)
+    assert sorted(i for w in pl.ag_recv_blocks for i in w) == \
+        list(range(1, p))
+    assert verify.assert_verified(pl) is pl
+    # one ppermute per round is what conformance's HLO gate then counts
+    assert sum(1 for _ in pl.ag_rounds) == ceil_log2(p)
+
+
+def test_broadcast_plan_cached_and_labeled():
+    s = CollectiveSpec(kind="broadcast", schedule="power2")
+    assert plan(s, p=5, axis_name=AX) is plan(s, p=5, axis_name=AX)
+    assert s.label == "broadcast:power2"
+
+
+def test_broadcast_rejects_reduce_phases():
+    """A broadcast plan has no fold step: the reduce collectives must
+    refuse rather than silently allgather."""
+    import jax.numpy as jnp
+    pl = _plan(4, kind="broadcast")
+    for meth in ("reduce_scatter", "allreduce"):
+        with pytest.raises((ValueError, KeyError, NotImplementedError)):
+            getattr(pl, meth)(jnp.ones(8))
 
 
 # ---------------------------------------------------------------------------

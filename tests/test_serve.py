@@ -44,3 +44,228 @@ def test_generate_temperature_and_cache_bounds():
         raise AssertionError("expected cache-bound error")
     except ValueError:
         pass
+
+
+# ---------------------------------------------------------------------------
+# eos early exit (per-request done masks)
+# ---------------------------------------------------------------------------
+
+def test_generate_eos_early_exit_freezes_rows():
+    from repro.serve import eos_done_mask
+    cfg = get_config("internlm2-1.8b").scaled_down(n_layers=2, vocab_size=64)
+    model = build(cfg, recipe=None, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model=model, params=params, max_len=32)
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, 64, (2, 8)).astype(np.int32)
+    ref = engine.generate(prompts, 8)
+    # pick row 0's 3rd greedy token as the eos: row 0 stops there, stays
+    # frozen to eos; row 1 is identical until ITS first eos hit (if any)
+    eos = int(ref[0, 2])
+    out = engine.generate(prompts, 8, eos_id=eos)
+    assert out.shape == ref.shape
+    for b in range(2):
+        hits = np.nonzero(ref[b] == eos)[0]
+        stop = int(hits[0]) if hits.size else ref.shape[1] - 1
+        np.testing.assert_array_equal(out[b, :stop + 1], ref[b, :stop + 1])
+        assert (out[b, stop:] == eos).all() or not hits.size
+    # the mask helper itself: vector eos with <0 = "no eos for this row"
+    nxt = jnp.asarray([5, 7, 9], jnp.int32)
+    done = jnp.asarray([False, True, False])
+    n2, d2 = eos_done_mask(nxt, done, jnp.asarray([5, 7, -1], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(d2), [True, True, False])
+    np.testing.assert_array_equal(np.asarray(n2), [5, 7, 9])
+    n3, d3 = eos_done_mask(nxt, done, None)
+    assert n3 is nxt and d3 is done
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: block allocator + gather/write parity with a dense cache
+# ---------------------------------------------------------------------------
+
+def test_block_allocator_reuse_never_aliases():
+    from repro.serve import BlockAllocator, OutOfBlocks
+    import pytest
+    al = BlockAllocator(7)          # block 0 = scratch -> 6 usable
+    a = al.alloc(3)
+    b = al.alloc(2)
+    assert not (set(a) & set(b)) and 0 not in a + b
+    al.free(a)
+    c = al.alloc(4)                 # reuses a's blocks, never b's
+    assert not (set(c) & set(b)) and len(set(c)) == 4
+    with pytest.raises(OutOfBlocks):
+        al.alloc(3)                 # only 2 left
+    with pytest.raises(ValueError, match="double free"):
+        al.free([c[0], c[0]])
+    with pytest.raises(ValueError, match="scratch"):
+        al.free([0])
+
+
+def test_paged_gather_matches_static_cache():
+    """Rows read back through a (shuffled) block table are bitwise the
+    rows the dense prefill cache holds."""
+    from repro.serve import PagedKVCache, blocks_per_request
+    cfg = get_config("internlm2-1.8b").scaled_down(n_layers=2, vocab_size=64)
+    model = build(cfg, recipe=None, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len, bs = 16, 4
+    nb = blocks_per_request(max_len, bs)
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, 64, (2, 9)).astype(np.int32)
+    dense, _ = model.prefill(params, jnp.asarray(toks), max_len)
+    kv = PagedKVCache.create(cfg, 1 + 2 * nb, bs)
+    tables = np.asarray([[3, 1, 4, 2], [7, 5, 8, 6]], np.int32)  # shuffled
+    for b in range(2):
+        kv = kv.write_prefill(tables[b], {"k": dense["k"][:, b],
+                                          "v": dense["v"][:, b]})
+    got = kv.gather(tables)
+    np.testing.assert_array_equal(np.asarray(got["k"]),
+                                  np.asarray(dense["k"]))
+    np.testing.assert_array_equal(np.asarray(got["v"]),
+                                  np.asarray(dense["v"]))
+
+
+def test_paged_write_token_single_position():
+    """write_token moves ONLY row pos[b] of each slot; a second slot at a
+    different offset is untouched."""
+    from repro.serve import PagedKVCache
+    cfg = get_config("internlm2-1.8b").scaled_down(n_layers=1, vocab_size=64)
+    kv = PagedKVCache.create(cfg, 5, 4)
+    tables = np.asarray([[1, 2], [3, 4]], np.int32)
+    pos = np.asarray([5, 2], np.int32)
+    d = {"k": jnp.ones((cfg.n_layers, 2, 8, cfg.n_kv_heads, cfg.head_dim)),
+         "v": jnp.ones((cfg.n_layers, 2, 8, cfg.n_kv_heads, cfg.head_dim))}
+    out = kv.write_token(tables, d, pos).gather(tables)
+    k = np.asarray(out["k"])
+    written = np.nonzero(k.any(axis=(0, 3, 4)))
+    np.testing.assert_array_equal(written[0], [0, 1])
+    np.testing.assert_array_equal(written[1], pos)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: scheduler tokens == one-shot generate, bitwise
+# ---------------------------------------------------------------------------
+
+def _tiny_engine(max_len=24):
+    cfg = get_config("internlm2-1.8b").scaled_down(n_layers=2, vocab_size=64)
+    model = build(cfg, recipe=None, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return ServeEngine(model=model, params=params, max_len=max_len)
+
+
+def test_scheduler_parity_staggered_arrivals():
+    """4 requests through 2 decode slots: admissions and evictions are
+    staggered, freed blocks are reused mid-run, and every request's
+    token stream is BITWISE the one-shot generate() output."""
+    from repro.serve import Scheduler
+    engine = _tiny_engine()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 64, (n,)).astype(np.int32)
+               for n in (8, 5, 11, 7)]
+    maxnew = [4, 6, 3, 5]
+    refs = [engine.generate(p[None], m)[0]
+            for p, m in zip(prompts, maxnew)]
+    sched = Scheduler(engine, max_batch=2, kv_block_size=4)
+    rids = [sched.submit(p, m) for p, m in zip(prompts, maxnew)]
+    got = sched.run()
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(got[rid], ref)
+    # continuous batching actually happened: fewer decode boundaries
+    # than sequential serving would need, and all blocks came back
+    assert sched.n_decode_steps < sum(maxnew)
+    assert sched.alloc.num_free == 2 * sched.blocks_per_req
+    assert not sched.alloc._live
+
+
+def test_scheduler_late_submissions_and_eos():
+    """Requests submitted AFTER decoding started join at the next step
+    boundary; eos-terminated requests evict early and their stream
+    matches one-shot generate with the same eos."""
+    from repro.serve import Scheduler
+    engine = _tiny_engine()
+    rng = np.random.default_rng(3)
+    p0 = rng.integers(0, 64, (6,)).astype(np.int32)
+    p1 = rng.integers(0, 64, (9,)).astype(np.int32)
+    ref0 = engine.generate(p0[None], 6)[0]
+    eos = int(ref0[2])  # a token the greedy stream definitely emits
+    stop = int(np.nonzero(np.asarray(ref0) == eos)[0][0])
+    ref0e = np.asarray(ref0)[:stop + 1]   # up to and incl. FIRST eos hit
+    ref1 = engine.generate(p1[None], 5)[0]
+    sched = Scheduler(engine, max_batch=2, kv_block_size=4)
+    r0 = sched.submit(p0, 6, eos_id=eos)
+    sched.step()
+    sched.step()
+    r1 = sched.submit(p1, 5)       # late arrival, mid-decode
+    got = sched.run()
+    np.testing.assert_array_equal(got[r0], ref0e)
+    assert (np.asarray(ref1) != eos).all()  # r1 never hits r0's eos
+    np.testing.assert_array_equal(got[r1], ref1)
+
+
+def test_scheduler_queue_waits_for_blocks():
+    """With a pool sized for ONE request, the second stays queued until
+    the first finishes and its blocks return to the free list."""
+    from repro.serve import Scheduler
+    engine = _tiny_engine()
+    rng = np.random.default_rng(4)
+    pa = rng.integers(0, 64, (8,)).astype(np.int32)
+    pb = rng.integers(0, 64, (8,)).astype(np.int32)
+    refa = engine.generate(pa[None], 3)[0]
+    refb = engine.generate(pb[None], 3)[0]
+    nb = engine.max_len // 8
+    sched = Scheduler(engine, max_batch=2, kv_block_size=8,
+                      num_blocks=1 + nb)   # room for exactly one request
+    ra = sched.submit(pa, 3)
+    rb = sched.submit(pb, 3)
+    sched.step()
+    assert sched.in_flight == 1 and len(sched.waiting) == 1
+    got = sched.run()
+    np.testing.assert_array_equal(got[ra], refa)
+    np.testing.assert_array_equal(got[rb], refb)
+
+
+# ---------------------------------------------------------------------------
+# Multi-replica weight fan-out over the broadcast plan (fake devices ->
+# subprocess, like the conformance/async checks)
+# ---------------------------------------------------------------------------
+
+def test_replica_broadcast_fanout_subprocess():
+    import os
+    import re
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       env.get("XLA_FLAGS", ""))
+    env["XLA_FLAGS"] = \
+        "--xla_force_host_platform_device_count=3 " + inherited
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = """
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.configs import get_config
+from repro.models import build
+from repro.serve import ReplicaSet
+
+cfg = get_config("internlm2-1.8b").scaled_down(n_layers=2, vocab_size=64)
+model = build(cfg, recipe=None, remat=False)
+params = model.init(jax.random.PRNGKey(0))
+rs = ReplicaSet(model, max_len=24, replicas=3)
+stats = rs.push_weights(params)
+assert stats["rounds"] == 2, stats   # ceil(log2 3)
+# fan-out is bitwise: every engine's every leaf == the source leaf
+src = jax.tree.leaves(params)
+for e in rs.engines:
+    for a, b in zip(src, jax.tree.leaves(e.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+rng = np.random.default_rng(0)
+prompts = rng.integers(0, 64, (5, 8)).astype(np.int32)
+out = rs.generate(prompts, 4)           # round-robin over 3 replicas
+ref = rs.engines[0].generate(prompts, 4)
+np.testing.assert_array_equal(out, ref)
+print("REPLICA-FANOUT-OK")
+"""
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "REPLICA-FANOUT-OK" in r.stdout
